@@ -1,0 +1,57 @@
+"""Render the EXPERIMENTS.md §Roofline table from experiments/dryrun JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--tag single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(tag: str):
+    rows = []
+    for f in sorted(glob.glob(f"experiments/dryrun/*__{tag}.json")):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="single")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.tag)
+    hdr = ("arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+           "dominant", "useful", "peak_GB/dev")
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for d in rows:
+        if d.get("skipped"):
+            cells = (d["arch"], d["shape"], "-", "-", "-", "SKIP", "-", "-")
+        elif "error" in d:
+            cells = (d["arch"], d["shape"], "-", "-", "-", "ERROR", "-", "-")
+        else:
+            r = d["roofline"]
+            peak = d["memory"].get("peak_bytes") or 0
+            arg = d["memory"].get("argument_bytes") or 0
+            cells = (d["arch"], d["shape"], fmt_e(r["t_compute_s"]),
+                     fmt_e(r["t_memory_s"]), fmt_e(r["t_collective_s"]),
+                     r["dominant"], f"{d['useful_flops_ratio']:.2f}",
+                     f"{(peak + arg) / 1e9:.1f}")
+        if args.md:
+            print("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            print(",".join(str(c) for c in cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""PNPCoin benchmark harness.
+
+The paper has no result tables (position paper) — each benchmark pins one
+of its quantitative *claims* instead:
+
+  hash_flops      §1 fn.1  "20 FLOPS per hash" -> measured FLOP/hash of our
+                           SHA-256 + the implied network-FLOPS arithmetic
+  network_claim   §1       34 EH/s x FLOP/hash vs 200 PFLOP/s Summit
+  block_turnaround §3      "computed ... for a turnaround of minutes"
+  mode_overhead   §3.3     full vs optimal aggregation cost
+  pouw_overhead   §1/§5    training-as-mining vs plain training loop
+                           (the paper's implicit baseline)
+  docking         §4       use-case throughput (pairs/s)
+  verification    §3/DESIGN quorum re-execution cost vs fraction
+  roofline        (e)/(g)  dry-run roofline table from experiments/dryrun
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, n: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6       # us
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_hash_flops():
+    """§1 footnote: 'we consider 20 FLOPS per hash, but this can be 20000
+    on a modern CPU'."""
+    from repro.kernels.ops import sha256_words
+    msg = jnp.zeros((4096, 20), jnp.uint32)           # 80-byte headers
+    lowered = jax.jit(lambda m: sha256_words(m)).lower(msg)
+    cost = lowered.cost_analysis() or {}
+    flops_per_hash = float(cost.get("flops", 0.0)) / msg.shape[0]
+    us = _timeit(jax.jit(lambda m: sha256_words(m)), msg)
+    hashes_per_s = msg.shape[0] / (us * 1e-6)
+    row("hash_flops.flop_per_hash", us / msg.shape[0],
+        f"flops_per_hash={flops_per_hash:.0f} (paper assumes 20..20000)")
+    row("hash_flops.throughput", us,
+        f"hashes_per_s={hashes_per_s:.3g} (1 CPU miner)")
+    return flops_per_hash
+
+
+def bench_network_claim(flops_per_hash: float):
+    """§1: 34e18 hash/s * FLOP/hash vs Summit 200 PFLOP/s = 'four orders
+    of magnitude' / '50000 supercomputers'."""
+    network_hs = 34e18
+    summit = 200e15
+    for label, fph in [("paper_20", 20.0), ("measured", flops_per_hash)]:
+        implied = network_hs * fph
+        ratio = implied / summit
+        row(f"network_claim.{label}", 0.0,
+            f"implied_flops={implied:.3g} summit_ratio={ratio:.3g}")
+
+
+def bench_block_turnaround():
+    """§3: block turnaround for three payload kinds on this 1-CPU miner."""
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.configs.base import InputShape
+    from repro.core.authority import classic_jash
+    from repro.core.executor import run_full
+    from repro.core.jash import Jash, JashMeta, collatz_jash
+    from repro.core.pow_train import PoUWTrainer
+    from repro.train.steps import TrainHparams
+
+    # classic (sha256) block over 2^12 args
+    t0 = time.perf_counter()
+    run_full(Jash("c", classic_jash().fn, JashMeta(arg_bits=12, res_bits=256),
+                  example_args=(jnp.uint32(0),)))
+    row("block_turnaround.classic_4096args",
+        (time.perf_counter() - t0) * 1e6, "full sha256 block")
+
+    # collatz block
+    j = collatz_jash(max_steps=512)
+    j2 = Jash(j.name, j.fn, JashMeta(arg_bits=12, res_bits=32),
+              example_args=j.example_args)
+    t0 = time.perf_counter()
+    run_full(j2)
+    row("block_turnaround.collatz_4096args",
+        (time.perf_counter() - t0) * 1e6, "bounded-while block")
+
+    # training block
+    cfg = reduced(get_config("qwen3-0.6b"))
+    tr = PoUWTrainer(cfg, InputShape("t", 64, 8, "train"),
+                     hp=TrainHparams(), mode="full", n_miners=4)
+    tr.run_block()                                    # compile
+    t0 = time.perf_counter()
+    tr.run_block()
+    row("block_turnaround.train_block",
+        (time.perf_counter() - t0) * 1e6, "PoUW train step + ledger")
+
+
+def bench_mode_overhead():
+    from repro.core.executor import run_full, run_optimal
+    from repro.core.jash import Jash, JashMeta
+
+    def fn(a):
+        return (a * jnp.uint32(2654435761)) ^ jnp.uint32(0xDEADBEEF)
+
+    j = Jash("mix", fn, JashMeta(arg_bits=14, res_bits=32),
+             example_args=(jnp.uint32(0),))
+    t0 = time.perf_counter()
+    run_full(j)
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_optimal(j)
+    t_opt = time.perf_counter() - t0
+    row("mode_overhead.full_16k", t_full * 1e6, "all results + hashes")
+    row("mode_overhead.optimal_16k", t_opt * 1e6,
+        f"argmin only; full/optimal={t_full / max(t_opt, 1e-9):.2f}x")
+
+
+def bench_pouw_overhead():
+    """Training-as-mining vs plain training: ledger/merkle/reward cost."""
+    from repro.configs import get_config, reduced
+    from repro.configs.base import InputShape
+    from repro.core.pow_train import PoUWTrainer
+    from repro.data.pipeline import SyntheticTokenPipeline
+    from repro.train.steps import (TrainHparams, make_train_state,
+                                   make_train_step)
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    shape = InputShape("t", 64, 8, "train")
+    hp = TrainHparams()
+    n = 5
+
+    # plain baseline
+    pipe = SyntheticTokenPipeline(cfg, shape, seed=0)
+    state = make_train_state(cfg, jax.random.key(0))
+    step = jax.jit(make_train_step(cfg, hp))
+    state, _ = step(state, pipe.batch(0))             # compile
+    t0 = time.perf_counter()
+    for i in range(n):
+        state, m = step(state, pipe.batch(i + 1))
+    jax.block_until_ready(m["loss"])
+    t_plain = (time.perf_counter() - t0) / n
+
+    # PoUW chain
+    tr = PoUWTrainer(cfg, shape, hp=hp, mode="full", n_miners=4)
+    tr.run_block()
+    t0 = time.perf_counter()
+    tr.run(n)
+    t_pouw = (time.perf_counter() - t0) / n
+
+    tokens = shape.global_batch * shape.seq_len
+    row("pouw_overhead.plain_step", t_plain * 1e6,
+        f"tokens_per_s={tokens / t_plain:.0f}")
+    row("pouw_overhead.pouw_block", t_pouw * 1e6,
+        f"tokens_per_s={tokens / t_pouw:.0f} "
+        f"overhead={(t_pouw / t_plain - 1) * 100:.1f}%")
+
+
+def bench_docking():
+    """§4 use case: pairs/s through the full-mode pipeline."""
+    from repro.core.executor import run_full
+    from repro.core.jash import Jash, JashMeta
+
+    N_R, N_P = 64, 64
+
+    def matcher(b):
+        r, p = b % jnp.uint32(N_R), b // jnp.uint32(N_R)
+        score = (r * jnp.uint32(2654435761) ^ p * jnp.uint32(40503)) \
+            % jnp.uint32(1000)
+        return jnp.where(score < 200, jnp.uint32(1), jnp.uint32(0))
+
+    j = Jash("dock", matcher,
+             JashMeta(arg_bits=12, res_bits=2, max_arg=N_R * N_P),
+             example_args=(jnp.uint32(0),))
+    t0 = time.perf_counter()
+    fr = run_full(j)
+    dt = time.perf_counter() - t0
+    binds = int((fr.results[:, 0] == 1).sum())
+    row("docking.full_4096_pairs", dt * 1e6,
+        f"pairs_per_s={N_R * N_P / dt:.0f} binds={binds}")
+
+
+def bench_verification():
+    from repro.core.executor import run_full
+    from repro.core.jash import Jash, JashMeta
+    from repro.core.verify import quorum_verify
+
+    def fn(a):
+        return a * jnp.uint32(2654435761)
+
+    j = Jash("v", fn, JashMeta(arg_bits=12, res_bits=32),
+             example_args=(jnp.uint32(0),))
+    t0 = time.perf_counter()
+    fr = run_full(j)
+    t_mine = time.perf_counter() - t0
+    for frac in (0.05, 0.25):
+        t0 = time.perf_counter()
+        rep = quorum_verify(j, fr, fraction=frac)
+        dt = time.perf_counter() - t0
+        row(f"verification.frac_{frac}", dt * 1e6,
+            f"checked={rep.n_checked} verify/mine={dt / max(t_mine, 1e-9):.3f}")
+
+
+def bench_roofline():
+    """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
+    files = sorted(glob.glob("experiments/dryrun/*__single.json"))
+    if not files:
+        row("roofline.missing", 0.0, "run launch/dryrun first")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("skipped"):
+            row(f"roofline.{d['arch']}.{d['shape']}", 0.0,
+                f"SKIP: {d['reason'][:50]}")
+            continue
+        if "error" in d:
+            row(f"roofline.{d['arch']}.{d['shape']}", 0.0, "ERROR")
+            continue
+        r = d["roofline"]
+        t_total = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        row(f"roofline.{d['arch']}.{d['shape']}", t_total * 1e6,
+            f"dom={r['dominant']} tc={r['t_compute_s']:.2e} "
+            f"tm={r['t_memory_s']:.2e} tx={r['t_collective_s']:.2e} "
+            f"useful={d['useful_flops_ratio']:.2f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fph = bench_hash_flops()
+    bench_network_claim(fph)
+    bench_block_turnaround()
+    bench_mode_overhead()
+    bench_pouw_overhead()
+    bench_docking()
+    bench_verification()
+    bench_roofline()
+    print(f"# {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""End-to-end driver (deliverable (b)): train the ~30M-param pnpcoin-demo
+LM for a few hundred PoUW blocks on CPU — one block per training step,
+checkpoint digests chained into the ledger, miners credited.
+
+  PYTHONPATH=src python examples/train_pnp.py [--blocks 300]
+
+(This is a thin veneer over ``repro.launch.train``; see that module for
+the full CLI.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or []
+    main(["--arch", "pnpcoin-demo", "--blocks", "300", "--batch", "16",
+          "--seq", "128", "--mode", "full", "--miners", "8",
+          "--lr", "1e-3", "--ckpt-every", "150",
+          "--out", "experiments/train_pnp", *argv])

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_configs,
+    reduced,
+    register,
+)
+
+__all__ = [
+    "INPUT_SHAPES", "InputShape", "ModelConfig",
+    "get_config", "list_configs", "reduced", "register",
+]

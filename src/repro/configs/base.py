@@ -1,0 +1,245 @@
+"""Config system: model architecture configs + input-shape configs.
+
+Every assigned architecture is one ``configs/<id>.py`` exporting ``CONFIG``.
+``get_config(name)`` resolves from the registry; ``reduced(cfg)`` produces
+the CPU-smoke-test variant (2 layers, d_model<=512, <=4 experts) required
+by the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | encdec | vlm | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qk_norm: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25      # expert capacity = T·k/E · cf
+
+    # --- hybrid (recurrentgemma) ---
+    pattern: Tuple[str, ...] = ()    # repeating layer pattern, e.g. ("rec","rec","attn")
+    lru_width: int = 0               # RG-LRU recurrent width (0 -> d_model)
+    window: int = 0                  # local/sliding attention window (0 -> full)
+
+    # --- ssm (rwkv6) ---
+    wkv_head_dim: int = 64
+
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    n_enc_tokens: int = 1500         # post-conv audio frames (frontend stubbed)
+
+    # --- vlm (llama-3.2-vision) ---
+    cross_attn_every: int = 0        # a cross-attn layer every N layers
+    n_img_tokens: int = 0
+    d_vision: int = 0                # stubbed vision-encoder embedding width
+
+    # --- sharding policy (hillclimb levers; see EXPERIMENTS.md §Perf) ---
+    fsdp: bool = True                # shard params over the data axis
+    fsdp_pod: bool = False           # ... over (pod, data) on multi-pod
+    constrain_kv: bool = False       # force kv activations head-sharded/
+                                     # replicated (stops GSPMD splitting
+                                     # head_dim -> score all-reduce)
+    expert_axis: str = "model"       # expert-parallel mesh axis
+
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    opt_dtype: str = "float32"       # AdamW m/v storage (bf16 = memory lever)
+    remat: bool = True
+    scan_layers: bool = True   # False: unroll (dry-run roofline fidelity —
+                               # XLA cost_analysis counts scan bodies once)
+    rope_theta: float = 1_000_000.0
+    tie_embeddings: bool = False
+
+    # --- bookkeeping ---
+    citation: str = ""
+    notes: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 128 so it shards on any mesh
+        axis we use (16/32).  Logits beyond ``vocab_size`` are masked in
+        the loss (whisper's 51865 is the one odd case)."""
+        return 128 * math.ceil(self.vocab_size / 128)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def n_wkv_heads(self) -> int:
+        return self.d_model // self.wkv_head_dim
+
+    # --- parameter counting (for roofline MODEL_FLOPS = 6·N·D) ----------
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+        per_layer = 0
+        if self.family == "ssm":
+            # rwkv6: time-mix (r,k,v,g,w projections + output) + channel-mix
+            per_layer += 6 * d * d                  # r,k,v,g,w,out
+            per_layer += 2 * d * f                  # channel mix (k: d->f, v: f->d)
+        else:
+            attn = d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+            ffn_dense = 3 * d * f                   # gated (w1, w3, w2)
+            n_attn_layers = self.n_layers
+            n_ffn_layers = self.n_layers
+            if self.family == "hybrid" and self.pattern:
+                n_attn = sum(1 for i in range(self.n_layers)
+                             if self.pattern[i % len(self.pattern)] == "attn")
+                n_rec = self.n_layers - n_attn
+                lru = self.lru_width or d
+                rec_block = 2 * d * lru + lru * d + 2 * lru * lru // 1  # in/out proj + gates
+                per_layer = 0
+                total = n_attn * attn + self.n_layers * ffn_dense + n_rec * rec_block
+                total += self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+                total += self.n_layers * 2 * d
+                return total
+            if self.family == "moe":
+                expert_f = 3 * d * f
+                moe = self.n_experts * expert_f + d * self.n_experts
+                active_moe = self.top_k * expert_f + d * self.n_experts
+                dense_extra = ffn_dense if self.moe_dense_residual else 0
+                use = active_moe if active_only else moe
+                per_layer = attn + use + dense_extra
+            else:
+                per_layer = attn + ffn_dense
+            total = n_attn_layers * 0 + self.n_layers * per_layer
+        if self.family == "ssm":
+            total = self.n_layers * per_layer
+        total += self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        total += self.n_layers * 2 * d               # norms
+        if self.family == "encdec":
+            enc_per = (d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d) + 3 * d * f
+            cross = d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+            total += self.n_enc_layers * enc_per + self.n_layers * cross
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            cross = d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+            total += n_cross * cross + (self.d_vision or d) * d
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",  524_288,    1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    import importlib
+    for mod in (
+        "whisper_medium", "arctic_480b", "stablelm_1_6b", "qwen3_0_6b",
+        "qwen3_8b", "olmoe_1b_7b", "stablelm_3b", "llama_3_2_vision_11b",
+        "recurrentgemma_2b", "rwkv6_7b", "pnpcoin_demo",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke-test) variants — 2 layers, d_model<=512, <=4 experts
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    d = min(cfg.d_model, 256)
+    hd = 32
+    n_heads = max(2, min(cfg.n_heads, d // hd))
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    if n_heads % n_kv:
+        n_kv = 1
+    changes = dict(
+        name=cfg.name + "-smoke",
+        n_layers=2 if not cfg.pattern else len(cfg.pattern),
+        d_model=d,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=hd,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 1024),
+        remat=False,
+        dtype="float32",
+    )
+    if cfg.n_experts:
+        changes["n_experts"] = min(cfg.n_experts, 4)
+        changes["top_k"] = min(cfg.top_k, 2)
+        changes["capacity_factor"] = float(changes["n_experts"])  # drop-free
+    if cfg.lru_width:
+        changes["lru_width"] = d
+    if cfg.window:
+        changes["window"] = 64
+    if cfg.n_enc_layers:
+        changes["n_enc_layers"] = 2
+        changes["n_enc_tokens"] = 16
+    if cfg.cross_attn_every:
+        changes["n_layers"] = 2 * cfg.cross_attn_every  # keep the pattern valid
+        changes["n_img_tokens"] = 8
+        changes["d_vision"] = 64
+    if cfg.family == "ssm":
+        changes["wkv_head_dim"] = 32
+    return dataclasses.replace(cfg, **changes)

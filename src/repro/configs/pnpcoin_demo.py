@@ -1,0 +1,22 @@
+"""pnpcoin-demo — the paper's own end-to-end payload: a ~100M dense LM
+trained for a few hundred steps as proof-of-useful-work (one block per
+step), per PNPCoin §1 ("finding the next optimum in hyperdimensional
+stochastic gradient descent").  Runs on CPU in the examples.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pnpcoin-demo",
+    family="dense",
+    n_layers=8,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=8192,
+    qk_norm=True,
+    tie_embeddings=True,
+    remat=False,
+    dtype="float32",
+    citation="this work (PNPCoin reproduction demo payload)",
+))

@@ -1,0 +1,9 @@
+from repro.core.authority import RuntimeAuthority, classic_jash  # noqa: F401
+from repro.core.executor import run_full, run_optimal  # noqa: F401
+from repro.core.jash import (  # noqa: F401
+    Jash, JashMeta, JashValidationError, bounded_while, collatz_jash,
+)
+from repro.core.ledger import Block, Ledger, merkle_root  # noqa: F401
+from repro.core.pow_train import PoUWTrainer  # noqa: F401
+from repro.core.rewards import CreditBook, reward_full, reward_optimal  # noqa: F401
+from repro.core.verify import quorum_verify, verify_inclusion  # noqa: F401

@@ -1,0 +1,58 @@
+"""Block-work retargeting (PNPCoin §3.1 granularity + §5 limitation).
+
+Bitcoin retargets the leading-zero difficulty every 2016 blocks so block
+time tracks 10 minutes.  PNPCoin's analogue is the *amount of useful
+work per block*: the RA controls ``meta.max_arg`` ("to achieve greater
+granularity than powers of two", §3.1), so the controller adjusts the
+published arg-space size to hit a target block time — directly
+addressing the paper's own §5 limitation that "jash functions are
+computed on a one-per-block basis, putting an inconvenient limitation on
+the runtime of each node".
+
+A standard EMA controller: work_{t+1} = work_t * clip(target/ema, 1/4, 4)
+(Bitcoin clips retargets to 4x as well).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class DifficultyController:
+    target_block_s: float
+    min_work: int = 1
+    max_work: int = 1 << 32
+    ema_alpha: float = 0.3
+    max_retarget: float = 4.0
+
+    _ema: Optional[float] = None
+
+    def observe(self, block_time_s: float) -> None:
+        if self._ema is None:
+            self._ema = block_time_s
+        else:
+            self._ema = (1 - self.ema_alpha) * self._ema + \
+                self.ema_alpha * block_time_s
+
+    @property
+    def ema_block_s(self) -> Optional[float]:
+        return self._ema
+
+    def next_work(self, current_work: int) -> int:
+        """args-per-block for the next publication."""
+        if self._ema is None or self._ema <= 0:
+            return current_work
+        ratio = self.target_block_s / self._ema
+        ratio = min(max(ratio, 1.0 / self.max_retarget), self.max_retarget)
+        work = int(current_work * ratio)
+        return min(max(work, self.min_work), self.max_work)
+
+
+def work_for_runtime(runtime_mean_s: float, target_block_s: float,
+                     n_miners: int, *, safety: float = 0.9) -> int:
+    """Initial work sizing from the RA's §3.3 runtime estimate: how many
+    args fit the target block time across the miner fleet."""
+    if runtime_mean_s <= 0:
+        return 1
+    return max(1, int(n_miners * target_block_s * safety / runtime_mean_s))

@@ -1,0 +1,79 @@
+"""Optimal-mode training: population search over parameter perturbations.
+
+PNPCoin §1 names "finding the next optimum in hyperdimensional stochastic
+gradient descent" as a target workload and §3.3's **optimal** mode accepts
+the lowest result.  The natural fit is evolution-strategies-style
+candidate search: every miner perturbs the params with its own seed,
+evaluates the loss on the block's batch, and the chain accepts the lowest
+loss — the winning perturbation IS the block's "res".
+
+Memory discipline: candidates are never materialized as a population;
+noise is regenerated from ``fold_in(key, candidate_id)`` (deterministic —
+a verifier can re-derive any candidate bit-exactly, which is what makes
+this auditable like any other jash).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def perturb(params: Any, key, sigma: float, antithetic_sign: float = 1.0):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    new = [
+        (l + antithetic_sign * sigma *
+         jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype))
+        if jnp.issubdtype(l.dtype, jnp.floating) else l
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def es_block(eval_fn: Callable[[Any, Dict], jax.Array], params: Any,
+             batch: Dict, key, *, pop_size: int, sigma: float
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate ``pop_size`` candidates (antithetic pairs); returns
+    (losses (pop,), best_idx).  Candidate i's params are reproducible via
+    ``candidate_params(params, key, i, sigma)``."""
+
+    def eval_candidate(i):
+        cand = candidate_params(params, key, i, sigma)
+        return eval_fn(cand, batch)
+
+    losses = jax.lax.map(eval_candidate, jnp.arange(pop_size))
+    return losses, jnp.argmin(losses)
+
+
+def candidate_params(params: Any, key, i, sigma: float):
+    """Candidate 0 is the UNPERTURBED params (a miner may re-submit the
+    incumbent optimum, so the chain never regresses on the block batch);
+    candidates 2j+1 / 2j+2 are the antithetic pair +/- sigma*noise_j."""
+    sub = jax.random.fold_in(key, jnp.maximum(i - 1, 0) // 2)
+    sign = jnp.where(i % 2 == 1, 1.0, -1.0)
+    eff_sigma = jnp.where(i == 0, 0.0, sigma)
+    return perturb(params, sub, eff_sigma * sign, 1.0)
+
+
+def es_update(params: Any, key, losses: jax.Array, *, sigma: float,
+              lr: float):
+    """Beyond-hillclimb option: the standard ES gradient estimate from all
+    submitted results (the chain already paid for them — full-mode reuse)."""
+    pop = losses.shape[0]
+    adv = (losses - losses.mean()) / (losses.std() + 1e-8)
+
+    # theta <- theta - lr * (1/pop) sum_i adv_i * eps_i   (eps = unit noise,
+    # regenerated; adv normalized so the step scale is ~lr/sqrt(pop))
+    def body(i, acc):
+        cand = candidate_params(params, key, i, 1.0)   # unit noise
+        return jax.tree.map(
+            lambda a, c, p: a - (lr / pop) * adv[i] *
+            (c.astype(jnp.float32) - p.astype(jnp.float32)),
+            acc, cand, params)
+
+    acc = jax.lax.fori_loop(0, pop, body,
+                            jax.tree.map(lambda p: p.astype(jnp.float32),
+                                         params))
+    return jax.tree.map(lambda a, p: a.astype(p.dtype), acc, params)

@@ -1,0 +1,140 @@
+"""Execution engines: how miners (mesh devices) evaluate a published jash
+over its argument space (PNPCoin §3.3).
+
+**full** mode — "Full execution returns the output of every valid input":
+the arg space [0, n_args) is sharded over the mesh's miner axis with
+``shard_map``; each miner vmaps the jash over its slice and emits
+(results, sha256(arg || res)) — the paper's "concatenated plain results
+with hashed results".  The hash uses the batched SHA-256 kernel.
+
+**optimal** mode — "accepts the lowest res, the result with most leading
+zeros": each miner reduces its slice to a (res, arg) minimum and a global
+all-reduce-min picks the block winner.
+
+On the CPU container the same code runs on a 1-device mesh; on the
+production mesh the miner axis is ("data",) (256 miners/pod) or
+("pod", "data") (512).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.jash import Jash
+from repro.kernels.ops import sha256_words
+
+
+@dataclasses.dataclass(frozen=True)
+class FullResult:
+    args: np.ndarray           # (n,) uint32
+    results: np.ndarray        # (n, res_words) uint32
+    hashes: np.ndarray         # (n, 8) uint32  sha256(arg || res)
+    miner_of: np.ndarray       # (n,) int32 — first submitter per arg
+    merkle_leaves: Tuple[bytes, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimalResult:
+    best_arg: int
+    best_res: np.ndarray       # (res_words,) uint32
+    winner: int                # miner id
+    n_evaluated: int
+
+
+def _as_words(res) -> jax.Array:
+    """Canonicalize a jash result pytree to a flat uint32 vector."""
+    leaves = jax.tree.leaves(res)
+    flat = [jnp.atleast_1d(x).astype(jnp.uint32).reshape(-1) for x in leaves]
+    return jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+
+
+def _miner_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def run_full(jash: Jash, *, mesh: Optional[Mesh] = None,
+             block_reward: float = 1.0) -> FullResult:
+    """Evaluate every valid arg (§3.3 full mode)."""
+    n = jash.meta.n_args
+    axes = _miner_axes(mesh)
+    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    n_pad = -n % n_miners
+    args = jnp.arange(n + n_pad, dtype=jnp.uint32)
+
+    def eval_all(args_slice):
+        res = jax.vmap(lambda a: _as_words(jash.fn(a)))(args_slice)
+        msg = jnp.concatenate([args_slice[:, None], res], axis=1)
+        hashes = sha256_words(msg)
+        return res, hashes
+
+    if mesh is not None and axes:
+        spec = P(axes)
+        fn = shard_map(eval_all, mesh=mesh, in_specs=(spec,),
+                       out_specs=(spec, spec))
+        with mesh:
+            res, hashes = jax.jit(fn)(args)
+    else:
+        res, hashes = jax.jit(eval_all)(args)
+
+    res = np.asarray(res)[:n]
+    hashes = np.asarray(hashes)[:n]
+    args_np = np.asarray(args)[:n]
+    miner_of = (args_np % n_miners).astype(np.int32) if n_miners > 1 \
+        else np.zeros(n, np.int32)
+    leaves = tuple(
+        args_np[i].tobytes() + res[i].tobytes() for i in range(n))
+    return FullResult(args=args_np, results=res, hashes=hashes,
+                      miner_of=miner_of, merkle_leaves=leaves)
+
+
+def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None) -> OptimalResult:
+    """Distributed argmin of res (§3.3 optimal mode).  The res ordering is
+    lexicographic on words == 'most leading zeros' for hash-like outputs."""
+    n = jash.meta.n_args
+    axes = _miner_axes(mesh)
+    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    n_pad = -n % n_miners
+    args = jnp.arange(n + n_pad, dtype=jnp.uint32)
+    valid = args < n
+
+    MAXW = jnp.uint32(0xFFFFFFFF)
+
+    def eval_and_reduce(args_slice, valid_slice):
+        res = jax.vmap(lambda a: _as_words(jash.fn(a)))(args_slice)
+        w0 = jnp.where(valid_slice, res[:, 0], MAXW)
+        w1 = res[:, 1] if res.shape[1] > 1 else jnp.zeros_like(res[:, 0])
+        w1 = jnp.where(valid_slice, w1, MAXW)
+        # lexicographic min on (w0, w1) == "most leading zeros" (§3.3)
+        i = jnp.lexsort((w1, w0))[0]
+        return w0[i], w1[i], args_slice[i], res[i]
+
+    if mesh is not None and axes:
+        def sharded(args_all, valid_all):
+            w0, w1, arg, res = eval_and_reduce(args_all, valid_all)
+            w0g = jax.lax.all_gather(w0, axes)
+            w1g = jax.lax.all_gather(w1, axes)
+            argsg = jax.lax.all_gather(arg, axes)
+            resg = jax.lax.all_gather(res, axes)
+            best = jnp.lexsort((w1g, w0g))[0]
+            return argsg[best], resg[best], best.astype(jnp.int32)
+
+        fn = shard_map(sharded, mesh=mesh, in_specs=(P(axes), P(axes)),
+                       out_specs=(P(), P(), P()))
+        with mesh:
+            best_arg, best_res, winner = jax.jit(fn)(args, valid)
+    else:
+        _, _, best_arg, best_res = jax.jit(eval_and_reduce)(args, valid)
+        winner = 0
+
+    return OptimalResult(best_arg=int(best_arg),
+                         best_res=np.atleast_1d(np.asarray(best_res)),
+                         winner=int(winner), n_evaluated=n)

@@ -1,0 +1,179 @@
+"""The *jash* (PNPCoin §3): an arbitrary deterministic bounded-complexity
+function replacing Bitcoin's SHA-256 in the proof-of-work step.
+
+Paper requirements -> JAX enforcement:
+
+  1. "compiles with the current gcc"       -> traces + lowers + compiles
+     under ``jax.jit`` (checked by the Runtime Authority at submission).
+  2. "deterministic across runs/archs"     -> pure jaxpr, fixed HLO; no
+     RNG primitives without explicit keys, no callbacks/IO (validated).
+  3. single binary argument of n bits      -> ``arg: uint32[n_words]``
+     (``JashMeta.arg_bits`` + optional ``max_arg`` for sub-power-of-two
+     granularity, §3.1).
+  4. returns an m-bit string               -> ``res: uint32[m_words]``;
+     ordering for **optimal** mode = lexicographic (most leading zeros
+     wins, as in the paper).
+  5. no while loops / recursion, loops run <= s times -> the traced jaxpr
+     is walked recursively and any ``while`` primitive whose trip count
+     is not statically bounded is REJECTED.  ``fori_loop`` with constant
+     bounds and ``scan`` with static length lower to bounded loops and
+     pass — this is the §3.2 bounded-complexity discipline, natively.
+
+``bounded_while`` reproduces the paper's Fig.2->Fig.3 conversion: an
+unbounded ``while`` becomes a ``fori_loop`` with an upper bound ``s`` and
+an early-termination flag ("did not terminate" is a result code the
+researcher handles, §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.extend
+import jax.numpy as jnp
+
+# primitives that would break the paper's determinism/boundedness rules
+_FORBIDDEN = {"while"}
+_IO_FORBIDDEN = {"io_callback", "pure_callback", "python_callback",
+                 "outside_call"}
+
+
+class JashValidationError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class JashMeta:
+    """The meta file accompanying every jash (§3): data checksum, how data
+    is acquired, and the argument bound."""
+    arg_bits: int
+    res_bits: int
+    max_arg: Optional[int] = None          # §3.1 granularity bound
+    data_checksum: str = ""                # sha256 of the data bundle
+    data_acquisition: str = "none"         # "direct" | "p2p" | "none"
+    importance: float = 0.5                # §3.3 prioritization (0..1)
+    description: str = ""
+
+    @property
+    def n_args(self) -> int:
+        upper = 1 << self.arg_bits
+        return min(upper, self.max_arg) if self.max_arg else upper
+
+
+def _check_jaxpr(jaxpr, *, allow_loops_up_to: int = 1 << 20,
+                 path: str = "") -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in _FORBIDDEN:
+            # a `while` with a known trip count lowers from fori_loop/scan;
+            # jax keeps those as scan/fori in the jaxpr, so any surviving
+            # `while` primitive is genuinely unbounded.
+            raise JashValidationError(
+                f"unbounded `while` at {path or '<jash>'} — PNPCoin §3 "
+                "requires every loop to have a static bound (req. 5). "
+                "Use repro.core.jash.bounded_while.")
+        if prim in _IO_FORBIDDEN:
+            raise JashValidationError(
+                f"IO/callback primitive `{prim}` — jash functions must be "
+                "deterministic and must not communicate (§3 req. 2).")
+        if prim == "scan":
+            length = eqn.params.get("length", 0)
+            if length > allow_loops_up_to:
+                raise JashValidationError(
+                    f"scan length {length} exceeds the RA loop bound "
+                    f"s={allow_loops_up_to} (§3 req. 5)")
+        for sub in eqn.params.values():
+            if isinstance(sub, jax.extend.core.ClosedJaxpr):
+                _check_jaxpr(sub.jaxpr, allow_loops_up_to=allow_loops_up_to,
+                             path=f"{path}/{prim}")
+            elif isinstance(sub, (tuple, list)):
+                for s in sub:
+                    if isinstance(s, jax.extend.core.ClosedJaxpr):
+                        _check_jaxpr(s.jaxpr,
+                                     allow_loops_up_to=allow_loops_up_to,
+                                     path=f"{path}/{prim}")
+
+
+@dataclasses.dataclass
+class Jash:
+    """A validated jash: ``fn(arg: uint32[..]) -> uint32[..]`` plus meta.
+
+    ``fn`` may be any JAX-traceable callable over arbitrary pytrees — the
+    training-step jash maps (state, batch) pytrees; the canonical binary
+    form wraps them via the encoder in ``core/executor``."""
+    name: str
+    fn: Callable
+    meta: JashMeta
+    example_args: Tuple = ()
+    _jaxpr_ok: bool = dataclasses.field(default=False, init=False)
+
+    def validate(self, *example_args, loop_bound: int = 1 << 20) -> None:
+        """§3.3 automated review, step 1: trace + bounded-complexity walk."""
+        args = example_args or self.example_args
+        closed = jax.make_jaxpr(self.fn)(*args)
+        _check_jaxpr(closed.jaxpr, allow_loops_up_to=loop_bound)
+        object.__setattr__(self, "_jaxpr_ok", True)
+
+    def lower_compile(self, *example_args):
+        """§3.3 step 2: 'checking whether it compiles'."""
+        args = example_args or self.example_args
+        return jax.jit(self.fn).lower(*args).compile()
+
+    def source_id(self) -> str:
+        """Unique ID under which the jash circulates on the fileshare (§4)."""
+        h = hashlib.sha256()
+        h.update(self.name.encode())
+        h.update(repr(self.meta).encode())
+        return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# §3.2 — conversion of unbounded loops to bounded complexity
+# ---------------------------------------------------------------------------
+
+
+def bounded_while(cond: Callable, body: Callable, init: Any, *,
+                  max_steps: int) -> Tuple[Any, jax.Array]:
+    """The paper's Fig.2 -> Fig.3 transform: run ``body`` while ``cond``
+    holds, for at most ``max_steps`` iterations.  Returns
+    ``(final_state, terminated)`` where ``terminated`` is False if the
+    bound was hit first — the §4 "did not terminate" result code."""
+
+    def step(i, carry):
+        state, done = carry
+        active = jnp.logical_and(jnp.logical_not(done), cond(state))
+        new_state = jax.tree.map(
+            lambda a, b: jnp.where(active, b, a), state, body(state))
+        done = jnp.logical_or(done, jnp.logical_not(cond(new_state)))
+        return new_state, done
+
+    state, done = jax.lax.fori_loop(
+        0, max_steps, step, (init, jnp.bool_(False)))
+    return state, done
+
+
+def collatz_jash(max_steps: int = 1024) -> Jash:
+    """The paper's own worked example (§3.2 Figs. 2-3): bounded Collatz.
+    res = number of steps to reach 1, or max_steps if not terminated."""
+
+    def fn(arg: jax.Array) -> jax.Array:
+        b0 = jnp.maximum(arg.astype(jnp.uint32), 1)
+
+        def cond(s):
+            return s[0] != 1
+
+        def body(s):
+            b, n = s
+            nxt = jnp.where(b % 2 == 0, b // 2, 3 * b + 1)
+            return nxt, n + 1
+
+        (b, n), terminated = bounded_while(
+            cond, body, (b0, jnp.uint32(0)), max_steps=max_steps)
+        return jnp.where(terminated, n, jnp.uint32(max_steps))
+
+    meta = JashMeta(arg_bits=16, res_bits=32,
+                    description="Collatz stopping time (paper Fig. 2-3)")
+    return Jash("collatz", fn, meta,
+                example_args=(jnp.uint32(27),))

@@ -1,0 +1,54 @@
+"""Result verification: the consensus stand-in (DESIGN.md §2).
+
+PNPCoin requires jash determinism "across runs, architectures, and
+compilations" (§3 req. 2) — that is what lets any node audit any miner.
+``quorum_verify`` re-executes a random fraction of the arg space on
+verifier devices and compares digests bit-exactly; one mismatch marks the
+block invalid.  ``verify_inclusion`` checks a single (arg, res) pair
+against the block's Merkle root — the light-client path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import FullResult, _as_words
+from repro.core.jash import Jash
+from repro.core.ledger import merkle_proof, merkle_root, verify_merkle_proof
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyReport:
+    n_checked: int
+    n_mismatch: int
+    ok: bool
+    mismatched_args: tuple = ()
+
+
+def quorum_verify(jash: Jash, full: FullResult, *, fraction: float = 0.05,
+                  seed: int = 0, min_checks: int = 4) -> VerifyReport:
+    """Deterministic re-execution of a random subset of args."""
+    n = len(full.args)
+    rng = np.random.RandomState(seed)
+    k = max(min_checks, int(n * fraction))
+    idx = rng.choice(n, size=min(k, n), replace=False)
+
+    args = jnp.asarray(full.args[idx], jnp.uint32)
+    recomputed = jax.jit(jax.vmap(lambda a: _as_words(jash.fn(a))))(args)
+    recomputed = np.asarray(recomputed)
+
+    mism = [int(full.args[i]) for j, i in enumerate(idx)
+            if not np.array_equal(recomputed[j], full.results[i])]
+    return VerifyReport(n_checked=len(idx), n_mismatch=len(mism),
+                        ok=not mism, mismatched_args=tuple(mism))
+
+
+def verify_inclusion(full: FullResult, arg_index: int, root: str) -> bool:
+    """Merkle inclusion proof for one submitted result."""
+    leaves = list(full.merkle_leaves)
+    proof = merkle_proof(leaves, arg_index)
+    return verify_merkle_proof(leaves[arg_index], proof, root)

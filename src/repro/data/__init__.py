@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTokenPipeline, make_batch_specs  # noqa: F401

@@ -1,0 +1,77 @@
+"""Deterministic synthetic data pipeline.
+
+PNPCoin §3 requires every jash's data bundle to be *checksummed* and its
+acquisition deterministic.  The pipeline mirrors that: batches are a pure
+function of (seed, step) — any miner/verifier reproduces the exact bytes
+from the meta alone, which is what makes result verification (core/verify)
+bit-exact.  The token stream is a Zipf-ish mixture with Markov structure
+so the LM loss actually decreases (unlike uniform noise).
+
+Also provides modality stubs (audio frames / image patch embeddings) per
+the brief's frontend carve-out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokenPipeline:
+    cfg: ModelConfig
+    shape: InputShape
+    seed: int = 0
+
+    def checksum(self) -> str:
+        """The PNPCoin meta checksum for this data bundle."""
+        h = hashlib.sha256(
+            f"{self.cfg.name}|{self.shape.name}|{self.seed}".encode())
+        return h.hexdigest()
+
+    def _key(self, step: int):
+        return jax.random.fold_in(jax.random.key(self.seed), step)
+
+    def batch(self, step: int) -> Dict[str, Any]:
+        """Global batch for ``step`` (pure function of seed+step)."""
+        cfg, shape = self.cfg, self.shape
+        B = shape.global_batch
+        S = shape.seq_len if shape.kind == "train" else (
+            shape.seq_len if shape.kind == "prefill" else 1)
+        key = self._key(step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        v = cfg.vocab_size
+        # Markov-ish stream: next token = (a*tok + drift) % v with noise
+        base = jax.random.randint(k1, (B, 1), 0, v)
+        drift = jax.random.randint(k2, (B, S), 0, 16)
+        toks = jnp.cumsum(drift, axis=1) * 31 + base
+        noise = jax.random.randint(k3, (B, S), 0, v)
+        mix = jax.random.bernoulli(k3, 0.05, (B, S))
+        tokens = jnp.where(mix, noise, jnp.mod(toks, v)).astype(jnp.int32)
+        out: Dict[str, Any] = {"tokens": tokens}
+        if shape.kind == "train":
+            labels = jnp.concatenate(
+                [tokens[:, 1:], jnp.full((B, 1), -1, jnp.int32)], axis=1)
+            out["labels"] = labels
+        if cfg.family == "vlm" and shape.kind != "decode":
+            out["image_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 7),
+                (B, cfg.n_img_tokens, cfg.d_vision), jnp.float32
+            ).astype(jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec" and shape.kind != "decode":
+            out["audio_frames"] = jax.random.normal(
+                jax.random.fold_in(key, 8),
+                (B, cfg.n_enc_tokens, cfg.d_model), jnp.float32
+            ).astype(jnp.dtype(cfg.dtype))
+        return out
+
+
+def make_batch_specs(cfg: ModelConfig, shape: InputShape):
+    from repro.models.model import input_specs
+    return input_specs(cfg, shape)

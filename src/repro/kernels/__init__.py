@@ -1,0 +1,3 @@
+from repro.kernels.ops import (  # noqa: F401
+    decay_scan, flash_attention, sha256_words, wkv6,
+)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: gated linear decay scan  h_t = a_t * h_{t-1} + b_t.
+
+This is the RG-LRU inner recurrence (recurrentgemma).  TPU adaptation:
+the GPU way is a warp-level chunked scan; on TPU we tile the *channel*
+dimension to the 128-lane VPU and keep the sequential loop over time in
+VMEM — sequence chunks stream HBM->VMEM while the carry ``h`` lives in a
+VMEM scratch accumulator.  Grid: (B, C // TILE_C); ops.py chunks long
+sequences and carries h across calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_C = 128
+
+
+def _decay_scan_kernel(a_ref, b_ref, h0_ref, out_ref, hT_ref):
+    """a,b: (1, S, TILE_C); h0: (1, TILE_C); out: (1, S, TILE_C)."""
+    S = a_ref.shape[1]
+
+    def step(t, h):
+        h = a_ref[0, t, :] * h + b_ref[0, t, :]
+        out_ref[0, t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, S, step, h0_ref[0, :])
+    hT_ref[0, :] = h
+
+
+def decay_scan_pallas(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                      interpret: bool = True):
+    """a, b: (B, S, C) float32; h0: (B, C) -> (out (B,S,C), hT (B,C)).
+    C must be a multiple of TILE_C (ops.py pads)."""
+    B, S, C = a.shape
+    assert C % TILE_C == 0, C
+    grid = (B, C // TILE_C)
+    return pl.pallas_call(
+        _decay_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, TILE_C), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, S, TILE_C), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, TILE_C), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, TILE_C), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, TILE_C), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, C), a.dtype),
+            jax.ShapeDtypeStruct((B, C), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, b, h0)

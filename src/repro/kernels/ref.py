@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+- ``sha256_words_ref``: batched SHA-256 over fixed-width uint32-word
+  messages; bit-exact vs hashlib (cross-checked in tests).
+- ``decay_scan_ref``: h_t = a_t * h_{t-1} + b_t (RG-LRU inner scan).
+- ``wkv6_ref``: RWKV-6 recurrence (o_t = r(S + (u*k)v^T); S' = wS + kv^T).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# SHA-256
+# ---------------------------------------------------------------------------
+
+_K = np.array([
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1,
+    0x923f82a4, 0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+    0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786,
+    0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147,
+    0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+    0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a,
+    0x5b9cca4f, 0x682e6ff3, 0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+    0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2], dtype=np.uint32)
+
+_H0 = np.array([
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a,
+    0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19], dtype=np.uint32)
+
+
+def _rotr(x, n):
+    return (x >> np.uint32(n)) | (x << np.uint32(32 - n))
+
+
+def sha256_pad_words(msg: jax.Array) -> jax.Array:
+    """msg: uint32 (N, W) -> padded blocks (N, nb*16) per FIPS 180-4.
+
+    The message is the big-endian serialization of the W words."""
+    N, W = msg.shape
+    bit_len = W * 32
+    nb = (bit_len + 1 + 64 + 511) // 512
+    total = nb * 16
+    pad = jnp.zeros((N, total - W), jnp.uint32)
+    pad = pad.at[:, 0].set(jnp.uint32(0x80000000))
+    pad = pad.at[:, -1].set(jnp.uint32(bit_len & 0xFFFFFFFF))
+    pad = pad.at[:, -2].set(jnp.uint32(bit_len >> 32))
+    return jnp.concatenate([msg.astype(jnp.uint32), pad], axis=1)
+
+
+def sha256_compress(state: jax.Array, block: jax.Array) -> jax.Array:
+    """state: (N, 8) uint32; block: (N, 16) uint32 -> (N, 8)."""
+    w_init = block.transpose(1, 0)                       # (16, N)
+
+    def schedule_step(t, w):
+        # w: (64, N) with first 16 filled; fill w[t]
+        s0 = _rotr(w[t - 15], 7) ^ _rotr(w[t - 15], 18) ^ (w[t - 15] >> 3)
+        s1 = _rotr(w[t - 2], 17) ^ _rotr(w[t - 2], 19) ^ (w[t - 2] >> 10)
+        return w.at[t].set(w[t - 16] + s0 + w[t - 7] + s1)
+
+    N = block.shape[0]
+    w = jnp.zeros((64, N), jnp.uint32).at[:16].set(w_init)
+    w = jax.lax.fori_loop(16, 64, schedule_step, w)
+
+    def round_step(t, s):
+        a, b, c, d, e, f, g, h = s
+        S1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+        ch = (e & f) ^ (~e & g)
+        t1 = h + S1 + ch + jnp.asarray(_K)[t] + w[t]
+        S0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+        maj = (a & b) ^ (a & c) ^ (b & c)
+        t2 = S0 + maj
+        return (t1 + t2, a, b, c, d + t1, e, f, g)
+
+    s = tuple(state[:, i] for i in range(8))
+    s = jax.lax.fori_loop(0, 64, lambda t, s: round_step(t, s), s)
+    out = jnp.stack([state[:, i] + s[i] for i in range(8)], axis=1)
+    return out
+
+
+def sha256_words_ref(msg: jax.Array) -> jax.Array:
+    """msg: uint32 (N, W) -> digest uint32 (N, 8)."""
+    padded = sha256_pad_words(msg)
+    N = msg.shape[0]
+    nb = padded.shape[1] // 16
+    state = jnp.broadcast_to(jnp.asarray(_H0), (N, 8))
+    for b in range(nb):
+        state = sha256_compress(state, padded[:, b * 16:(b + 1) * 16])
+    return state
+
+
+def sha256_words_hashlib(msg: np.ndarray) -> np.ndarray:
+    """Ground-truth oracle via hashlib (numpy, non-jitted)."""
+    import hashlib
+    out = np.zeros((msg.shape[0], 8), np.uint32)
+    for i, row in enumerate(np.asarray(msg, np.uint32)):
+        data = b"".join(int(wd).to_bytes(4, "big") for wd in row)
+        dig = hashlib.sha256(data).digest()
+        out[i] = np.frombuffer(dig, ">u4").astype(np.uint32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decay scan (RG-LRU inner recurrence)
+# ---------------------------------------------------------------------------
+
+
+def decay_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t.  a, b: (B, S, C); h0: (B, C)."""
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    if h0 is not None:
+        b32 = b32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 wkv
+# ---------------------------------------------------------------------------
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K); s0: (B,H,K,V).
+    Returns (out (B,S,H,V) float32, s_final (B,H,K,V) float32)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        return wt[..., None] * s + kv, ot
+
+    xs = tuple(x.astype(jnp.float32).transpose(1, 0, 2, 3)
+               for x in (r, k, v, w))
+    sT, out = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return out.transpose(1, 0, 2, 3), sT

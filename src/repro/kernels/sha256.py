@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: batched SHA-256 compression.
+
+PNPCoin keeps SHA-256 in two places — "Classic" back-compat blocks (§3.4)
+and the full-mode result hashing ("concatenated plain results with hashed
+results", §3) — so batched hashing is the one compute hot-spot the paper
+itself names.  TPU adaptation (DESIGN.md §2): instead of an ASIC pipeline,
+we lane-parallelize — each of the 64 rounds is a vector op over a tile of
+``TILE_N`` messages resident in VMEM, so the VPU processes 8x128 lanes of
+independent hashes per cycle.  The sequential 64-round dependency stays in
+registers; the message schedule uses a rolling 16-word window (VMEM
+footprint 16 words/message, not 64).
+
+Grid: (N // TILE_N,).  BlockSpecs keep one (TILE_N, 16*nb) message tile
+and one (TILE_N, 8) digest tile in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _H0, _K
+
+TILE_N = 128
+
+
+def _rotr(x, n):
+    return (x >> jnp.uint32(n)) | (x << jnp.uint32(32 - n))
+
+
+def _sha256_kernel(k_ref, msg_ref, out_ref, *, nb: int):
+    """k_ref: (64,) round constants; msg_ref: (TILE_N, nb*16) uint32."""
+    K = k_ref[:]
+    state = tuple(jnp.full((msg_ref.shape[0],), h, jnp.uint32) for h in _H0)
+
+    for b in range(nb):
+        block = msg_ref[:, b * 16:(b + 1) * 16]          # (T, 16)
+
+        def round_step(t, carry):
+            s, w = carry                                  # w: (T, 16) rolling
+            wt = w[:, 0]
+            a, bb, c, d, e, f, g, h = s
+            S1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+            ch = (e & f) ^ (~e & g)
+            t1 = h + S1 + ch + K[t] + wt
+            S0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+            maj = (a & bb) ^ (a & c) ^ (bb & c)
+            t2 = S0 + maj
+            new_s = (t1 + t2, a, bb, c, d + t1, e, f, g)
+            # extend the schedule: w16 = w0 + s0(w1) + w9 + s1(w14)
+            s0 = _rotr(w[:, 1], 7) ^ _rotr(w[:, 1], 18) ^ (w[:, 1] >> 3)
+            s1 = _rotr(w[:, 14], 17) ^ _rotr(w[:, 14], 19) ^ (w[:, 14] >> 10)
+            w16 = w[:, 0] + s0 + w[:, 9] + s1
+            w = jnp.concatenate([w[:, 1:], w16[:, None]], axis=1)
+            return new_s, w
+
+        s, _ = jax.lax.fori_loop(0, 64, round_step, (state, block))
+        state = tuple(st + si for st, si in zip(state, s))
+
+    out_ref[:, :] = jnp.stack(state, axis=1)
+
+
+def sha256_pallas(padded: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """padded: (N, nb*16) uint32 pre-padded blocks -> (N, 8) digests.
+
+    N must be a multiple of TILE_N (ops.py pads the batch)."""
+    N, W = padded.shape
+    assert W % 16 == 0
+    nb = W // 16
+    assert N % TILE_N == 0, N
+    kernel = functools.partial(_sha256_kernel, nb=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((64,), lambda i: (0,)),
+            pl.BlockSpec((TILE_N, W), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 8), jnp.uint32),
+        interpret=interpret,
+    )(jnp.asarray(_K), padded)

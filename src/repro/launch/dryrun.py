@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init) — hence no `from __future__` in this module.
+
+_DOC = """Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input shape), lower + compile the step function
+on the production mesh with ShapeDtypeStruct inputs (no allocation), then
+emit:
+  - memory_analysis()   (proves the sharded program fits)
+  - cost_analysis()     (HLO FLOPs / bytes for the roofline)
+  - collective bytes    (parsed from the compiled HLO: all-gather /
+                         all-reduce / reduce-scatter / all-to-all /
+                         collective-permute operand+output sizes)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.model import (adapt_for_shape, cache_len_for, input_specs,
+                                supports_shape)
+from repro.sharding.partition import (batch_specs, cache_specs, param_specs,
+                                      use_rules)
+from repro.train.steps import (TrainHparams, make_decode_step,
+                               make_prefill_step, make_train_step)
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output sizes of every collective op in the (SPMD, per-device)
+    compiled HLO.  Returns bytes per collective kind."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(?:-start|-done)?\(", rhs) or \
+                    re.search(rf"= {k}", ls):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in rhs:
+            continue                      # counted at -start
+        # output shape(s) appear before the op name on the rhs
+        head = rhs.split("(")[0]
+        nbytes = 0
+        for dt, dims in shape_re.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["_counts"] = counts               # type: ignore[assignment]
+    return out
+
+
+def build_step(cfg, shape):
+    """Returns (step_fn, example_args (SDS pytrees), in_shardings builder,
+    donate)."""
+    acfg = adapt_for_shape(cfg, shape)
+    if shape.kind == "train":
+        from repro.train.steps import make_train_state
+        step = make_train_step(acfg)
+        state_sds = jax.eval_shape(
+            lambda: make_train_state(acfg, jax.random.key(0)))
+        batch_sds = input_specs(acfg, shape)
+        return step, (state_sds, batch_sds), "train"
+    model_cache_sds = None
+    from repro.models.model import build_model
+    model = build_model(acfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch,
+                                 cache_len_for(acfg, shape)))
+    batch_sds = input_specs(acfg, shape)
+    if shape.kind == "prefill":
+        step = make_prefill_step(acfg, shape)
+    else:
+        step = make_decode_step(acfg, shape)
+    return step, (params_sds, batch_sds, cache_sds), shape.kind
+
+
+def shardings_for(kind, args_sds, mesh, shape, cfg=None):
+    B = shape.global_batch
+    fsdp = cfg.fsdp if cfg is not None else True
+    eax = cfg.expert_axis if cfg is not None else "model"
+    fpod = cfg.fsdp_pod if cfg is not None else False
+    ps = lambda tree: param_specs(tree, mesh, fsdp=fsdp, expert_axis=eax,
+                                  fsdp_pod=fpod)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    if kind == "train":
+        state_sds, batch_sds = args_sds
+        state_spec = jax.tree.map(
+            lambda _: None, state_sds,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # params + opt m/v share param specs; step scalar replicated
+        pspec = ps(state_sds.params)
+        mspec = ps(state_sds.opt.m)
+        vspec = ps(state_sds.opt.v)
+        state_spec = type(state_sds)(params=pspec, opt=type(state_sds.opt)(
+            step=P(), m=mspec, v=vspec))
+        bspec = batch_specs(batch_sds, mesh, B)
+        in_sh = (ns(state_spec), ns(bspec))
+        out_sh = (ns(state_spec), None)
+        donate = (0,)
+    else:
+        params_sds, batch_sds, cache_sds = args_sds
+        pspec = ps(params_sds)
+        bspec = batch_specs(batch_sds, mesh, B)
+        cspec = cache_specs(cache_sds, mesh, B)
+        in_sh = (ns(pspec), ns(bspec), ns(cspec))
+        if kind == "prefill":
+            out_sh = (None, ns(cspec))
+            donate = (2,)
+        else:
+            out_sh = (None, None, ns(cspec))
+            donate = (2,)
+    return in_sh, out_sh, donate
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp: bool = True, verbose: bool = True,
+               unroll: bool = True, overrides: Dict[str, Any] | None = None
+               ) -> Dict[str, Any]:
+    """Two-tier dry-run (DESIGN.md §5):
+
+    A. scanned SPMD lower+compile on the production mesh — proves the
+       sharding lowers, gives memory_analysis and the compiled HLO whose
+       collectives we count with loop-trip multipliers;
+    B. unrolled single-device lowering + lowered.cost_analysis — faithful
+       HLO FLOPs/bytes (scan bodies would be counted once), divided by
+       n_chips.  (Measured vs a full unrolled SPMD compile: flops within
+       2%, bytes within 9%, at ~40x less compile time.)
+    """
+    import dataclasses as _dc
+    from repro.launch.hlo_analysis import collective_bytes as hlo_coll
+    cfg = get_config(arch)
+    if not fsdp:
+        cfg = _dc.replace(cfg, fsdp=False)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # --- tier A: scanned SPMD compile -------------------------------------
+    t0 = time.time()
+    step, args_sds, kind = build_step(cfg, shape)
+    in_sh, out_sh, donate = shardings_for(kind, args_sds, mesh, shape, cfg)
+
+    with use_rules(mesh, {"expert": cfg.expert_axis}):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_coll(hlo)
+    coll_bytes = float(coll["_total_bytes"])
+
+    # --- tier B: unrolled single-device cost analysis ----------------------
+    if unroll:
+        from repro.models.attention import unroll_chunks_for_analysis
+        ucfg = _dc.replace(cfg, scan_layers=False)
+        ustep, uargs, _ = build_step(ucfg, shape)
+        with unroll_chunks_for_analysis():
+            ulowered = jax.jit(ustep).lower(*uargs)
+        ucost = ulowered.cost_analysis() or {}
+        flops = float(ucost.get("flops", 0.0)) / n_chips
+        bytes_accessed = float(ucost.get("bytes accessed", 0.0)) / n_chips
+    else:
+        cost = compiled.cost_analysis() or {}
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    # roofline terms (per-device HLO -> seconds)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll_bytes / ICI_BW
+
+    # model flops: 6·N·D (dense) / 6·N_active·D (moe); decode D=1 token.
+    # enc-dec: the encoder's params see B*n_enc_tokens, not B*seq.
+    n_params = cfg.param_count(active_only=True)
+    factor = 6 if kind == "train" else 2
+    B = shape.global_batch
+    dec_tokens = B * shape.seq_len if kind != "decode" else B
+    if cfg.family == "encdec":
+        d, f, hd = cfg.d_model, cfg.d_ff, cfg.resolved_head_dim
+        enc_per = (cfg.d_model * cfg.n_heads * hd * 2 +
+                   2 * d * cfg.n_kv_heads * hd) + 3 * d * f
+        n_enc = cfg.n_enc_layers * enc_per
+        enc_tokens = B * cfg.n_enc_tokens if kind != "decode" else 0
+        model_flops = factor * ((n_params - n_enc) * dec_tokens +
+                                n_enc * enc_tokens)
+    else:
+        model_flops = factor * n_params * dec_tokens
+
+    result = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": dict(mesh.shape), "n_chips": n_chips,
+        "skipped": False,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_collective,
+            "dominant": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_collective)], key=lambda kv: kv[1])[0],
+        },
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / flops if flops else 0.0,
+    }
+    if verbose:
+        r = result["roofline"]
+        print(f"[dryrun] {arch} x {shape_name} mesh={tuple(mesh.shape.values())} "
+              f"compile={t_compile:.1f}s flops/dev={flops:.3g} "
+              f"bytes/dev={bytes_accessed:.3g} coll/dev={coll_bytes:.3g} "
+              f"dominant={r['dominant']} useful={result['useful_flops_ratio']:.2f}",
+              flush=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--scan", action="store_true",
+                    help="keep scan-over-layers (fast compile; roofline "
+                         "undercounts depth — use for the multi-pod "
+                         "coherence pass)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value (hillclimb lever), "
+                         "e.g. --set constrain_kv=true --set fsdp=false")
+    ap.add_argument("--suffix", default="",
+                    help="output filename suffix for perf experiments")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        elif v.lstrip("-").isdigit():
+            overrides[k] = int(v)
+        else:
+            try:
+                overrides[k] = float(v)
+            except ValueError:
+                overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        for a in list_configs():
+            if a == "pnpcoin-demo":
+                continue
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    failures = []
+    for arch, shape in combos:
+        tag = ("multi" if args.multi_pod else "single") + args.suffix
+        path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
+        try:
+            res = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                             fsdp=not args.no_fsdp, unroll=not args.scan,
+                             overrides=overrides or None)
+        except Exception as e:                       # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape, str(e)[:200]))
+            res = {"arch": arch, "shape": shape, "error": str(e)[:2000]}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+    if failures:
+        print(f"FAILURES ({len(failures)}):")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        sys.exit(1)
+    print("dry-run complete: all combinations lowered and compiled.")
+
+
+if __name__ == "__main__":
+    main()

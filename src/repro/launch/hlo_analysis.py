@@ -1,0 +1,130 @@
+"""Compiled-HLO analysis for the roofline.
+
+XLA's ``cost_analysis`` counts a while-loop (scan) body ONCE, and the
+compiled HLO text likewise shows each body a single time.  This module
+parses the per-device SPMD HLO into its computation graph, reads each
+while op's ``known_trip_count`` backend config, and attributes every
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute) with the product of enclosing loop trip counts — so a
+gradient all-reduce inside a scanned layer stack is counted n_layers
+times, as it executes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Computation:
+    def __init__(self, name: str, is_entry: bool):
+        self.name = name
+        self.is_entry = is_entry
+        self.collectives: List[Tuple[str, int]] = []   # (kind, out_bytes)
+        self.whiles: List[Tuple[str, int]] = []        # (body_name, trips)
+        self.calls: List[str] = []
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation header: `[ENTRY] %name (params...) -> result {`
+        if line.endswith("{") and "->" in line and "=" not in \
+                line.split("->")[0].split("(")[0]:
+            tok = line.lstrip()
+            is_entry = tok.startswith("ENTRY")
+            if is_entry:
+                tok = tok[len("ENTRY"):].lstrip()
+            name = tok.split()[0].split("(")[0].lstrip("%")
+            cur = Computation(name, is_entry)
+            comps[name] = cur
+            continue
+        if cur is None or not s or s == "}":
+            if s == "}":
+                cur = None
+            continue
+        # while ops (check before collectives; a while line can mention
+        # anything in metadata)
+        if re.search(r"=.*\bwhile\(", s) and "body=" in s:
+            bm = re.search(r"body=%?([\w.\-]+)", s)
+            tm = _TRIP_RE.search(s)
+            trips = int(tm.group(1)) if tm else 1
+            if bm:
+                cur.whiles.append((bm.group(1), trips))
+            continue
+        # conditionals / fusions / calls
+        br = _BRANCHES.search(s)
+        if br:
+            for nm in br.group(1).split(","):
+                cur.calls.append(nm.strip().lstrip("%"))
+        for nm in _CALLED.findall(s):
+            cur.calls.append(nm)
+        # collectives (count -start, skip -done)
+        for kind in COLLECTIVES:
+            if f"{kind}-done" in s:
+                break
+            if re.search(rf"\b{re.escape(kind)}(?:-start)?\(", s):
+                head = s.split("=", 1)[1] if "=" in s else s
+                head = re.split(rf"\b{re.escape(kind)}", head)[0]
+                cur.collectives.append((kind, _shape_bytes(head)))
+                break
+    return comps
+
+
+def collective_bytes(hlo: str) -> Dict:
+    """{kind: {"bytes": float, "count": int}} with loop-trip multipliers,
+    plus "_total_bytes"."""
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None and comps:
+        entry = list(comps.values())[0]
+
+    out: Dict = {k: {"bytes": 0.0, "count": 0} for k in COLLECTIVES}
+
+    def walk(comp: Computation, mult: float, depth: int = 0) -> None:
+        if depth > 16:
+            return
+        for kind, nbytes in comp.collectives:
+            out[kind]["bytes"] += nbytes * mult
+            out[kind]["count"] += 1
+        for body_name, trips in comp.whiles:
+            body = comps.get(body_name)
+            if body:
+                walk(body, mult * trips, depth + 1)
+        for name in comp.calls:
+            sub = comps.get(name)
+            if sub:
+                walk(sub, mult, depth + 1)
+
+    if entry is not None:
+        walk(entry, 1.0)
+    out["_total_bytes"] = sum(
+        v["bytes"] for v in out.values() if isinstance(v, dict))
+    return out

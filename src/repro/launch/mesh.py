@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the "pod"
+axis carries only data parallelism (gradient all-reduce over DCI).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (1 CPU device in the container) as a flat
+    miner mesh — used by CPU examples and tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# v5e hardware constants for the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,279 @@
+"""Attention: GQA + qk-norm + rope, query-chunked ("flash-lite") softmax so
+32k-token prefill never materialises an (S, S) score matrix, sliding-window
+banded variant, ring-buffer KV cache for decode, and cross-attention.
+
+All functions are pure; caches are plain dicts of arrays so they ride
+through ``jax.jit`` / ``lax.scan`` unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, dense_init, head_rms_norm,
+                                 stacked_dense_init)
+from repro.sharding.partition import constrain
+
+NEG_INF = -1e9
+
+# analysis mode: fully unroll the q-chunk scan so XLA cost_analysis counts
+# every chunk (scan bodies are counted once) — set by launch/dryrun tier B
+_UNROLL_CHUNKS = contextvars.ContextVar("unroll_chunks", default=False)
+
+
+@contextlib.contextmanager
+def unroll_chunks_for_analysis():
+    tok = _UNROLL_CHUNKS.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL_CHUNKS.reset(tok)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype, qk_norm: bool = False, n_stack: int = 0) -> Dict:
+    ks = jax.random.split(key, 4)
+    mk = (lambda k, i, o: stacked_dense_init(k, n_stack, i, o, dtype)) if n_stack \
+        else (lambda k, i, o: dense_init(k, i, o, dtype))
+    p = {
+        "wq": mk(ks[0], d, n_heads * head_dim),
+        "wk": mk(ks[1], d, n_kv * head_dim),
+        "wv": mk(ks[2], d, n_kv * head_dim),
+        "wo": mk(ks[3], n_heads * head_dim, d),
+    }
+    if qk_norm:
+        shape = (n_stack, head_dim) if n_stack else (head_dim,)
+        p["q_norm"] = jnp.zeros(shape, jnp.float32)
+        p["k_norm"] = jnp.zeros(shape, jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention (query-chunked)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores_out(q, k, v, mask) -> jax.Array:
+    """q: (B,Kv,G,Sq,hd); k/v: (B,Kv,T,hd); mask broadcastable (B,1,1,Sq,T)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bkgqh,bkth->bkgqt", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd)) + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqt,bkth->bkgqh", probs, v)
+
+
+def _split_heads(x, n_kv, group, hd):
+    b, s = x.shape[:2]
+    return x.reshape(b, s, n_kv, group, hd).transpose(0, 2, 3, 1, 4)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int = 0, q_offset: int = 0,
+                      chunk: int = 512) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, T, Kv, hd).  Returns (B, S, H, hd).
+
+    Scans over query chunks; with ``window > 0`` only a (window + chunk)
+    band of K/V is sliced per chunk, so FLOPs and memory are O(S·window)
+    instead of O(S²)."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    chunk = min(chunk, S)
+    while S % chunk:            # non-power-of-two S (whisper's 1500 frames)
+        chunk -= 1
+    n_chunks = S // chunk
+
+    kt = k.transpose(0, 2, 1, 3)                      # (B,Kv,T,hd)
+    vt = v.transpose(0, 2, 1, 3)
+    qs = _split_heads(q, Kv, G, hd)                   # (B,Kv,G,S,hd)
+    qs = qs.reshape(B, Kv, G, n_chunks, chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+
+    banded = window > 0 and T > window + chunk
+    if banded:
+        band = window + chunk
+        pad = jnp.zeros(kt.shape[:2] + (window,) + kt.shape[3:], kt.dtype)
+        kp = jnp.concatenate([pad, kt], axis=2)        # (B,Kv,window+T,hd)
+        vp = jnp.concatenate([pad, vt], axis=2)
+
+    kv_pos = jnp.arange(T)
+
+    def body(carry, xs):
+        i, qc = xs                                     # qc: (B,Kv,G,chunk,hd)
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        if banded:
+            start = i * chunk                          # band covers [i*chunk-window, ...)
+            kc = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=2)
+            abs_kv = start - window + jnp.arange(band)
+            mask = (abs_kv[None, :] >= 0)
+            mask &= (abs_kv[None, :] > q_pos[:, None] - window)
+            if causal:
+                mask &= (abs_kv[None, :] <= q_pos[:, None])
+            out = _gqa_scores_out(qc, kc, vc,
+                                  jnp.where(mask, 0.0, NEG_INF)[None, None, None])
+        else:
+            mask = jnp.ones((chunk, T), bool)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            out = _gqa_scores_out(qc, kt, vt,
+                                  jnp.where(mask, 0.0, NEG_INF)[None, None, None])
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qs),
+                           unroll=True if _UNROLL_CHUNKS.get() else 1)
+    # outs: (n_chunks, B, Kv, G, chunk, hd) -> (B, S, H, hd)
+    outs = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Kv, G, S, hd)
+    return outs.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, n_heads, n_kv, hd, qk_norm, constrain_kv=False):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, hd)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, hd)
+    if constrain_kv:
+        # stop GSPMD splitting head_dim of k/v (which turns the score
+        # contraction into a huge all-reduce): shard heads when divisible,
+        # else force replication of the head dims (EXPERIMENTS.md §Perf)
+        q = constrain(q, "batch", None, "heads", None)
+        k = constrain(k, "batch", None, "heads", None)
+        v = constrain(v, "batch", None, "heads", None)
+    if qk_norm:
+        q = head_rms_norm(q, p["q_norm"])
+        k = head_rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def self_attention(p: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
+                   head_dim: int, rope_theta: float, causal: bool = True,
+                   window: int = 0, qk_norm: bool = False,
+                   constrain_kv: bool = False,
+                   positions: Optional[jax.Array] = None) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           constrain_kv)
+    if positions is None:
+        positions = jnp.arange(S)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return out @ p["wo"]
+
+
+def prefill_self_attention(p: Dict, x: jax.Array, cache: Dict, *,
+                           n_heads: int, n_kv: int, head_dim: int,
+                           rope_theta: float, window: int = 0,
+                           qk_norm: bool = False,
+                           constrain_kv: bool = False
+                           ) -> Tuple[jax.Array, Dict]:
+    """Prefill: run full causal attention AND populate the (ring) cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           constrain_kv)
+    positions = jnp.arange(S)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    out = chunked_attention(q, k, v, causal=True, window=window)
+    out = out.reshape(B, S, n_heads * head_dim) @ p["wo"]
+
+    C = cache["k"].shape[1]
+    if C >= S:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], positions.astype(jnp.int32), 0, axis=0)
+    else:
+        # ring cache smaller than the prompt: keep the last C tokens,
+        # rolled so that slot = pos % C (matches decode's ring update).
+        last_k, last_v = k[:, S - C:], v[:, S - C:]
+        shift = S % C
+        new_k = jnp.roll(last_k, shift, axis=1)
+        new_v = jnp.roll(last_v, shift, axis=1)
+        slot_pos = jnp.roll(jnp.arange(S - C, S, dtype=jnp.int32), shift)
+    return out, {"k": new_k, "v": new_v, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, ring cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+                  dtype) -> Dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def decode_self_attention(p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
+                          *, n_heads: int, n_kv: int, head_dim: int,
+                          rope_theta: float, qk_norm: bool = False,
+                          constrain_kv: bool = False
+                          ) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d); pos: scalar int32 = number of tokens already seen.
+    The cache is a ring buffer of length C (== window for sliding-window
+    archs, == max_seq for full attention)."""
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           constrain_kv)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, posv, rope_theta)
+    k = apply_rope(k, posv, rope_theta)
+
+    slot = jnp.mod(pos, C)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], posv, slot, axis=0)
+
+    G = n_heads // n_kv
+    qs = q.reshape(B, 1, n_kv, G, head_dim).transpose(0, 2, 3, 1, 4)
+    kt = new_k.transpose(0, 2, 1, 3)
+    vt = new_v.transpose(0, 2, 1, 3)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    out = _gqa_scores_out(qs, kt, vt, mask)           # (B,Kv,G,1,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, n_heads * head_dim)
+    return out @ p["wo"], {"k": new_k, "v": new_v, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder / VLM image layers)
+# ---------------------------------------------------------------------------
+
+
+def cross_kv(p: Dict, src: jax.Array, n_kv: int, head_dim: int) -> Dict:
+    B, T, _ = src.shape
+    return {
+        "k": (src @ p["wk"]).reshape(B, T, n_kv, head_dim),
+        "v": (src @ p["wv"]).reshape(B, T, n_kv, head_dim),
+    }
+
+
+def cross_attention(p: Dict, x: jax.Array, kv: Dict, *, n_heads: int,
+                    n_kv: int, head_dim: int) -> jax.Array:
+    """x: (B, S, d) queries; kv precomputed from the source sequence."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    out = chunked_attention(q, kv["k"], kv["v"], causal=False)
+    return out.reshape(B, S, n_heads * head_dim) @ p["wo"]

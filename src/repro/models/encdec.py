@@ -1,0 +1,174 @@
+"""Whisper-style encoder-decoder.
+
+The mel-spectrogram + conv frontend is a STUB per the brief: the batch
+carries precomputed frame embeddings ``audio_frames`` of shape
+(B, n_enc_tokens, d_model).  This module implements the transformer:
+bidirectional encoder, causal decoder with per-layer cross-attention,
+sinusoidal positions (whisper uses no rope).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (init_mlp, mlp, rms_norm, sinusoidal_pos,
+                                 sinusoidal_pos_at)
+from repro.models.transformer import (Model, _dt, _init_attn_layer, _zeros,
+                                      maybe_scan)
+
+Params = Dict[str, Any]
+
+
+class EncDecModel(Model):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+
+    # -- init -----------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 6)
+        p = super().init(keys[0])                     # embed, ln_f, decoder self stack
+        p["enc"] = {
+            "layers": _init_attn_layer(keys[1], cfg, cfg.n_enc_layers),
+            "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        # per-decoder-layer cross attention (stacked over decoder layers)
+        hd = cfg.resolved_head_dim
+        p["cross"] = {
+            "ln": _zeros((cfg.d_model,), cfg.n_layers),
+            "attn": attn.init_attention(keys[2], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, hd, _dt(cfg), False,
+                                        cfg.n_layers),
+        }
+        return p
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, p: Params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = frames.astype(_dt(cfg))
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"])
+            out = attn.self_attention(
+                lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=0.0, causal=False)
+            x = x + out
+            x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+            return x, None
+
+        x, _ = maybe_scan(body, x, p["enc"]["layers"],
+                          scan=cfg.scan_layers, n=cfg.n_enc_layers,
+                          remat=cfg.remat)
+        return rms_norm(x, p["enc"]["ln_f"])
+
+    # -- decoder (train, teacher-forced) ------------------------------------------
+    def forward(self, p: Params, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        enc_out = self.encode(p, batch["audio_frames"])
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        hd = cfg.resolved_head_dim
+
+        def body(x, xs):
+            lp, cp = xs
+            h = rms_norm(x, lp["ln1"])
+            out = attn.self_attention(
+                lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=hd, rope_theta=0.0, causal=True)
+            x = x + out
+            kv = attn.cross_kv(cp["attn"], enc_out, cfg.n_kv_heads, hd)
+            x = x + attn.cross_attention(cp["attn"], rms_norm(x, cp["ln"]), kv,
+                                         n_heads=cfg.n_heads,
+                                         n_kv=cfg.n_kv_heads, head_dim=hd)
+            x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+            return x, None
+
+        x, _ = maybe_scan(body, x, (p["groups"]["l0"],
+                                    {"ln": p["cross"]["ln"],
+                                     "attn": p["cross"]["attn"]}),
+                          scan=cfg.scan_layers, n=cfg.n_layers,
+                          remat=cfg.remat)
+        return self._head(p, x), jnp.float32(0.0)
+
+    # -- cache ---------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int) -> Dict:
+        cfg = self.cfg
+        cache = super().init_cache(batch, cache_len)
+        hd = cfg.resolved_head_dim
+        cache["cross_kv"] = {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.n_enc_tokens,
+                            cfg.n_kv_heads, hd), _dt(cfg)),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.n_enc_tokens,
+                            cfg.n_kv_heads, hd), _dt(cfg)),
+        }
+        return cache
+
+    # -- stateful decoder pass -------------------------------------------------------
+    def _dec_stateful(self, p, x, cache, mode, pos):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def body(x, xs):
+            lp, cp, sc, ckv = xs
+            h = rms_norm(x, lp["ln1"])
+            if mode == "prefill":
+                out, nc = attn.prefill_self_attention(
+                    lp["attn"], h, sc, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=hd, rope_theta=0.0)
+            else:
+                out, nc = attn.decode_self_attention(
+                    lp["attn"], h, sc, pos, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, head_dim=hd, rope_theta=0.0)
+            x = x + out
+            x = x + attn.cross_attention(cp["attn"], rms_norm(x, cp["ln"]), ckv,
+                                         n_heads=cfg.n_heads,
+                                         n_kv=cfg.n_kv_heads, head_dim=hd)
+            x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+            return x, (nc, ckv)
+
+        xs = (p["groups"]["l0"],
+              {"ln": p["cross"]["ln"], "attn": p["cross"]["attn"]},
+              cache["groups"]["l0"], cache["cross_kv"])
+        x, (new_self, new_ckv) = maybe_scan(body, x, xs,
+                                            scan=cfg.scan_layers,
+                                            n=cfg.n_layers)
+        return x, new_self, new_ckv
+
+    def prefill(self, p: Params, batch: Dict, cache: Dict):
+        cfg = self.cfg
+        enc_out = self.encode(p, batch["audio_frames"])
+        hd = cfg.resolved_head_dim
+
+        def make_kv(cp):
+            kv = attn.cross_kv(cp, enc_out, cfg.n_kv_heads, hd)
+            return kv
+        ckv = jax.vmap(lambda cp: make_kv(cp))(p["cross"]["attn"])
+
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        cache = dict(cache)
+        cache["cross_kv"] = ckv
+        x, new_self, new_ckv = self._dec_stateful(p, x, cache, "prefill",
+                                                  cache["pos"])
+        new_cache = {"groups": {"l0": new_self}, "cross_kv": new_ckv,
+                     "pos": cache["pos"] + tokens.shape[1]}
+        return self._head(p, x[:, -1:]), new_cache
+
+    def decode_step(self, p: Params, batch: Dict, cache: Dict):
+        cfg = self.cfg
+        token = batch["tokens"]
+        x = self._embed(p, token)
+        x = x + sinusoidal_pos_at(cache["pos"], cfg.d_model
+                                  ).astype(x.dtype)[None, None]
+        x, new_self, new_ckv = self._dec_stateful(p, x, cache, "decode",
+                                                  cache["pos"])
+        new_cache = {"groups": {"l0": new_self}, "cross_kv": new_ckv,
+                     "pos": cache["pos"] + 1}
+        return self._head(p, x), new_cache

@@ -1,0 +1,149 @@
+"""Shared neural building blocks (pure JAX, pytree params)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def compute_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (n, d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: RMSNorm over the trailing head_dim of (..., n_heads, head_dim)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+        ang = ang[..., None, :]                          # (1, S, 1, hd/2)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs[None, None, :]
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding for a (traced) scalar position -> (d,)."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_pos(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, dtype, n_stack: int = 0) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if n_stack:
+        return {
+            "w1": stacked_dense_init(k1, n_stack, d, f, dtype),
+            "w3": stacked_dense_init(k2, n_stack, d, f, dtype),
+            "w2": stacked_dense_init(k3, n_stack, f, d, dtype),
+        }
+    return {
+        "w1": dense_init(k1, d, f, dtype),
+        "w3": dense_init(k2, d, f, dtype),
+        "w2": dense_init(k3, f, d, dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    from repro.sharding.partition import constrain
+    h = silu(x @ p["w1"]) * (x @ p["w3"])
+    h = constrain(h, "batch", None, "tensor")
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Mean next-token CE; positions with label < 0 are masked.  Handles the
+    padded-vocab case by masking logits >= vocab_size."""
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v_pad != vocab_size:
+        mask = jnp.arange(v_pad) < vocab_size
+        logits = jnp.where(mask[None, None, :], logits, -1e9)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

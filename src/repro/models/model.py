@@ -1,0 +1,83 @@
+"""build_model: config -> Model instance (family dispatch) and
+``input_specs``: ShapeDtypeStruct stand-ins for every model input of an
+(arch, input-shape) pair — the dry-run contract from the brief."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+# sliding-window width used when a *dense* arch runs long_500k (the brief's
+# allowed sub-quadratic variant for full-attention families)
+LONG_CONTEXT_WINDOW = 8192
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecModel
+        return EncDecModel(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLMModel
+        return VLMModel(cfg)
+    from repro.models.transformer import Model
+    return Model(cfg)
+
+
+def adapt_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-run config adaptation: dense/vlm archs get the sliding-window
+    attention variant for the 500k-token decode (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "vlm") \
+            and not cfg.window:
+        return dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family == "encdec":
+        return False, ("enc-dec full-attention decoder with by-design tiny "
+                       "context; skip noted in DESIGN.md §4")
+    return True, ""
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.window:
+        return min(shape.seq_len, cfg.window)
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                model=None) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step function's *data* arguments."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {"tokens": tok(S), "labels": tok(S)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": tok(S)}
+    else:  # decode: one new token
+        batch = {"tokens": tok(1)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_img_tokens, cfg.d_vision), dt)
+    if cfg.family == "encdec":
+        batch["audio_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_enc_tokens, cfg.d_model), dt)
+    if shape.kind == "decode" and cfg.family in ("vlm", "encdec"):
+        # decode consumes the prefill-populated cache; the stub inputs are
+        # only needed at prefill time.
+        batch.pop("image_embeds", None)
+        batch.pop("audio_frames", None)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> Any:
+    """ShapeDtypeStructs for the decode cache (no allocation)."""
+    model = build_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, cache_len_for(cfg, shape)))
+    return cache

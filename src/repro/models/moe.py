@@ -1,0 +1,105 @@
+"""Mixture-of-Experts: top-k router + capacity-based scatter/gather dispatch.
+
+Dispatch is the TPU-idiomatic fixed-capacity permute: tokens are scattered
+into an (E, C, d) buffer (E sharded over the ``model`` axis -> GSPMD
+inserts the expert-parallel all-to-all), experts run as one batched
+einsum, results gather back with router weights.  FLOPs are
+O(T·k·d·f·capacity_factor), not O(T·E·d·f).
+
+Supports the Arctic "dense residual" layout (dense FFN in parallel with
+the MoE, summed) and emits the standard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, silu, stacked_dense_init
+from repro.sharding.partition import constrain
+
+
+def init_moe(key, d: int, f: int, n_experts: int, dtype,
+             n_stack: int = 0) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if n_stack:
+        shape_r = (n_stack, d, n_experts)
+        mk = lambda k, i, o: stacked_dense_init(k, n_stack * n_experts, i, o, dtype)\
+            .reshape(n_stack, n_experts, i, o)
+    else:
+        shape_r = (d, n_experts)
+        mk = lambda k, i, o: stacked_dense_init(k, n_experts, i, o, dtype)
+    return {
+        "router": (jax.random.normal(k1, shape_r, jnp.float32) * 0.02).astype(jnp.float32),
+        "experts": {
+            "w1": mk(k2, d, f),
+            "w3": mk(k3, d, f),
+            "w2": mk(k4, f, d),
+        },
+    }
+
+
+def moe_ffn(p: Dict, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Fixed-capacity dropless-ish dispatch: capacity C = ceil(T·k/E · cf);
+    overflowing tokens are dropped (their combine weight contributes 0).
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, top_k)               # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                    # (E,)
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.float32)      # (T, k, E)
+    ce = onehot.sum(axis=1).mean(axis=0)                       # fraction per expert
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, math.ceil(T * top_k / E * capacity_factor))
+
+    # position of each (token, choice) within its expert's capacity
+    # buffer, by stable sort-based ranking.  (The obvious one-hot+cumsum
+    # lowers to an O((T*k)^2 * E) reduce-window — measured 15x the expert
+    # matmul FLOPs at olmoe train_4k; see EXPERIMENTS.md §Perf P4.)
+    flat_i = gate_i.reshape(-1)                                # (T*k,)
+    Tk = flat_i.shape[0]
+    order = jnp.argsort(flat_i, stable=True)
+    sorted_e = flat_i[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))         # (E,)
+    ranks_sorted = jnp.arange(Tk) - starts[sorted_e]
+    pos = jnp.zeros((Tk,), jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32))
+    keep = pos < C
+    slot = jnp.where(keep, flat_i * C + pos, E * C)            # overflow -> dummy row
+
+    # scatter tokens into (E*C+1, d)
+    xk = jnp.repeat(xt, top_k, axis=0)                         # (T*k, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xk)
+    buf = buf[: E * C].reshape(E, C, d)
+    buf = constrain(buf, "expert", None, None)
+
+    # expert compute (batched over E)
+    w = p["experts"]
+    h = silu(jnp.einsum("ecd,edf->ecf", buf, w["w1"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, w["w3"])
+    h = constrain(h, "expert", None, "tensor")
+    eout = jnp.einsum("ecf,efd->ecd", h, w["w2"])              # (E, C, d)
+    eout = constrain(eout, "expert", None, None)
+
+    # gather back + weighted combine
+    flat_out = jnp.concatenate(
+        [eout.reshape(E * C, d), jnp.zeros((1, d), eout.dtype)], axis=0)
+    tok_out = flat_out[slot].reshape(T, top_k, d)
+    w_keep = gate_w * keep.reshape(T, top_k).astype(gate_w.dtype)
+    out = jnp.einsum("tkd,tk->td", tok_out.astype(jnp.float32), w_keep)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(x_t @ W_a + b_a)            (recurrence gate)
+    i_t = sigmoid(x_t @ W_x + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` (the recurrence is a
+1-D linear scan -> O(log S) depth); decode carries (h, conv_state).
+``kernels/decay_scan.py`` is the Pallas TPU version of the same scan.
+The block wraps the RG-LRU with the Griffin recurrent-block structure:
+input/gate projections, width-4 causal depthwise conv, output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, silu
+
+_C = 8.0
+_CONV_W = 4
+
+
+def init_rglru_block(key, d: int, lru: int, dtype, n_stack: int = 0) -> Dict:
+    ks = jax.random.split(key, 6)
+    def mk(k, i, o):
+        w = dense_init(k, i, o, dtype)
+        return jnp.broadcast_to(w, (n_stack, i, o)).copy() if n_stack else w
+    lam = jnp.linspace(0.9, 0.999, lru)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / _C) - 1.0)     # softplus^-1 so a ~ lam
+    conv = (jax.random.normal(ks[4], (_CONV_W, lru), jnp.float32) * 0.1).astype(dtype)
+    p = {
+        "gate_in": mk(ks[0], d, lru),
+        "lru_in": mk(ks[1], d, lru),
+        "lru_out": mk(ks[2], lru, d),
+        "w_a": mk(ks[3], lru, lru),
+        "w_x": mk(ks[5], lru, lru),
+        "lambda": lam.astype(jnp.float32),
+        "conv": conv,
+    }
+    if n_stack:
+        p["lambda"] = jnp.broadcast_to(p["lambda"], (n_stack, lru)).copy()
+        p["conv"] = jnp.broadcast_to(conv, (n_stack, _CONV_W, lru)).copy()
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, width 4.  x: (B, S, C); state: (B, 3, C)."""
+    B, S, C = x.shape
+    pad = state if state is not None else jnp.zeros((B, _CONV_W - 1, C), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + S] * w[i][None, None, :] for i in range(_CONV_W))
+    return out, xp[:, S:][:, - (_CONV_W - 1):] if S >= _CONV_W - 1 else xp[:, -(_CONV_W - 1):]
+
+
+def rg_lru_scan(xc: jax.Array, p: Dict,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """xc: (B, S, lru) post-conv activations -> (h (B,S,lru), h_last)."""
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["w_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r           # (B,S,lru), <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(xc.dtype), h[:, -1]
+
+
+def rg_lru_step(xc: jax.Array, p: Dict, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step.  xc: (B, 1, lru); h: (B, lru)."""
+    x32 = xc[:, 0].astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["w_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    h_new = a * h.astype(jnp.float32) + \
+        jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return h_new.astype(xc.dtype)[:, None, :], h_new
+
+
+def init_rec_state(batch: int, lru: int, dtype) -> Dict:
+    return {
+        "h": jnp.zeros((batch, lru), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, lru), dtype),
+    }
+
+
+def rglru_block(p: Dict, x: jax.Array, state: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full Griffin recurrent block.  x: (B, S, d).  With ``state`` given,
+    runs in stateful (decode/prefill-carry) mode and returns the new state."""
+    gate = silu(x @ p["gate_in"])                         # (B,S,lru)
+    xin = x @ p["lru_in"]
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv"], conv_state)
+    if state is not None and x.shape[1] == 1:
+        h_seq, h_last = rg_lru_step(xc, p, state["h"])
+    else:
+        h0 = state["h"] if state is not None else None
+        h_seq, h_last = rg_lru_scan(xc, p, h0)
+    out = (gate * h_seq) @ p["lru_out"]
+    new_state = {"h": h_last, "conv": new_conv} if state is not None else None
+    return out, new_state

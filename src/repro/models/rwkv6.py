@@ -1,0 +1,123 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mix with
+matrix-valued per-head state and data-dependent decay.
+
+Per head (K = V = head_dim):
+    o_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)
+    S_t = Diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(xw_t @ W_w + b_w)) in (0, 1) data-dependent decay.
+
+Default implementation is an exact sequential ``lax.scan`` over time
+(state (B, H, K, V) stays O(1) in sequence length — this is why rwkv6
+runs ``long_500k`` natively).  ``kernels/wkv6.py`` is the fused Pallas
+version (grid over B*H, state held in VMEM).  Recurrence FLOPs are ~1.5%
+of the projection FLOPs at d_model=4096, so the scan path is roofline-
+faithful.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, silu
+
+
+def init_rwkv_layer(key, d: int, f: int, head_dim: int, dtype,
+                    n_stack: int = 0) -> Dict:
+    ks = jax.random.split(key, 12)
+    H = d // head_dim
+    def mk(k, i, o):
+        w = dense_init(k, i, o, dtype)
+        return jnp.broadcast_to(w, (n_stack, i, o)).copy() if n_stack else w
+    def vec(val, shape):
+        v = jnp.full(shape, val, jnp.float32)
+        return jnp.broadcast_to(v, (n_stack,) + shape).copy() if n_stack else v
+    return {
+        # time mix
+        "tm_r": mk(ks[0], d, d), "tm_k": mk(ks[1], d, d),
+        "tm_v": mk(ks[2], d, d), "tm_g": mk(ks[3], d, d),
+        "tm_w": mk(ks[4], d, d), "tm_out": mk(ks[5], d, d),
+        "mu": vec(0.5, (5, d)),                 # token-shift lerp for r,k,v,g,w
+        "w_bias": vec(-0.6, (d,)),              # decay bias (w ~ exp(-exp(-0.6)) ~ .58)
+        "u": vec(0.3, (H, head_dim)),           # per-head bonus
+        "ln_x": vec(0.0, (d,)),                 # per-head group-norm gamma
+        # channel mix
+        "cm_k": mk(ks[6], d, f), "cm_v": mk(ks[7], f, d),
+        "cm_r": mk(ks[8], d, d),
+        "mu_c": vec(0.5, (2, d)),               # token-shift lerp for k,r
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """xs_t = x_{t-1}; prev: (B, d) carries across chunks/steps."""
+    B, S, d = x.shape
+    first = prev[:, None, :] if prev is not None else jnp.zeros((B, 1, d), x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    """Reference recurrence in float32 (also the kernels/ref.py oracle)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, ot
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    sT, out = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return out.transpose(1, 0, 2, 3), sT
+
+
+def time_mix(p: Dict, x: jax.Array, state: Optional[Dict], head_dim: int,
+             ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    H = d // head_dim
+    prev_tok = state["tok"] if state is not None else None
+    xs = _token_shift(x, prev_tok)
+    mu = p["mu"].astype(x.dtype)
+    def mixed(i):
+        return x + (xs - x) * mu[i][None, None, :]
+    r = (mixed(0) @ p["tm_r"]).reshape(B, S, H, head_dim)
+    k = (mixed(1) @ p["tm_k"]).reshape(B, S, H, head_dim)
+    v = (mixed(2) @ p["tm_v"]).reshape(B, S, H, head_dim)
+    g = silu(mixed(3) @ p["tm_g"])
+    w_raw = (mixed(4) @ p["tm_w"]).astype(jnp.float32) + p["w_bias"]
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(B, S, H, head_dim)
+
+    s0 = state["wkv"] if state is not None else \
+        jnp.zeros((B, H, head_dim, head_dim), jnp.float32)
+    out, sT = wkv_ref(r, k, v, w, p["u"].astype(jnp.float32), s0)
+
+    # per-head group norm
+    o32 = out.astype(jnp.float32)
+    mean = o32.mean(-1, keepdims=True)
+    var = o32.var(-1, keepdims=True)
+    o32 = (o32 - mean) * jax.lax.rsqrt(var + 1e-5)
+    o = (o32.reshape(B, S, d) * (1.0 + p["ln_x"])).astype(x.dtype)
+    y = (o * g) @ p["tm_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"tok": x[:, -1], "wkv": sT}
+    return y, new_state
+
+
+def channel_mix(p: Dict, x: jax.Array, state: Optional[Dict],
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    prev_tok = state if state is not None else None
+    xs = _token_shift(x, prev_tok)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0][None, None, :]
+    xr = x + (xs - x) * mu[1][None, None, :]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (kk @ p["cm_v"])
+    return out, (x[:, -1] if state is not None else None)
+
+
+def init_rwkv_state(batch: int, d: int, head_dim: int, dtype) -> Dict:
+    H = d // head_dim
+    return {
+        "tm": {"tok": jnp.zeros((batch, d), dtype),
+               "wkv": jnp.zeros((batch, H, head_dim, head_dim), jnp.float32)},
+        "cm_tok": jnp.zeros((batch, d), dtype),
+    }

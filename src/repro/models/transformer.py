@@ -1,0 +1,390 @@
+"""Unified model assembly for all assigned families.
+
+Every family exposes the same interface via ``Model``:
+
+    init(key)                          -> params
+    forward(params, batch)             -> (logits, aux)       # teacher-forced
+    init_cache(batch, cache_len)       -> cache
+    prefill(params, batch, cache)      -> (logits, cache)
+    decode_step(params, batch, cache)  -> (logits, cache)     # one token
+
+Layer stacks are ``lax.scan`` over stacked params (HLO depth-independent);
+heterogeneous stacks (hybrid 1:2, vlm 1-in-5 cross) scan the repeating
+pattern group and unroll the remainder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import (cross_entropy, embed_init, init_mlp, mlp,
+                                 rms_norm, sinusoidal_pos)
+from repro.sharding.partition import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sub-layer init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_layer(key, cfg: ModelConfig, n_stack: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln1": _zeros((cfg.d_model,), n_stack),
+        "ln2": _zeros((cfg.d_model,), n_stack),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    hd, _dt(cfg), cfg.qk_norm, n_stack),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, _dt(cfg), n_stack),
+    }
+    return p
+
+
+def _init_moe_layer(key, cfg: ModelConfig, n_stack: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln1": _zeros((cfg.d_model,), n_stack),
+        "ln2": _zeros((cfg.d_model,), n_stack),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    hd, _dt(cfg), cfg.qk_norm, n_stack),
+        "moe": moe_mod.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                _dt(cfg), n_stack),
+    }
+    if cfg.moe_dense_residual:
+        p["dense_mlp"] = init_mlp(k3, cfg.d_model, cfg.d_ff, _dt(cfg), n_stack)
+    return p
+
+
+def _init_rec_layer(key, cfg: ModelConfig, n_stack: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "ln1": _zeros((cfg.d_model,), n_stack),
+        "ln2": _zeros((cfg.d_model,), n_stack),
+        "rec": rglru_mod.init_rglru_block(k1, cfg.d_model, lru, _dt(cfg), n_stack),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, _dt(cfg), n_stack),
+    }
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, n_stack: int) -> Params:
+    return {
+        "ln1": _zeros((cfg.d_model,), n_stack),
+        "ln2": _zeros((cfg.d_model,), n_stack),
+        "mix": rwkv_mod.init_rwkv_layer(key, cfg.d_model, cfg.d_ff,
+                                        cfg.wkv_head_dim, _dt(cfg), n_stack),
+    }
+
+
+def _init_cross_layer(key, cfg: ModelConfig, n_stack: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": _zeros((cfg.d_model,), n_stack),
+        "ln2": _zeros((cfg.d_model,), n_stack),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    hd, _dt(cfg), False, n_stack),
+        "gate": _zeros((), n_stack),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, _dt(cfg), n_stack),
+    }
+
+
+def _zeros(shape, n_stack):
+    if n_stack:
+        shape = (n_stack,) + shape
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sub-layer apply (one layer, unstacked params)
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_layer(lp, x, cfg, mode, cache=None, pos=None):
+    hd = cfg.resolved_head_dim
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+              rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+              constrain_kv=cfg.constrain_kv)
+    h = rms_norm(x, lp["ln1"])
+    if mode == "train":
+        out = attn.self_attention(lp["attn"], h, window=cfg.window, **kw)
+        new_cache = None
+    elif mode == "prefill":
+        out, new_cache = attn.prefill_self_attention(
+            lp["attn"], h, cache, window=cfg.window, **kw)
+    else:  # decode
+        out, new_cache = attn.decode_self_attention(
+            lp["attn"], h, cache, pos, **kw)
+    x = x + out
+    x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+    return x, new_cache, 0.0
+
+
+def _apply_moe_layer(lp, x, cfg, mode, cache=None, pos=None):
+    hd = cfg.resolved_head_dim
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+              rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+              constrain_kv=cfg.constrain_kv)
+    h = rms_norm(x, lp["ln1"])
+    if mode == "train":
+        out = attn.self_attention(lp["attn"], h, **kw)
+        new_cache = None
+    elif mode == "prefill":
+        out, new_cache = attn.prefill_self_attention(
+            lp["attn"], h, cache, **kw)
+    else:
+        out, new_cache = attn.decode_self_attention(
+            lp["attn"], h, cache, pos, **kw)
+    x = x + out
+    h2 = rms_norm(x, lp["ln2"])
+    ffn, aux = moe_mod.moe_ffn(lp["moe"], h2, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+    if cfg.moe_dense_residual:
+        ffn = ffn + mlp(lp["dense_mlp"], h2)
+    return x + ffn, new_cache, aux
+
+
+def _apply_rec_layer(lp, x, cfg, mode, state=None):
+    h = rms_norm(x, lp["ln1"])
+    out, new_state = rglru_mod.rglru_block(lp["rec"], h, state)
+    x = x + out
+    x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+    return x, new_state, 0.0
+
+
+def _apply_rwkv_layer(lp, x, cfg, mode, state=None):
+    h = rms_norm(x, lp["ln1"])
+    tm_state = state["tm"] if state is not None else None
+    out, new_tm = rwkv_mod.time_mix(lp["mix"], h, tm_state, cfg.wkv_head_dim)
+    x = x + out
+    h2 = rms_norm(x, lp["ln2"])
+    cm_state = state["cm_tok"] if state is not None else None
+    out2, new_cm = rwkv_mod.channel_mix(lp["mix"], h2, cm_state)
+    x = x + out2
+    new_state = {"tm": new_tm, "cm_tok": new_cm} if state is not None else None
+    return x, new_state, 0.0
+
+
+def _apply_cross_layer(lp, x, cfg, kv):
+    """Gated cross-attention layer (llama-3.2-vision / whisper decoder)."""
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, lp["ln1"])
+    out = attn.cross_attention(lp["attn"], h, kv, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, head_dim=hd)
+    x = x + (jnp.tanh(lp["gate"]) * out.astype(jnp.float32)).astype(x.dtype)
+    x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+    return x
+
+
+_SUBLAYER = {
+    "attn": _apply_attn_layer,
+    "moe": _apply_moe_layer,
+    "rec": _apply_rec_layer,
+    "rwkv": _apply_rwkv_layer,
+}
+
+_SUBINIT = {
+    "attn": _init_attn_layer,
+    "moe": _init_moe_layer,
+    "rec": _init_rec_layer,
+    "rwkv": _init_rwkv_layer,
+}
+
+
+# ---------------------------------------------------------------------------
+# cache init per sub-layer kind
+# ---------------------------------------------------------------------------
+
+
+def _init_sub_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int):
+    hd = cfg.resolved_head_dim
+    dt = _dt(cfg)
+    if kind in ("attn", "moe"):
+        C = min(cache_len, cfg.window) if cfg.window else cache_len
+        return attn.init_kv_cache(batch, C, cfg.n_kv_heads, hd, dt)
+    if kind == "rec":
+        return rglru_mod.init_rec_state(batch, cfg.lru_width or cfg.d_model, dt)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_state(batch, cfg.d_model, cfg.wkv_head_dim, dt)
+    raise ValueError(kind)
+
+
+def _stack(tree, n):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), tree)
+
+
+def maybe_scan(body, carry, xs, *, scan: bool, n: int, remat: bool = False):
+    """``lax.scan`` or an unrolled python loop over stacked ``xs``.
+
+    Unrolling exists for the dry-run: XLA's cost_analysis counts a scan
+    body once, so the roofline would undercount depth by ~n_layers
+    (DESIGN.md §5)."""
+    if remat:
+        body = jax.checkpoint(body)
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    ys_acc = []
+    for i in range(n):
+        xi = jax.tree.map(lambda x: x[i], xs)
+        carry, y = body(carry, xi)
+        ys_acc.append(y)
+    if not ys_acc or ys_acc[0] is None:
+        return carry, None
+    ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_acc)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only model (dense / moe / ssm / hybrid)
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Decoder-only LM over a (possibly heterogeneous) layer stack."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "hybrid" and cfg.pattern:
+            pat = list(cfg.pattern)
+        elif cfg.family == "ssm":
+            pat = ["rwkv"]
+        elif cfg.family == "moe":
+            pat = ["moe"]
+        else:
+            pat = ["attn"]
+        self.pattern = pat
+        self.n_groups = cfg.n_layers // len(pat)
+        self.n_rest = cfg.n_layers - self.n_groups * len(pat)
+        self.kinds = pat * self.n_groups + pat[: self.n_rest]
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Params = {
+            "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, _dt(cfg)),
+            "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = embed_init(keys[1], cfg.padded_vocab, cfg.d_model, _dt(cfg))
+        groups = {}
+        for j, kind in enumerate(self.pattern):
+            groups[f"l{j}"] = _SUBINIT[kind](
+                jax.random.fold_in(keys[2], j), cfg, self.n_groups)
+        p["groups"] = groups
+        for r in range(self.n_rest):
+            p[f"rest{r}"] = _SUBINIT[self.pattern[r]](
+                jax.random.fold_in(keys[3], r), cfg, 0)
+        return p
+
+    # -- embedding / head -----------------------------------------------------
+    def _embed(self, p, tokens):
+        x = jnp.take(p["embed"], tokens, axis=0).astype(_dt(self.cfg))
+        return constrain(x, "batch", None, None)
+
+    def _head(self, p, x):
+        x = rms_norm(x, p["ln_f"])
+        table = p["embed"] if self.cfg.tie_embeddings else p["unembed"]
+        logits = jnp.einsum("bsd,vd->bsv", x, table)
+        return constrain(logits, "batch", None, "vocab")
+
+    # -- train forward --------------------------------------------------------
+    def forward(self, p: Params, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = self._embed(p, batch["tokens"])
+
+        def group_body(carry, gp):
+            x, aux = carry
+            for j, kind in enumerate(self.pattern):
+                x, _, a = _SUBLAYER[kind](gp[f"l{j}"], x, cfg, "train")
+                aux = aux + a
+            return (x, aux), None
+
+        (x, aux), _ = maybe_scan(group_body, (x, jnp.float32(0.0)),
+                                 p["groups"], scan=cfg.scan_layers,
+                                 n=self.n_groups, remat=cfg.remat)
+        for r in range(self.n_rest):
+            x, _, a = _SUBLAYER[self.pattern[r]](p[f"rest{r}"], x, cfg, "train")
+            aux = aux + a
+        return self._head(p, x), aux
+
+    def loss(self, p: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.forward(p, batch)
+        ce = cross_entropy(logits, batch["labels"], self.cfg.vocab_size)
+        total = ce + self.cfg.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- cache ----------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int) -> Dict:
+        cache: Dict = {"pos": jnp.int32(0)}
+        groups = {}
+        for j, kind in enumerate(self.pattern):
+            groups[f"l{j}"] = _stack(
+                _init_sub_cache(kind, self.cfg, batch, cache_len), self.n_groups)
+        cache["groups"] = groups
+        for r in range(self.n_rest):
+            cache[f"rest{r}"] = _init_sub_cache(
+                self.pattern[r], self.cfg, batch, cache_len)
+        return cache
+
+    # -- prefill / decode -------------------------------------------------------
+    def _stateful(self, p: Params, x, cache: Dict, mode: str):
+        cfg = self.cfg
+        pos = cache["pos"]
+
+        def group_body(x, xs):
+            gp, gc = xs
+            new_gc = {}
+            for j, kind in enumerate(self.pattern):
+                if kind in ("attn", "moe"):
+                    x, nc, _ = _SUBLAYER[kind](gp[f"l{j}"], x, cfg, mode,
+                                               cache=gc[f"l{j}"], pos=pos)
+                else:
+                    x, nc, _ = _SUBLAYER[kind](gp[f"l{j}"], x, cfg, mode,
+                                               gc[f"l{j}"])
+                new_gc[f"l{j}"] = nc
+            return x, new_gc
+
+        x, new_groups = maybe_scan(group_body, x,
+                                   (p["groups"], cache["groups"]),
+                                   scan=cfg.scan_layers, n=self.n_groups)
+        new_cache: Dict = {"groups": new_groups}
+        for r in range(self.n_rest):
+            kind = self.pattern[r]
+            if kind in ("attn", "moe"):
+                x, nc, _ = _SUBLAYER[kind](p[f"rest{r}"], x, cfg, mode,
+                                           cache=cache[f"rest{r}"], pos=pos)
+            else:
+                x, nc, _ = _SUBLAYER[kind](p[f"rest{r}"], x, cfg, mode,
+                                           cache[f"rest{r}"])
+            new_cache[f"rest{r}"] = nc
+        return x, new_cache
+
+    def prefill(self, p: Params, batch: Dict, cache: Dict):
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        x, new_cache = self._stateful(p, x, cache, "prefill")
+        new_cache["pos"] = cache["pos"] + tokens.shape[1]
+        return self._head(p, x[:, -1:]), new_cache
+
+    def decode_step(self, p: Params, batch: Dict, cache: Dict):
+        token = batch["tokens"]                      # (B, 1)
+        x = self._embed(p, token)
+        x, new_cache = self._stateful(p, x, cache, "decode")
+        new_cache["pos"] = cache["pos"] + 1
+        return self._head(p, x), new_cache

@@ -1,0 +1,135 @@
+"""Llama-3.2-Vision-style VLM: a dense GQA text decoder with a gated
+cross-attention layer to the image tokens every ``cross_attn_every``
+layers, scanned as groups of (N-1 self + 1 cross).
+
+The ViT/SigLIP vision encoder is a STUB per the brief: the batch carries
+precomputed patch embeddings ``image_embeds`` (B, n_img_tokens, d_vision);
+the model owns only the linear projector into d_model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import dense_init, rms_norm
+from repro.models.transformer import (Model, _apply_attn_layer,
+                                      _apply_cross_layer, _dt,
+                                      _init_attn_layer, _init_cross_layer,
+                                      _init_sub_cache, _stack, maybe_scan)
+
+Params = Dict[str, Any]
+
+
+class VLMModel(Model):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        assert cfg.cross_attn_every > 0
+        assert cfg.n_layers % cfg.cross_attn_every == 0, \
+            "vlm stack must be whole groups"
+        self.n_self = cfg.cross_attn_every - 1
+        self.n_groups = cfg.n_layers // cfg.cross_attn_every
+        self.n_rest = 0
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4)
+        base = Model(cfg)           # reuse embed/ln_f init
+        p = {"embed": base.init(keys[0])["embed"],
+             "ln_f": jnp.zeros((cfg.d_model,), jnp.float32)}
+        if not cfg.tie_embeddings:
+            import repro.models.layers as L
+            p["unembed"] = L.embed_init(keys[3], cfg.padded_vocab, cfg.d_model,
+                                        _dt(cfg))
+        p["img_proj"] = dense_init(keys[1], cfg.d_vision or cfg.d_model,
+                                   cfg.d_model, _dt(cfg))
+        groups: Dict = {}
+        for j in range(self.n_self):
+            groups[f"self{j}"] = _init_attn_layer(
+                jax.random.fold_in(keys[2], j), cfg, self.n_groups)
+        groups["cross"] = _init_cross_layer(
+            jax.random.fold_in(keys[2], 99), cfg, self.n_groups)
+        p["groups"] = groups
+        return p
+
+    def _project_image(self, p, batch):
+        img = batch["image_embeds"].astype(_dt(self.cfg))
+        return img @ p["img_proj"]                       # (B, N, d)
+
+    # -- train ------------------------------------------------------------------
+    def forward(self, p: Params, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        img = self._project_image(p, batch)
+        x = self._embed(p, batch["tokens"])
+        hd = cfg.resolved_head_dim
+
+        def group_body(x, gp):
+            for j in range(self.n_self):
+                x, _, _ = _apply_attn_layer(gp[f"self{j}"], x, cfg, "train")
+            kv = attn.cross_kv(gp["cross"]["attn"], img, cfg.n_kv_heads, hd)
+            x = _apply_cross_layer(gp["cross"], x, cfg, kv)
+            return x, None
+
+        x, _ = maybe_scan(group_body, x, p["groups"],
+                          scan=cfg.scan_layers, n=self.n_groups,
+                          remat=cfg.remat)
+        return self._head(p, x), jnp.float32(0.0)
+
+    # -- cache -------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int) -> Dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        groups: Dict = {}
+        for j in range(self.n_self):
+            groups[f"self{j}"] = _stack(
+                _init_sub_cache("attn", cfg, batch, cache_len), self.n_groups)
+        groups["cross_kv"] = {
+            "k": jnp.zeros((self.n_groups, batch, cfg.n_img_tokens,
+                            cfg.n_kv_heads, hd), _dt(cfg)),
+            "v": jnp.zeros((self.n_groups, batch, cfg.n_img_tokens,
+                            cfg.n_kv_heads, hd), _dt(cfg)),
+        }
+        return {"groups": groups, "pos": jnp.int32(0)}
+
+    def _stateful(self, p, x, cache, mode):
+        cfg = self.cfg
+        pos = cache["pos"]
+
+        def group_body(x, xs):
+            gp, gc = xs
+            new_gc = {}
+            for j in range(self.n_self):
+                x, nc, _ = _apply_attn_layer(gp[f"self{j}"], x, cfg, mode,
+                                             cache=gc[f"self{j}"], pos=pos)
+                new_gc[f"self{j}"] = nc
+            x = _apply_cross_layer(gp["cross"], x, cfg, gc["cross_kv"])
+            new_gc["cross_kv"] = gc["cross_kv"]
+            return x, new_gc
+
+        x, new_groups = maybe_scan(group_body, x,
+                                   (p["groups"], cache["groups"]),
+                                   scan=cfg.scan_layers, n=self.n_groups)
+        return x, {"groups": new_groups}
+
+    def prefill(self, p: Params, batch: Dict, cache: Dict):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        img = self._project_image(p, batch)
+        ckv = jax.vmap(
+            lambda cp: attn.cross_kv(cp, img, cfg.n_kv_heads, hd)
+        )(p["groups"]["cross"]["attn"])
+        cache = jax.tree.map(lambda x: x, cache)          # shallow copy
+        cache["groups"]["cross_kv"] = ckv
+        x = self._embed(p, batch["tokens"])
+        x, new_cache = self._stateful(p, x, cache, "prefill")
+        new_cache["pos"] = cache["pos"] + batch["tokens"].shape[1]
+        return self._head(p, x[:, -1:]), new_cache
+
+    def decode_step(self, p: Params, batch: Dict, cache: Dict):
+        x = self._embed(p, batch["tokens"])
+        x, new_cache = self._stateful(p, x, cache, "decode")
+        new_cache["pos"] = cache["pos"] + 1
+        return self._head(p, x), new_cache

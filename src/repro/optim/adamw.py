@@ -1,0 +1,72 @@
+"""AdamW in pure JAX (no optax in this container).
+
+Optimizer state is a pytree mirroring the params (m, v in float32), so the
+same partition specs shard it.  Update is fully functional:
+
+    state = adamw_init(params)
+    params, state = adamw_update(params, grads, state, lr, ...)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # scalar int32
+    m: Any                   # pytree like params (float32)
+    v: Any                   # pytree like params (float32)
+
+
+def adamw_init(params: Any, dtype=jnp.float32) -> AdamWState:
+    """``dtype``: storage dtype for m/v. bf16 halves optimizer residency
+    (the arctic-480b single-pod memory lever — EXPERIMENTS §Perf); the
+    update math always runs in float32."""
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        step=jnp.int32(0),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+
+    # global-norm clip
+    if grad_clip > 0:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay > 0 and p.ndim >= 2:       # decay matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), \
+            v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    params_new = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return params_new, AdamWState(step=step, m=m_new, v=v_new)

@@ -1,0 +1,7 @@
+from repro.sharding.partition import (  # noqa: F401
+    activation_rules,
+    constrain,
+    param_shardings,
+    param_specs,
+    use_rules,
+)

@@ -1,0 +1,4 @@
+from repro.train.steps import (  # noqa: F401
+    TrainState, make_decode_step, make_prefill_step, make_train_state,
+    make_train_step,
+)

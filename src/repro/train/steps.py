@@ -1,0 +1,115 @@
+"""Step functions: the jash payloads of the PoUW training/serving system.
+
+``make_train_step(cfg)`` returns a pure
+``(state, batch) -> (state, metrics)`` function — *this is what the
+Runtime Authority publishes per block* for the training use case
+(PNPCoin §1: "finding the next optimum in hyperdimensional SGD").
+``make_prefill_step`` / ``make_decode_step`` are the serving analogues.
+
+All of them are bounded-complexity by construction (jaxpr has no
+``while_loop`` — see ``core/jash.py``), deterministic, and shardable
+under pjit on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import adapt_for_shape, build_model, cache_len_for
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHparams:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def make_train_state(cfg: ModelConfig, key) -> TrainState:
+    model = build_model(cfg)
+    params = model.init(key)
+    return TrainState(params=params,
+                      opt=adamw_init(params, jnp.dtype(cfg.opt_dtype)))
+
+
+def make_train_step(cfg: ModelConfig,
+                    hp: TrainHparams = TrainHparams()
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    model = build_model(cfg)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        lr = cosine_schedule(state.opt.step + 1, peak_lr=hp.peak_lr,
+                             warmup_steps=hp.warmup_steps,
+                             total_steps=hp.total_steps)
+        params, opt = adamw_update(state.params, grads, state.opt, lr,
+                                   weight_decay=hp.weight_decay,
+                                   grad_clip=hp.grad_clip)
+        out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"],
+               "lr": lr}
+        return TrainState(params=params, opt=opt), out
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Forward-only loss (used by optimal-mode / ES candidate scoring)."""
+    model = build_model(cfg)
+
+    def eval_step(params, batch) -> jax.Array:
+        loss, _ = model.loss(params, batch)
+        return loss
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape):
+    cfg = adapt_for_shape(cfg, shape)
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: InputShape):
+    """One new token against a ``shape.seq_len``-deep cache."""
+    cfg = adapt_for_shape(cfg, shape)
+    model = build_model(cfg)
+
+    def decode_step(params, batch, cache):
+        logits, new_cache = model.decode_step(params, batch, cache)
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), logits, new_cache
+
+    return decode_step
+
+
+def make_init_cache(cfg: ModelConfig, shape: InputShape):
+    cfg = adapt_for_shape(cfg, shape)
+    model = build_model(cfg)
+
+    def init_cache():
+        return model.init_cache(shape.global_batch, cache_len_for(cfg, shape))
+
+    return init_cache

@@ -1,0 +1,47 @@
+"""Difficulty/work retargeting (§3.1 granularity, §5 limitation)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.difficulty import DifficultyController, work_for_runtime
+
+
+class TestController:
+    def test_converges_toward_target(self):
+        """Simulated miner: block time proportional to work.  The
+        controller must drive block time to the target."""
+        ctrl = DifficultyController(target_block_s=1.0, min_work=1)
+        work = 10_000
+        per_arg = 1.0 / 2_500                 # true miner speed
+        for _ in range(20):
+            dt = work * per_arg
+            ctrl.observe(dt)
+            work = ctrl.next_work(work)
+        assert abs(work * per_arg - 1.0) < 0.25
+
+    def test_retarget_clipped_to_4x(self):
+        ctrl = DifficultyController(target_block_s=100.0)
+        ctrl.observe(0.001)                    # wildly fast block
+        assert ctrl.next_work(1000) <= 4000
+
+    @given(st.floats(0.001, 100.0), st.integers(1, 1 << 20))
+    @settings(max_examples=40, deadline=None)
+    def test_work_stays_in_bounds(self, block_time, work):
+        ctrl = DifficultyController(target_block_s=1.0, min_work=4,
+                                    max_work=1 << 22)
+        ctrl.observe(block_time)
+        new = ctrl.next_work(work)
+        assert 4 <= new <= 1 << 22
+
+    def test_no_observation_no_change(self):
+        ctrl = DifficultyController(target_block_s=1.0)
+        assert ctrl.next_work(123) == 123
+
+
+class TestInitialSizing:
+    def test_work_for_runtime(self):
+        # 1 ms/arg, 1 s target, 256 miners, 0.9 safety -> ~230k args
+        w = work_for_runtime(1e-3, 1.0, 256)
+        assert 200_000 < w < 256_000
+
+    def test_degenerate_runtime(self):
+        assert work_for_runtime(0.0, 1.0, 8) == 1

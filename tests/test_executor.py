@@ -1,0 +1,123 @@
+"""Executor (full/optimal), verification, and RA review pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.authority import RuntimeAuthority, classic_jash
+from repro.core.executor import run_full, run_optimal
+from repro.core.jash import Jash, JashMeta, collatz_jash
+from repro.core.ledger import merkle_root
+from repro.core.verify import quorum_verify, verify_inclusion
+from repro.kernels import ref
+
+
+def _docking_jash(n_r=8, n_p=8):
+    """The §4 use case: deterministic score per (receptor, peptide) pair,
+    2-bit result {01 binds, 00 no-bind, 10 non-terminated}."""
+    def fn(b):
+        n_rr = jnp.uint32(n_r)
+        r = b % n_rr
+        p = b // n_rr
+        score = (r * jnp.uint32(2654435761) ^ p * jnp.uint32(40503)) \
+            % jnp.uint32(1000)
+        return jnp.where(score < 200, jnp.uint32(0b01), jnp.uint32(0b00))
+    return Jash("dock", fn, JashMeta(arg_bits=6, res_bits=2,
+                                     max_arg=n_r * n_p),
+                example_args=(jnp.uint32(0),))
+
+
+class TestFullMode:
+    def test_matches_bruteforce(self):
+        j = _docking_jash()
+        fr = run_full(j)
+        fn = jax.jit(j.fn)
+        for i in range(0, 64, 7):
+            assert int(fr.results[i, 0]) == int(fn(jnp.uint32(i)))
+
+    def test_hashes_are_sha256_of_arg_res(self):
+        j = _docking_jash()
+        fr = run_full(j)
+        msg = np.concatenate([fr.args[:, None], fr.results], axis=1)
+        want = ref.sha256_words_hashlib(msg.astype(np.uint32))
+        np.testing.assert_array_equal(fr.hashes, want)
+
+    def test_respects_max_arg(self):
+        j = _docking_jash(n_r=5, n_p=3)
+        fr = run_full(j)
+        assert len(fr.args) == 15
+
+
+class TestOptimalMode:
+    def test_finds_global_min(self):
+        def fn(a):
+            # V-shaped: minimum at arg=37
+            return jnp.abs(a.astype(jnp.int32) - 37).astype(jnp.uint32)
+        j = Jash("vee", fn, JashMeta(arg_bits=7, res_bits=32),
+                 example_args=(jnp.uint32(0),))
+        opt = run_optimal(j)
+        assert opt.best_arg == 37
+        assert int(opt.best_res[0]) == 0
+
+    def test_leading_zero_semantics_on_hash(self):
+        """Optimal over sha256 == the arg whose digest is lexicographically
+        smallest (Bitcoin's 'most leading zeros')."""
+        j = classic_jash(arg_bits=8)
+        opt = run_optimal(j)
+        msgs = np.stack([np.arange(256, dtype=np.uint32),
+                         np.full(256, 0x504e5043, np.uint32)], axis=1)
+        digests = ref.sha256_words_hashlib(
+            ref.sha256_words_hashlib(msgs))
+        keys = [tuple(d) for d in digests]
+        assert opt.best_arg == int(np.lexsort(
+            np.stack([digests[:, 1], digests[:, 0]])[::-1])[0]) or \
+            keys[opt.best_arg] == min(keys)
+
+
+class TestVerification:
+    def test_quorum_passes_honest(self):
+        j = _docking_jash()
+        fr = run_full(j)
+        assert quorum_verify(j, fr, fraction=0.5).ok
+
+    def test_quorum_catches_forged_result(self):
+        import dataclasses
+        j = _docking_jash()
+        fr = run_full(j)
+        forged = fr.results.copy()
+        forged[5] ^= 1                          # forge one submission
+        fr = dataclasses.replace(fr, results=forged)
+        rep = quorum_verify(j, fr, fraction=1.0)
+        assert not rep.ok
+        assert 5 in rep.mismatched_args
+
+    def test_merkle_inclusion(self):
+        j = _docking_jash()
+        fr = run_full(j)
+        root = merkle_root(fr.merkle_leaves)
+        assert verify_inclusion(fr, 7, root)
+        assert not verify_inclusion(fr, 7, "00" * 32)
+
+
+class TestRuntimeAuthority:
+    def test_review_and_priority_order(self):
+        ra = RuntimeAuthority()
+        cheap = _docking_jash()
+        costly = collatz_jash(max_steps=4096)
+        r1 = ra.submit(costly)
+        r2 = ra.submit(cheap)
+        assert r1.compiled and r2.compiled
+        assert ra.queue_depth == 2
+
+    def test_veto_blocks_publication(self):
+        ra = RuntimeAuthority()
+        ra.submit(_docking_jash(), veto=True)
+        jash, src = ra.publish_next()
+        assert src == "classic"                  # queue empty -> §3.4
+
+    def test_classic_fallback_is_double_sha(self):
+        j = classic_jash()
+        out = jax.jit(j.fn)(jnp.uint32(7))
+        msg = np.array([[7, 0x504e5043]], np.uint32)
+        want = ref.sha256_words_hashlib(ref.sha256_words_hashlib(msg))
+        np.testing.assert_array_equal(np.asarray(out), want[0])

@@ -1,0 +1,87 @@
+"""Jash validation: the paper's §3 requirements as executable checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jash import (Jash, JashMeta, JashValidationError,
+                             bounded_while, collatz_jash)
+
+
+def _collatz_py(n: int, max_steps: int = 1024):
+    steps = 0
+    while n != 1 and steps < max_steps:
+        n = n // 2 if n % 2 == 0 else 3 * n + 1
+        steps += 1
+    return steps if n == 1 else max_steps
+
+
+class TestValidation:
+    def test_rejects_unbounded_while(self):
+        def bad(x):
+            return jax.lax.while_loop(lambda s: s < x, lambda s: s + 1,
+                                      jnp.uint32(0))
+        j = Jash("bad", bad, JashMeta(32, 32),
+                 example_args=(jnp.uint32(5),))
+        with pytest.raises(JashValidationError):
+            j.validate()
+
+    def test_rejects_nested_unbounded_while(self):
+        def bad(x):
+            def outer(i, acc):
+                return acc + jax.lax.while_loop(
+                    lambda s: s < x, lambda s: s + 1, jnp.uint32(0))
+            return jax.lax.fori_loop(0, 4, outer, jnp.uint32(0))
+        j = Jash("bad-nested", bad, JashMeta(32, 32),
+                 example_args=(jnp.uint32(5),))
+        with pytest.raises(JashValidationError):
+            j.validate()
+
+    def test_accepts_bounded_forms(self):
+        def good(x):
+            def body(i, acc):
+                return acc * jnp.uint32(3) + x
+            acc = jax.lax.fori_loop(0, 16, body, jnp.uint32(1))
+            ys = jax.lax.scan(lambda c, _: (c + x, c), acc,
+                              None, length=8)[0]
+            return jax.lax.cond(x > 0, lambda: ys, lambda: acc)
+        Jash("good", good, JashMeta(32, 32),
+             example_args=(jnp.uint32(5),)).validate()
+
+    def test_rejects_over_long_scan(self):
+        def long_loop(x):
+            return jax.lax.scan(lambda c, _: (c + x, None), x,
+                                None, length=4096)[0]
+        j = Jash("long", long_loop, JashMeta(32, 32),
+                 example_args=(jnp.uint32(1),))
+        with pytest.raises(JashValidationError):
+            j.validate(loop_bound=1024)
+
+    def test_collatz_passes(self):
+        collatz_jash().validate()
+
+    def test_source_id_stable(self):
+        a, b = collatz_jash(), collatz_jash()
+        assert a.source_id() == b.source_id()
+
+
+class TestBoundedWhile:
+    @given(st.integers(min_value=1, max_value=5000))
+    @settings(max_examples=30, deadline=None)
+    def test_collatz_matches_python(self, n):
+        fn = jax.jit(collatz_jash(max_steps=1024).fn)
+        assert int(fn(jnp.uint32(n))) == _collatz_py(n)
+
+    def test_nontermination_flag(self):
+        # cond never satisfied within the bound
+        state, done = bounded_while(
+            lambda s: s < 100, lambda s: s + 1, jnp.int32(0), max_steps=10)
+        assert not bool(done)
+        assert int(state) == 10
+
+    def test_early_termination_freezes_state(self):
+        state, done = bounded_while(
+            lambda s: s < 3, lambda s: s + 1, jnp.int32(0), max_steps=50)
+        assert bool(done)
+        assert int(state) == 3

@@ -1,0 +1,99 @@
+"""Ledger/Merkle/reward invariants (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ledger import (Ledger, merkle_proof, merkle_root,
+                               verify_merkle_proof)
+from repro.core.rewards import CreditBook, reward_full, reward_optimal
+
+leaves_st = st.lists(st.binary(min_size=1, max_size=40), min_size=1,
+                     max_size=40)
+
+
+class TestMerkle:
+    @given(leaves_st)
+    @settings(max_examples=40, deadline=None)
+    def test_all_proofs_verify(self, leaves):
+        root = merkle_root(leaves)
+        for i in range(len(leaves)):
+            proof = merkle_proof(leaves, i)
+            assert verify_merkle_proof(leaves[i], proof, root)
+
+    @given(leaves_st, st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_tampered_leaf_fails(self, leaves, data):
+        root = merkle_root(leaves)
+        i = data.draw(st.integers(0, len(leaves) - 1))
+        proof = merkle_proof(leaves, i)
+        tampered = leaves[i] + b"x"
+        assert not verify_merkle_proof(tampered, proof, root)
+
+    @given(leaves_st)
+    @settings(max_examples=20, deadline=None)
+    def test_root_order_sensitive(self, leaves):
+        rev = list(reversed(leaves))
+        if rev == leaves:                       # palindromes are invariant
+            return
+        assert merkle_root(leaves) != merkle_root(rev)
+
+
+class TestLedger:
+    def _mk(self, n=5):
+        led = Ledger()
+        for i in range(n):
+            led.append(jash_id=f"j{i}", mode="full",
+                       merkle=merkle_root([bytes([i])]), winner=None,
+                       best_res=None, n_results=1, state_digest=f"d{i}")
+        return led
+
+    def test_chain_verifies(self):
+        assert self._mk().verify_chain()
+
+    def test_tampered_block_detected(self):
+        led = self._mk()
+        import dataclasses
+        led.blocks[2] = dataclasses.replace(led.blocks[2],
+                                            state_digest="forged")
+        assert not led.verify_chain()
+
+    def test_heights_sequential(self):
+        led = self._mk(7)
+        assert [b.height for b in led.blocks] == list(range(7))
+
+
+class TestRewards:
+    @given(st.lists(st.integers(0, 15), min_size=1, max_size=100),
+           st.floats(1.0, 1000.0, allow_nan=False))
+    @settings(max_examples=40, deadline=None)
+    def test_full_mode_conservation(self, submitters, reward):
+        """Sum of credits == block reward (the coin is conserved)."""
+        book = CreditBook()
+        reward_full(book, submitters, reward)
+        assert np.isclose(book.total_issued, reward)
+        assert np.isclose(sum(book.balances.values()), reward)
+
+    @given(st.lists(st.integers(0, 15), min_size=1, max_size=60),
+           st.floats(1.0, 100.0, allow_nan=False),
+           st.integers(0, 15))
+    @settings(max_examples=40, deadline=None)
+    def test_full_mode_with_bonus_conserves(self, submitters, reward, bonus):
+        book = CreditBook()
+        reward_full(book, submitters, reward, bonus_winner=bonus)
+        assert np.isclose(book.total_issued, reward)
+
+    def test_optimal_winner_takes_all(self):
+        book = CreditBook()
+        reward_optimal(book, 3, 50.0)
+        assert book.balances == {3: 50.0}
+
+    @given(st.lists(st.integers(0, 7), min_size=1, max_size=50))
+    @settings(max_examples=30, deadline=None)
+    def test_full_mode_proportional(self, submitters):
+        """Each miner's credit is proportional to args it submitted first."""
+        book = CreditBook()
+        reward_full(book, submitters, 100.0)
+        n = len(submitters)
+        for m in set(submitters):
+            share = submitters.count(m) / n * 100.0
+            assert np.isclose(book.balances[m], share)

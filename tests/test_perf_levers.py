@@ -1,0 +1,87 @@
+"""Sharding-policy levers (EXPERIMENTS.md §Perf) stay numerically exact
+and produce the intended PartitionSpecs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.core import es as es_mod
+from repro.models.model import build_model
+from repro.sharding.partition import _spec_for, param_specs
+
+
+class TestLeversNumericallyExact:
+    """constrain_kv / remat / fsdp must not change model outputs."""
+
+    @pytest.mark.parametrize("flag", ["constrain_kv", "remat"])
+    def test_flag_preserves_forward(self, flag):
+        cfg = reduced(get_config("qwen3-0.6b"))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                  cfg.vocab_size)
+        a, _ = model.forward(params, {"tokens": toks})
+        cfg2 = dataclasses.replace(cfg, **{flag: not getattr(cfg, flag)})
+        b, _ = build_model(cfg2).forward(params, {"tokens": toks})
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestExpertAxis:
+    def test_expert_axis_model_default(self):
+        mesh = AbstractMesh((16, 16), ("data", "model"))
+        spec = _spec_for("layers/moe/experts/w1", (35, 128, 7168, 4864),
+                         mesh, True)
+        assert spec == P(None, "model", "data", None)
+
+    def test_expert_axis_data_moves_tensor_to_model(self):
+        mesh = AbstractMesh((16, 16), ("data", "model"))
+        spec = _spec_for("layers/moe/experts/w1", (35, 128, 7168, 4864),
+                         mesh, True, expert_axis="data")
+        assert spec == P(None, "data", None, "model")
+
+    def test_fsdp_pod_combines_axes(self):
+        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        spec = _spec_for("layers/mlp/w1", (35, 7168, 4864), mesh, True,
+                         fsdp_pod=True)
+        assert spec == P(None, ("pod", "data"), "model")
+
+    def test_fsdp_pod_falls_back_when_indivisible(self):
+        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        # 48 % 32 != 0 -> falls back to plain data sharding (48 % 16 == 0)
+        spec = _spec_for("layers/mlp/w1", (48, 64), mesh, True,
+                         fsdp_pod=True)
+        assert spec == P("data", "model")
+
+
+class TestESCandidates:
+    def test_candidate_zero_is_incumbent(self):
+        params = {"w": jnp.ones((4, 4))}
+        c0 = es_mod.candidate_params(params, jax.random.key(0),
+                                     jnp.int32(0), 0.1)
+        np.testing.assert_array_equal(np.asarray(c0["w"]),
+                                      np.asarray(params["w"]))
+
+    def test_antithetic_pairs_mirror(self):
+        params = {"w": jnp.zeros((8,))}
+        key = jax.random.key(3)
+        c1 = es_mod.candidate_params(params, key, jnp.int32(1), 0.5)
+        c2 = es_mod.candidate_params(params, key, jnp.int32(2), 0.5)
+        np.testing.assert_allclose(np.asarray(c1["w"]),
+                                   -np.asarray(c2["w"]), rtol=1e-6)
+
+    def test_block_never_worse_than_incumbent(self):
+        """With candidate 0 == params, the winning loss <= incumbent loss."""
+        def eval_fn(p, batch):
+            return jnp.sum(jnp.square(p["w"] - batch["t"]))
+        params = {"w": jnp.asarray([3.0, -1.0])}
+        batch = {"t": jnp.asarray([1.0, 1.0])}
+        losses, best = es_mod.es_block(eval_fn, params, batch,
+                                       jax.random.key(0), pop_size=9,
+                                       sigma=0.1)
+        assert float(losses[best]) <= float(losses[0]) + 1e-6

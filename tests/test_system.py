@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests: the full PNPCoin loop from researcher
+submission to rewarded, verified, chained blocks — and training-as-mining
+actually learning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import InputShape
+from repro.core.authority import RuntimeAuthority
+from repro.core.executor import run_full, run_optimal
+from repro.core.jash import Jash, JashMeta, collatz_jash
+from repro.core.ledger import Ledger, merkle_root
+from repro.core.pow_train import PoUWTrainer
+from repro.core.rewards import CreditBook, reward_full
+from repro.core.verify import quorum_verify
+from repro.train.steps import TrainHparams
+
+
+def test_full_pnpcoin_loop():
+    """Researcher -> RA review -> publication -> mining -> verification
+    -> ledger -> rewards: the complete Fig. 1 pipeline."""
+    ra = RuntimeAuthority()
+    ledger = Ledger()
+    book = CreditBook()
+
+    ra.submit(collatz_jash(max_steps=256))
+    for block_i in range(3):
+        jash, src = ra.publish_next()
+        if src == "classic":
+            jash = Jash(jash.name, jash.fn,
+                        JashMeta(arg_bits=5, res_bits=256),
+                        example_args=jash.example_args)
+        else:
+            jash = Jash(jash.name, jash.fn,
+                        JashMeta(arg_bits=5, res_bits=32),
+                        example_args=jash.example_args)
+        full = run_full(jash)
+        assert quorum_verify(jash, full, fraction=0.3).ok
+        root = merkle_root(full.merkle_leaves)
+        ledger.append(jash_id=jash.source_id(), mode="full", merkle=root,
+                      winner=None, best_res=None,
+                      n_results=len(full.args))
+        reward_full(book, full.miner_of.tolist(), 50.0)
+
+    assert ledger.verify_chain()
+    assert ledger.height == 3
+    assert np.isclose(book.total_issued, 150.0)
+
+
+def test_training_as_mining_learns():
+    """A few dozen blocks of PoUW training must reduce the loss — the
+    paper's 'Deep Net training' payload does useful work."""
+    cfg = reduced(get_config("qwen3-0.6b"))
+    shape = InputShape("t", 64, 8, "train")
+    tr = PoUWTrainer(cfg, shape,
+                     hp=TrainHparams(peak_lr=2e-3, warmup_steps=5,
+                                     total_steps=80),
+                     mode="full", n_miners=4)
+    recs = tr.run(40)
+    first = np.mean([r.loss for r in recs[:5]])
+    last = np.mean([r.loss for r in recs[-5:]])
+    assert last < first - 0.15, (first, last)
+    assert tr.ledger.verify_chain()
+
+
+def test_optimal_mode_improves_over_random():
+    """ES mining should (slightly) reduce loss vs the init params."""
+    cfg = reduced(get_config("qwen3-0.6b"))
+    shape = InputShape("t", 32, 4, "train")
+    tr = PoUWTrainer(cfg, shape, mode="optimal", pop_size=8, sigma=0.01,
+                     seed=1)
+    base = float(tr._eval_step(tr.state.params, tr.pipeline.batch(0)))
+    tr.run(6)
+    final = float(tr._eval_step(tr.state.params, tr.pipeline.batch(0)))
+    # hillclimb selects per-block batches, so allow modest drift on batch 0
+    assert final <= base + 0.3, (base, final)
+    # and the per-block accepted loss is the population minimum by
+    # construction — chain must be intact
+    assert tr.ledger.verify_chain()
+
+
+def test_docking_use_case_end_to_end():
+    """§4: map pair space -> full mode -> aggregate binding results."""
+    N_R, N_P = 8, 4
+
+    def matcher(b):
+        r, p = b % jnp.uint32(N_R), b // jnp.uint32(N_R)
+        score = (r * jnp.uint32(2654435761) ^ p * jnp.uint32(40503)) \
+            % jnp.uint32(1000)
+        return jnp.where(score < 250, jnp.uint32(0b01), jnp.uint32(0b00))
+
+    jash = Jash("dock", matcher,
+                JashMeta(arg_bits=5, res_bits=2, max_arg=N_R * N_P,
+                         data_checksum="ab" * 32, importance=0.9),
+                example_args=(jnp.uint32(0),))
+    ra = RuntimeAuthority()
+    ra.submit(jash)
+    pub, _ = ra.publish_next()
+    full = run_full(pub)
+    binds = int((full.results[:, 0] == 1).sum())
+    assert 0 < binds < N_R * N_P
+    assert quorum_verify(pub, full, fraction=1.0).ok
