@@ -13,14 +13,21 @@ of its quantitative *claims* instead:
   docking         §4       use-case throughput (pairs/s)
   verification    §3/DESIGN quorum re-execution cost vs fraction
   roofline        (e)/(g)  dry-run roofline table from experiments/dryrun
+  merkle_commit   DESIGN §6 device block commitment vs the seed Python path
+  executor_chunked DESIGN §6 chunked fused full-mode dispatch
+  block_scan      DESIGN §6 scan-fused PoUW block vs per-microstep dispatch
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  The commit-pipeline rows
+are also written machine-readably to BENCH_pipeline.json (repo root) so
+subsequent PRs can track the trajectory.  ``--smoke`` runs only a reduced
+commit-pipeline subset (CI).
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import statistics
 import time
 
 import jax
@@ -28,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS = []
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_pipeline.json")
 
 
 def row(name: str, us_per_call: float, derived: str = "") -> None:
@@ -50,10 +59,11 @@ def _timeit(fn, *args, n: int = 5, warmup: int = 2) -> float:
 def bench_hash_flops():
     """§1 footnote: 'we consider 20 FLOPS per hash, but this can be 20000
     on a modern CPU'."""
+    from repro.core.compat import cost_analysis_dict
     from repro.kernels.ops import sha256_words
     msg = jnp.zeros((4096, 20), jnp.uint32)           # 80-byte headers
     lowered = jax.jit(lambda m: sha256_words(m)).lower(msg)
-    cost = lowered.cost_analysis() or {}
+    cost = cost_analysis_dict(lowered.cost_analysis())
     flops_per_hash = float(cost.get("flops", 0.0)) / msg.shape[0]
     us = _timeit(jax.jit(lambda m: sha256_words(m)), msg)
     hashes_per_s = msg.shape[0] / (us * 1e-6)
@@ -219,6 +229,138 @@ def bench_verification():
             f"checked={rep.n_checked} verify/mine={dt / max(t_mine, 1e-9):.3f}")
 
 
+def _median_ms(fn, n: int) -> float:
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e3
+
+
+def bench_commit_pipeline(n_leaves: int = 4096,
+                          write_json: bool = True) -> dict:
+    """DESIGN.md §6: the on-device block-commitment pipeline vs the seed.
+
+    merkle_commit compares the seed's end-to-end commit path from a mined
+    FullResult — the per-arg Python loop building leaf bytes plus the
+    Python/hashlib ``merkle_root`` (exactly the code the pipeline
+    replaced) — against ``FullResult.commit_root()``, the fused device
+    tree over the leaf digests the executor already computed in-dispatch.
+    The hashlib-root-only baseline (no leaf building) is recorded too.
+    """
+    from repro.core.executor import run_full
+    from repro.core.jash import Jash, JashMeta
+    from repro.core.ledger import merkle_root
+    from repro.core.pow_train import PoUWTrainer
+    from repro.configs import get_config, reduced
+    from repro.configs.base import InputShape
+    from repro.train.steps import TrainHparams
+
+    arg_bits = int(np.log2(n_leaves))
+    assert 1 << arg_bits == n_leaves
+
+    def mixer(a):
+        h = a * jnp.uint32(2654435761)
+        return jnp.stack(
+            [(h ^ jnp.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF)) *
+             jnp.uint32(2246822519) for i in range(8)])
+
+    j = Jash("commit-bench", mixer,
+             JashMeta(arg_bits=arg_bits, res_bits=256),
+             example_args=(jnp.uint32(0),))
+
+    # --- executor_chunked: the fused full-mode dispatch ------------------
+    run_full(j)                                        # compile
+    us_full = _median_ms(lambda: run_full(j), 5) * 1e3
+    run_full(j, chunk_size=n_leaves // 4)              # compile (same shape?)
+    us_chunk = _median_ms(lambda: run_full(j, chunk_size=n_leaves // 4),
+                          5) * 1e3
+    row("executor_chunked.one_dispatch", us_full,
+        f"args_per_s={n_leaves / (us_full * 1e-6):.3g}")
+    row("executor_chunked.four_chunks", us_chunk,
+        f"args_per_s={n_leaves / (us_chunk * 1e-6):.3g} bit-identical")
+
+    # --- merkle_commit ---------------------------------------------------
+    fr = run_full(j)
+
+    def seed_commit():
+        # the seed's commit path, verbatim: per-i leaf bytes + hashlib tree
+        leaves = tuple(fr.args[i].tobytes() + fr.results[i].tobytes()
+                       for i in range(len(fr.args)))
+        return merkle_root(leaves, backend="hashlib")
+
+    leaves_prebuilt = fr.merkle_leaves
+    fr.commit_root()                                   # compile device tree
+    assert fr.commit_root() == seed_commit()           # bit-identical
+    ms_seed = _median_ms(seed_commit, 7)
+    ms_root_only = _median_ms(
+        lambda: merkle_root(leaves_prebuilt, backend="hashlib"), 7)
+    ms_dev = _median_ms(fr.commit_root, 15)
+    speedup = ms_seed / ms_dev
+    row("merkle_commit.seed_path", ms_seed * 1e3,
+        "python leaf build + hashlib merkle_root (seed code)")
+    row("merkle_commit.hashlib_root_only", ms_root_only * 1e3,
+        "hashlib merkle_root on prebuilt leaves")
+    row("merkle_commit.device", ms_dev * 1e3,
+        f"speedup={speedup:.2f}x vs seed path "
+        f"({ms_root_only / ms_dev:.2f}x vs root-only)")
+
+    # --- block_scan: scan-fused PoUW block -------------------------------
+    cfg = reduced(get_config("qwen3-0.6b"))
+    shape = InputShape("t", 32, 4, "train")
+    micro = 4
+    tr = PoUWTrainer(cfg, shape, hp=TrainHparams(), mode="full",
+                     n_miners=4, block_microsteps=micro)
+    tr.run_block()                                     # compile scan block
+    ms_scan = _median_ms(tr.run_block, 3)
+
+    state, batch = tr.state, tr.pipeline.batch(0)
+    tr._train_step(state, batch)                       # compile single step
+
+    def seed_microsteps():
+        s = state
+        for _ in range(micro):
+            s, m = tr._train_step(s, batch)
+        jax.block_until_ready(m["loss"])
+
+    ms_seed_steps = _median_ms(seed_microsteps, 3)
+    row("block_scan.scan_block", ms_scan * 1e3,
+        f"{micro} microsteps, one dispatch + ledger")
+    row("block_scan.per_step_dispatch", ms_seed_steps * 1e3,
+        f"seed pattern: {micro} dispatches, no ledger; "
+        f"scan/step={ms_scan / ms_seed_steps:.2f}")
+
+    payload = {
+        "n_leaves": n_leaves,
+        "merkle_commit": {
+            "us_seed_path": ms_seed * 1e3,
+            "us_hashlib_root_only": ms_root_only * 1e3,
+            "us_device": ms_dev * 1e3,
+            "speedup": speedup,
+            "speedup_vs_root_only": ms_root_only / ms_dev,
+            "baseline": "seed commit path: per-arg Python leaf build + "
+                        "hashlib merkle_root, as in the seed executor",
+        },
+        "executor_chunked": {
+            "us_one_dispatch": us_full,
+            "us_four_chunks": us_chunk,
+            "args_per_s": n_leaves / (us_full * 1e-6),
+        },
+        "block_scan": {
+            "block_microsteps": micro,
+            "us_scan_block": ms_scan * 1e3,
+            "us_per_step_dispatch": ms_seed_steps * 1e3,
+        },
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"# wrote {os.path.abspath(BENCH_JSON)}")
+    return payload
+
+
 def bench_roofline():
     """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
     files = sorted(glob.glob("experiments/dryrun/*__single.json"))
@@ -243,8 +385,15 @@ def bench_roofline():
             f"useful={d['useful_flops_ratio']:.2f}")
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
+    if smoke:
+        # CI subset: the commit pipeline at a reduced leaf count (full
+        # 4096-leaf numbers are recorded in the committed
+        # BENCH_pipeline.json by a full run)
+        bench_commit_pipeline(n_leaves=256, write_json=False)
+        print(f"# {len(ROWS)} rows (smoke)")
+        return
     fph = bench_hash_flops()
     bench_network_claim(fph)
     bench_block_turnaround()
@@ -252,9 +401,14 @@ def main() -> None:
     bench_pouw_overhead()
     bench_docking()
     bench_verification()
+    bench_commit_pipeline()
     bench_roofline()
     print(f"# {len(ROWS)} rows")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI subset (commit pipeline only, small N)")
+    main(smoke=p.parse_args().smoke)

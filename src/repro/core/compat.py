@@ -1,0 +1,16 @@
+"""Small shims over jax API drift so the repo runs on the installed jax.
+
+``cost_analysis()`` returned a per-computation *list* of dicts in older
+jax releases and a plain dict in newer ones; every caller here wants the
+aggregate dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def cost_analysis_dict(cost: Any) -> Dict[str, float]:
+    """Normalize ``Lowered/Compiled.cost_analysis()`` output to one dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

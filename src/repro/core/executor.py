@@ -2,14 +2,19 @@
 over its argument space (PNPCoin §3.3).
 
 **full** mode — "Full execution returns the output of every valid input":
-the arg space [0, n_args) is sharded over the mesh's miner axis with
-``shard_map``; each miner vmaps the jash over its slice and emits
-(results, sha256(arg || res)) — the paper's "concatenated plain results
-with hashed results".  The hash uses the batched SHA-256 kernel.
+the arg space [0, n_args) is processed in fixed-size chunks; each chunk is
+one jitted ``shard_map`` dispatch that fuses jash eval, the submission
+hash ``sha256(arg || res)``, and the Merkle *leaf digest*
+``sha256(arg_bytes || res_bytes)`` (the batched SHA-256 kernel runs both).
+Chunking bounds device memory for large ``n_args`` — only one chunk of
+results is ever resident on device — and every chunk reuses the same
+compiled executable.  The block commitment (Merkle root over all leaf
+digests) is a single fused device reduction (``kernels/merkle``).
 
 **optimal** mode — "accepts the lowest res, the result with most leading
-zeros": each miner reduces its slice to a (res, arg) minimum and a global
-all-reduce-min picks the block winner.
+zeros": each miner reduces its slice to the lexicographic (res, arg)
+minimum in a single vectorized pass (min + tie-masked min + argmax — no
+O(n log n) sort), and a global gather-min picks the block winner.
 
 On the CPU container the same code runs on a 1-device mesh; on the
 production mesh the miner axis is ("data",) (256 miners/pod) or
@@ -18,7 +23,7 @@ production mesh the miner axis is ("data",) (256 miners/pod) or
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -28,7 +33,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.jash import Jash
+from repro.kernels.merkle import bswap32, merkle_root_from_digests
 from repro.kernels.ops import sha256_words
+
+# Default ceiling on per-dispatch rows in full mode: bounds device-resident
+# results while keeping each dispatch large enough to stay kernel-bound.
+DEFAULT_CHUNK = 1 << 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,7 +47,28 @@ class FullResult:
     results: np.ndarray        # (n, res_words) uint32
     hashes: np.ndarray         # (n, 8) uint32  sha256(arg || res)
     miner_of: np.ndarray       # (n,) int32 — first submitter per arg
-    merkle_leaves: Tuple[bytes, ...]
+    leaf_digests: np.ndarray   # (n, 8) uint32  sha256(leaf bytes)
+    _leaves: Optional[Tuple[bytes, ...]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    @property
+    def merkle_leaves(self) -> Tuple[bytes, ...]:
+        """Leaf byte strings ``arg.tobytes() + res.tobytes()``, materialized
+        lazily from the packed arrays (one buffer slice per leaf, no per-row
+        ``tobytes`` loop)."""
+        if self._leaves is None:
+            packed = np.ascontiguousarray(np.concatenate(
+                [self.args[:, None], self.results], axis=1).astype("<u4"))
+            buf = packed.tobytes()
+            stride = packed.shape[1] * 4
+            leaves = tuple(buf[i * stride:(i + 1) * stride]
+                           for i in range(packed.shape[0]))
+            object.__setattr__(self, "_leaves", leaves)
+        return self._leaves
+
+    def commit_root(self) -> str:
+        """Block-commitment Merkle root over the leaf digests (device)."""
+        return merkle_root_from_digests(self.leaf_digests)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,39 +92,89 @@ def _miner_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def run_full(jash: Jash, *, mesh: Optional[Mesh] = None,
-             block_reward: float = 1.0) -> FullResult:
-    """Evaluate every valid arg (§3.3 full mode)."""
-    n = jash.meta.n_args
-    axes = _miner_axes(mesh)
-    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
-    n_pad = -n % n_miners
-    args = jnp.arange(n + n_pad, dtype=jnp.uint32)
+@functools.lru_cache(maxsize=128)
+def _chunk_executor(jash_fn: Callable, mesh: Optional[Mesh],
+                    axes: Tuple[str, ...]):
+    """Compiled full-mode chunk dispatcher, cached on the jash function so
+    repeated ``run_full`` calls (and all chunks within one) reuse one
+    executable instead of re-jitting a fresh closure per call."""
 
-    def eval_all(args_slice):
-        res = jax.vmap(lambda a: _as_words(jash.fn(a)))(args_slice)
+    def eval_chunk(args_slice):
+        res = jax.vmap(lambda a: _as_words(jash_fn(a)))(args_slice)
         msg = jnp.concatenate([args_slice[:, None], res], axis=1)
         hashes = sha256_words(msg)
-        return res, hashes
+        # Merkle leaf = little-endian bytes of (arg, res) words; bswap
+        # re-expresses them in the kernel's big-endian word convention.
+        leaf_digests = sha256_words(bswap32(msg))
+        return res, hashes, leaf_digests
 
     if mesh is not None and axes:
         spec = P(axes)
-        fn = shard_map(eval_all, mesh=mesh, in_specs=(spec,),
-                       out_specs=(spec, spec))
-        with mesh:
-            res, hashes = jax.jit(fn)(args)
+        fn = shard_map(eval_chunk, mesh=mesh, in_specs=(spec,),
+                       out_specs=(spec, spec, spec))
     else:
-        res, hashes = jax.jit(eval_all)(args)
+        fn = eval_chunk
+    return jax.jit(fn)
 
-    res = np.asarray(res)[:n]
-    hashes = np.asarray(hashes)[:n]
-    args_np = np.asarray(args)[:n]
+
+def run_full(jash: Jash, *, mesh: Optional[Mesh] = None,
+             block_reward: float = 1.0,
+             chunk_size: Optional[int] = None) -> FullResult:
+    """Evaluate every valid arg (§3.3 full mode), ``chunk_size`` rows per
+    dispatch (None = whole space in one dispatch, capped at
+    ``DEFAULT_CHUNK``)."""
+    if chunk_size is not None and chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    n = jash.meta.n_args
+    axes = _miner_axes(mesh)
+    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    chunk = min(n, chunk_size or DEFAULT_CHUNK)
+    chunk += -chunk % n_miners                 # dispatch divisible by miners
+    n_chunks = -(-n // chunk)
+
+    jitted = _chunk_executor(jash.fn, mesh, axes)
+    ctx = mesh if (mesh is not None and axes) else None
+
+    # the last chunk is right-sized (rounded up to the miner count) so a
+    # ragged tail doesn't evaluate and hash a whole chunk of discarded args
+    tail = n - (n_chunks - 1) * chunk
+    tail += -tail % n_miners
+
+    res_parts, hash_parts, leaf_parts = [], [], []
+    for c in range(n_chunks):
+        width = chunk if c < n_chunks - 1 else tail
+        args_c = jnp.arange(c * chunk, c * chunk + width, dtype=jnp.uint32)
+        if ctx is not None:
+            with ctx:
+                r, h, d = jitted(args_c)
+        else:
+            r, h, d = jitted(args_c)
+        res_parts.append(np.asarray(r))
+        hash_parts.append(np.asarray(h))
+        leaf_parts.append(np.asarray(d))
+
+    cat = (lambda ps: ps[0][:n] if len(ps) == 1
+           else np.concatenate(ps, axis=0)[:n])
+    res, hashes, leaves = cat(res_parts), cat(hash_parts), cat(leaf_parts)
+    args_np = np.arange(n, dtype=np.uint32)
     miner_of = (args_np % n_miners).astype(np.int32) if n_miners > 1 \
         else np.zeros(n, np.int32)
-    leaves = tuple(
-        args_np[i].tobytes() + res[i].tobytes() for i in range(n))
     return FullResult(args=args_np, results=res, hashes=hashes,
-                      miner_of=miner_of, merkle_leaves=leaves)
+                      miner_of=miner_of, leaf_digests=leaves)
+
+
+MAXW = jnp.uint32(0xFFFFFFFF)
+
+
+def _lex_argmin(w0: jax.Array, w1: jax.Array) -> jax.Array:
+    """Index of the lexicographic minimum of (w0, w1) — first occurrence,
+    single vectorized pass (three reductions, no sort)."""
+    tie = w0 == jnp.min(w0)
+    m1 = jnp.min(jnp.where(tie, w1, MAXW))
+    # `tie & (w1 == m1)` keeps the edge case where every tied w1 is MAXW
+    # from escaping the tie set (a plain argmin over the masked w1 would).
+    return jnp.argmax(tie & (w1 == m1))
 
 
 def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None) -> OptimalResult:
@@ -106,15 +187,12 @@ def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None) -> OptimalResult:
     args = jnp.arange(n + n_pad, dtype=jnp.uint32)
     valid = args < n
 
-    MAXW = jnp.uint32(0xFFFFFFFF)
-
     def eval_and_reduce(args_slice, valid_slice):
         res = jax.vmap(lambda a: _as_words(jash.fn(a)))(args_slice)
         w0 = jnp.where(valid_slice, res[:, 0], MAXW)
         w1 = res[:, 1] if res.shape[1] > 1 else jnp.zeros_like(res[:, 0])
         w1 = jnp.where(valid_slice, w1, MAXW)
-        # lexicographic min on (w0, w1) == "most leading zeros" (§3.3)
-        i = jnp.lexsort((w1, w0))[0]
+        i = _lex_argmin(w0, w1)
         return w0[i], w1[i], args_slice[i], res[i]
 
     if mesh is not None and axes:
@@ -124,7 +202,7 @@ def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None) -> OptimalResult:
             w1g = jax.lax.all_gather(w1, axes)
             argsg = jax.lax.all_gather(arg, axes)
             resg = jax.lax.all_gather(res, axes)
-            best = jnp.lexsort((w1g, w0g))[0]
+            best = _lex_argmin(w0g, w1g)
             return argsg[best], resg[best], best.astype(jnp.int32)
 
         fn = shard_map(sharded, mesh=mesh, in_specs=(P(axes), P(axes)),

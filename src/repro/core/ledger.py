@@ -22,8 +22,27 @@ def sha256_hex(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
 
 
-def merkle_root(leaves: Sequence[bytes]) -> str:
-    """Bitcoin-style Merkle tree (duplicate last node on odd levels)."""
+# Below this leaf count the Python tree wins (no dispatch overhead); above
+# it the batched device reduction does (measured in BENCH_pipeline.json).
+_DEVICE_MIN_LEAVES = 256
+
+
+def merkle_root(leaves: Sequence[bytes], *, backend: str = "auto") -> str:
+    """Bitcoin-style Merkle tree (duplicate last node on odd levels).
+
+    ``backend="hashlib"`` is the reference implementation; ``"device"``
+    runs the level-by-level batched reduction on the SHA-256 kernel
+    (bit-identical, O(log N) fused into one dispatch); ``"auto"`` picks
+    by leaf count."""
+    if backend == "auto":
+        backend = "device" if len(leaves) >= _DEVICE_MIN_LEAVES \
+            else "hashlib"
+    if backend == "device":
+        from repro.kernels.merkle import merkle_root_device
+        return merkle_root_device(leaves)
+    if backend != "hashlib":
+        raise ValueError(f"unknown merkle backend {backend!r} "
+                         "(expected 'auto', 'device' or 'hashlib')")
     if not leaves:
         return sha256_hex(b"")
     level = [hashlib.sha256(x).digest() for x in leaves]
@@ -35,8 +54,18 @@ def merkle_root(leaves: Sequence[bytes]) -> str:
     return level[0].hex()
 
 
-def merkle_proof(leaves: Sequence[bytes], index: int) -> List[Dict]:
+def merkle_proof(leaves: Sequence[bytes], index: int, *,
+                 backend: str = "hashlib") -> List[Dict]:
     """Inclusion proof for ``leaves[index]`` -> list of (side, hash)."""
+    if backend == "auto":
+        backend = "device" if len(leaves) >= _DEVICE_MIN_LEAVES \
+            else "hashlib"
+    if backend == "device":
+        from repro.kernels.merkle import merkle_proof_device
+        return merkle_proof_device(leaves, index)
+    if backend != "hashlib":
+        raise ValueError(f"unknown merkle backend {backend!r} "
+                         "(expected 'auto', 'device' or 'hashlib')")
     level = [hashlib.sha256(x).digest() for x in leaves]
     proof = []
     idx = index

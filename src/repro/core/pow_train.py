@@ -79,18 +79,26 @@ class PoUWTrainer:
                  seed: int = 0, block_microsteps: int = 1,
                  fixed_batch: bool = False) -> None:
         assert mode in ("full", "optimal")
+        if block_microsteps < 1:
+            raise ValueError(
+                f"block_microsteps must be >= 1, got {block_microsteps} "
+                "(a block with no microsteps commits no work)")
         self.cfg, self.shape, self.hp, self.mode = cfg, shape, hp, mode
         self.fixed_batch = fixed_batch
         self.n_miners = n_miners
         self.block_reward = block_reward
         self.pop_size, self.sigma = pop_size, sigma
         self.block_microsteps = block_microsteps
+        self._seed = seed
         self.pipeline = SyntheticTokenPipeline(cfg, shape, seed=seed)
         self.ledger = Ledger()
         self.book = CreditBook()
         self.state = make_train_state(cfg, jax.random.key(seed))
         self._train_step = jax.jit(make_train_step(cfg, hp))
         self._eval_step = jax.jit(make_eval_step(cfg))
+        self._block_step = self._make_block_step(make_train_step(cfg, hp),
+                                                 block_microsteps)
+        self._replay_cache: Dict[int, "PoUWTrainer"] = {}
         eval_fn = make_eval_step(cfg)
         self._es_block = jax.jit(
             lambda params, batch, key: es_mod.es_block(
@@ -113,13 +121,31 @@ class PoUWTrainer:
         self.step_jash.validate(self.state, self.pipeline.batch(0))
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _make_block_step(train_step, n_micro: int):
+        """All of a block's microsteps under one ``lax.scan`` — a single
+        dispatch per block instead of one per microstep, with the incoming
+        train state donated (the block owns its state buffers)."""
+
+        def block_step(state, batch):
+            def body(st, _):
+                st, metrics = train_step(st, batch)
+                return st, metrics
+
+            state, stacked = jax.lax.scan(body, state, None, length=n_micro)
+            return state, jax.tree.map(lambda x: x[-1], stacked)
+
+        # buffer donation is a no-op (warning) on CPU — only ask for it
+        # where XLA implements it
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(block_step, donate_argnums=donate)
+
     def run_block(self) -> BlockRecord:
         step = self.ledger.height
         batch = self.pipeline.batch(0 if self.fixed_batch else step)
 
         if self.mode == "full":
-            for _ in range(self.block_microsteps):
-                self.state, metrics = self._train_step(self.state, batch)
+            self.state, metrics = self._block_step(self.state, batch)
             loss = float(metrics["loss"])
             # every miner's shard-result is a first submission (§3.3)
             leaves = [
@@ -157,14 +183,23 @@ class PoUWTrainer:
         return [self.run_block() for _ in range(n_blocks)]
 
     # ------------------------------------------------------------------
-    def audit_block(self, height: int, seed: int = 0) -> bool:
-        """Verifier path: replay the chain from genesis up to ``height``
-        and compare the recorded state digest (determinism, §3 req. 2)."""
-        replay = PoUWTrainer(self.cfg, self.shape, hp=self.hp,
-                             mode=self.mode, n_miners=self.n_miners,
-                             pop_size=self.pop_size, sigma=self.sigma,
-                             seed=seed,
-                             block_microsteps=self.block_microsteps)
-        for _ in range(height + 1):
-            rec = replay.run_block()
-        return rec.state_digest == self.history[height].state_digest
+    def audit_block(self, height: int, seed: Optional[int] = None) -> bool:
+        """Verifier path: replay the chain up to ``height`` and compare the
+        recorded state digest (determinism, §3 req. 2).  ``seed`` defaults
+        to the trainer's own construction seed.  The replay trainer is
+        cached per seed, so successive audits are incremental — O(delta
+        blocks), not O(height) replay-from-genesis per call."""
+        seed = self._seed if seed is None else seed
+        replay = self._replay_cache.get(seed)
+        if replay is None:
+            replay = PoUWTrainer(self.cfg, self.shape, hp=self.hp,
+                                 mode=self.mode, n_miners=self.n_miners,
+                                 pop_size=self.pop_size, sigma=self.sigma,
+                                 seed=seed,
+                                 block_microsteps=self.block_microsteps,
+                                 fixed_batch=self.fixed_batch)
+            self._replay_cache[seed] = replay
+        while replay.ledger.height <= height:
+            replay.run_block()
+        return (replay.history[height].state_digest
+                == self.history[height].state_digest)

@@ -1,0 +1,265 @@
+"""Batched Merkle-tree reduction on a vectorized SHA-256 (DESIGN.md §6).
+
+The block-commitment hot path: Bitcoin-style Merkle trees (duplicate the
+last node on odd levels) computed level-by-level with a batched SHA-256
+compression instead of per-leaf ``hashlib`` calls.  All wide levels of a
+tree are traced into one jitted function — a root over N leaves is ONE
+device dispatch doing ~2N compressions across lanes instead of 2N
+Python-interpreter round-trips.
+
+Three implementation choices matter for throughput:
+
+- **words-major layout**: the level lives as 8 contiguous rows of width n
+  (one row per digest word), so every round's vector ops stream over
+  contiguous lanes and LLVM/Mosaic can actually vectorize them.
+- **constant padding schedule**: an interior node hashes a 64-byte
+  message, so its second compression block is the *fixed* SHA-256 padding
+  block; its message schedule (and ``K[t] + W[t]``) is precomputed into
+  the ``_KW`` table, cutting that compression's op count by ~40%.
+- **hybrid cutover**: below ``_CUTOVER`` lanes the per-op dispatch cost
+  exceeds the hashing cost, so the narrow top of the tree finishes on the
+  host with ``hashlib`` — bit-identical either way.
+
+Word convention: SHA-256 serializes uint32 words big-endian, and digests
+are big-endian words — so an internal node over two child digests is just
+their 16 words concatenated, and a byte string of length 4k hashes
+identically to its ``>u4`` word view.  ``bswap32`` converts little-endian
+word buffers (e.g. ``np.uint32.tobytes()`` leaves built by the executor)
+into this convention in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import sha256_words
+from repro.kernels.ref import _H0, _K
+
+# Tree levels narrower than this run on the host: at ~64 lanes the
+# fixed per-op dispatch cost of the traced compression exceeds hashlib's
+# per-call cost (measured in BENCH_pipeline.json).
+_CUTOVER = 64
+
+
+def bswap32(x: jax.Array) -> jax.Array:
+    """Byte-swap each uint32 lane (little-endian words -> big-endian)."""
+    x = x.astype(jnp.uint32)
+    return ((x << jnp.uint32(24))
+            | ((x & jnp.uint32(0xFF00)) << jnp.uint32(8))
+            | ((x >> jnp.uint32(8)) & jnp.uint32(0xFF00))
+            | (x >> jnp.uint32(24)))
+
+
+# ---------------------------------------------------------------------------
+# packing: bytes <-> big-endian word arrays
+# ---------------------------------------------------------------------------
+
+
+def pack_leaves(leaves: Sequence[bytes]) -> Optional[np.ndarray]:
+    """Uniform word-aligned leaves -> (N, L//4) big-endian uint32 words.
+
+    Returns None when the leaf set is ragged or not 4-byte aligned (the
+    caller then falls back to hashlib for the leaf level only)."""
+    if not leaves:
+        return None
+    L = len(leaves[0])
+    if L == 0 or L % 4 or any(len(x) != L for x in leaves):
+        return None
+    buf = b"".join(leaves)
+    return np.frombuffer(buf, dtype=">u4").reshape(len(leaves), L // 4) \
+        .astype(np.uint32)
+
+
+def pack_digests(digests: Sequence[bytes]) -> np.ndarray:
+    """32-byte digests -> (N, 8) uint32 word rows."""
+    return np.frombuffer(b"".join(digests), dtype=">u4").reshape(-1, 8) \
+        .astype(np.uint32)
+
+
+def words_to_hex(words: np.ndarray) -> str:
+    """(8,) uint32 digest words -> hex string (big-endian serialization)."""
+    return np.asarray(words, np.uint32).astype(">u4").tobytes().hex()
+
+
+def _words_to_digest_list(level: np.ndarray) -> List[bytes]:
+    buf = np.ascontiguousarray(level.astype(">u4")).tobytes()
+    return [buf[i:i + 32] for i in range(0, len(buf), 32)]
+
+
+# ---------------------------------------------------------------------------
+# vectorized SHA-256 compression, words-major
+# ---------------------------------------------------------------------------
+
+
+def _pad_block_schedule() -> List[int]:
+    """Message schedule of the constant padding block of a 64-byte msg."""
+    w = [0x80000000] + [0] * 14 + [512]
+
+    def rr(x, n):
+        return ((x >> n) | (x << (32 - n))) & 0xFFFFFFFF
+
+    for t in range(16, 64):
+        s0 = rr(w[t - 15], 7) ^ rr(w[t - 15], 18) ^ (w[t - 15] >> 3)
+        s1 = rr(w[t - 2], 17) ^ rr(w[t - 2], 19) ^ (w[t - 2] >> 10)
+        w.append((w[t - 16] + s0 + w[t - 7] + s1) & 0xFFFFFFFF)
+    return w
+
+
+# K[t] + W[t] folded into one constant per round of the padding block
+_KW = tuple((int(k) + w) & 0xFFFFFFFF
+            for k, w in zip(_K, _pad_block_schedule()))
+
+
+def _rotr(x, n):
+    return (x >> jnp.uint32(n)) | (x << jnp.uint32(32 - n))
+
+
+def _round(s, kw):
+    a, b, c, d, e, f, g, h = s
+    S1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+    ch = g ^ (e & (f ^ g))
+    t1 = h + S1 + ch + kw
+    S0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+    maj = (a & b) | (c & (a | b))
+    return (t1 + S0 + maj, a, b, c, d + t1, e, f, g)
+
+
+def _node_hash(w16):
+    """SHA-256 of 64-byte messages given as 16 word rows of (n,) lanes."""
+    n = w16[0].shape[0]
+    init = tuple(jnp.full((n,), h, jnp.uint32) for h in _H0)
+    # block 1: the message, rolling 64-entry schedule
+    w = list(w16)
+    s = init
+    for t in range(64):
+        if t >= 16:
+            s0 = _rotr(w[t - 15], 7) ^ _rotr(w[t - 15], 18) \
+                ^ (w[t - 15] >> jnp.uint32(3))
+            s1 = _rotr(w[t - 2], 17) ^ _rotr(w[t - 2], 19) \
+                ^ (w[t - 2] >> jnp.uint32(10))
+            w.append(w[t - 16] + s0 + w[t - 7] + s1)
+        s = _round(s, w[t] + jnp.uint32(int(_K[t])))
+    mid = tuple(x + y for x, y in zip(init, s))
+    # block 2: constant padding, precomputed K+W schedule
+    s = mid
+    for t in range(64):
+        s = _round(s, jnp.uint32(_KW[t]))
+    return tuple(x + y for x, y in zip(mid, s))
+
+
+# Bounded: each entry is a fully-unrolled executable compiled per leaf
+# count (static shapes are what make the dispatch fast); the bound keeps a
+# workload with many distinct block sizes from accumulating executables
+# forever.
+@functools.lru_cache(maxsize=32)
+def _tree_fn(n: int, keep_levels: bool):
+    """Jitted device reduction of an (8, n) words-major digest level down
+    to width <= ``_CUTOVER``.  Levels are unrolled at trace time (the tree
+    shape is static).  Root path returns only the boundary level; with
+    ``keep_levels`` every intermediate level comes back already odd-padded
+    — exactly the rows a proof's sibling lookup indexes into — except the
+    last (the host continues from it)."""
+
+    def reduce(rows8):
+        rows = [rows8[i] for i in range(8)]      # contiguous (n,) lanes
+        width, levels = n, []
+        while width > _CUTOVER:
+            if width % 2:
+                rows = [jnp.concatenate([r, r[-1:]]) for r in rows]
+                width += 1
+            levels.append(rows)
+            pairs = [r[0::2] for r in rows] + [r[1::2] for r in rows]
+            rows = list(_node_hash(pairs))
+            width //= 2
+        levels.append(rows)
+        if not keep_levels:
+            levels = levels[-1:]
+        return tuple(jnp.stack(lv) for lv in levels)     # (8, m) each
+
+    return jax.jit(reduce)
+
+
+# ---------------------------------------------------------------------------
+# the hybrid tree
+# ---------------------------------------------------------------------------
+
+
+def _host_levels(digests: List[bytes]) -> List[List[bytes]]:
+    """Reference tail: hashlib over a pre-joined buffer, one level a pass."""
+    levels, level = [], list(digests)
+    sha = hashlib.sha256
+    while len(level) > 1:
+        if len(level) % 2:
+            level.append(level[-1])
+        levels.append(level)
+        buf = b"".join(level)
+        level = [sha(buf[i:i + 64]).digest() for i in range(0, len(buf), 64)]
+    levels.append(level)
+    return levels
+
+
+def _hybrid_levels(digests: np.ndarray, *,
+                   keep_levels: bool = True) -> Tuple[List[np.ndarray], str]:
+    """(N, 8) leaf digests -> (padded levels as (m, 8) arrays, root hex)."""
+    n = int(digests.shape[0])
+    if n == 0:
+        return [], hashlib.sha256(b"").hexdigest()
+    device_levels: List[np.ndarray] = []
+    if n > _CUTOVER:
+        rows8 = jnp.asarray(
+            np.ascontiguousarray(np.asarray(digests, np.uint32).T))
+        out = _tree_fn(n, keep_levels)(rows8)
+        device_levels = [np.asarray(lv).T for lv in out[:-1]]
+        boundary = _words_to_digest_list(np.asarray(out[-1]).T)
+    else:
+        boundary = _words_to_digest_list(np.asarray(digests, np.uint32))
+    host = _host_levels(boundary)
+    levels = device_levels + [pack_digests(lv) for lv in host]
+    return levels, host[-1][0].hex()
+
+
+def leaf_digests_device(packed: np.ndarray | jax.Array) -> jax.Array:
+    """(N, W) big-endian word leaves -> (N, 8) leaf digests on device."""
+    return sha256_words(jnp.asarray(packed, jnp.uint32))
+
+
+def _digests_for(leaves: Sequence[bytes]) -> np.ndarray:
+    packed = pack_leaves(leaves)
+    if packed is not None and len(leaves) >= _CUTOVER:
+        return np.asarray(leaf_digests_device(packed))
+    return pack_digests([hashlib.sha256(x).digest() for x in leaves])
+
+
+def merkle_root_from_digests(digests: np.ndarray | jax.Array) -> str:
+    """(N, 8) uint32 leaf-digest words -> root hex."""
+    return _hybrid_levels(np.asarray(digests), keep_levels=False)[1]
+
+
+def merkle_root_device(leaves: Sequence[bytes]) -> str:
+    """Device analogue of ``core.ledger.merkle_root`` — bit-identical."""
+    if not leaves:
+        return hashlib.sha256(b"").hexdigest()
+    return merkle_root_from_digests(_digests_for(leaves))
+
+
+def merkle_levels_device(leaves: Sequence[bytes]) -> List[np.ndarray]:
+    """All (odd-padded) tree levels, leaf digests first, root level last."""
+    return _hybrid_levels(_digests_for(leaves))[0]
+
+
+def merkle_proof_device(leaves: Sequence[bytes], index: int) -> List[dict]:
+    """Inclusion proof in the ``core.ledger`` format, tree built on device."""
+    levels = merkle_levels_device(leaves)
+    proof = []
+    idx = index
+    for level in levels[:-1]:
+        sib = idx ^ 1
+        proof.append({"side": "left" if sib < idx else "right",
+                      "hash": words_to_hex(level[sib])})
+        idx //= 2
+    return proof

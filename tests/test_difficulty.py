@@ -1,5 +1,9 @@
 """Difficulty/work retargeting (§3.1 granularity, §5 limitation)."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.difficulty import DifficultyController, work_for_runtime

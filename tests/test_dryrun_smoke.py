@@ -15,6 +15,7 @@ _SCRIPT = textwrap.dedent("""
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs.base import get_config, reduced, InputShape
+    from repro.core.compat import cost_analysis_dict
     from repro.launch.dryrun import build_step, shardings_for
     from repro.launch.hlo_analysis import collective_bytes
     from repro.sharding.partition import use_rules
@@ -34,7 +35,8 @@ _SCRIPT = textwrap.dedent("""
                                ).lower(*args_sds).compile()
         coll = collective_bytes(compiled.as_text())
         results[arch] = {
-            "flops": compiled.cost_analysis().get("flops", 0.0),
+            "flops": cost_analysis_dict(compiled.cost_analysis())
+                     .get("flops", 0.0),
             "coll": coll["_total_bytes"],
         }
     print("RESULT:" + json.dumps(results))

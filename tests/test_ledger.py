@@ -1,6 +1,9 @@
 """Ledger/Merkle/reward invariants (property-based)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ledger import (Ledger, merkle_proof, merkle_root,

@@ -1,0 +1,109 @@
+"""Device block-commitment pipeline: Merkle parity vs the hashlib
+reference, chunked executor bit-identity, and the scan-fused PoUW block."""
+import hashlib
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import run_full, run_optimal
+from repro.core.jash import Jash, JashMeta
+from repro.core.ledger import (merkle_proof, merkle_root,
+                               verify_merkle_proof)
+from repro.kernels.merkle import (merkle_proof_device, merkle_root_device,
+                                  merkle_root_from_digests, pack_leaves)
+
+
+def _mix_jash(arg_bits=10):
+    def fn(a):
+        return (a * jnp.uint32(2654435761)) ^ jnp.uint32(0xDEADBEEF)
+    return Jash("mix", fn, JashMeta(arg_bits=arg_bits, res_bits=32),
+                example_args=(jnp.uint32(0),))
+
+
+class TestMerkleParity:
+    # 100/300 cross the _CUTOVER boundary, exercising the device levels
+    @pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 13, 31, 64, 100])
+    def test_root_matches_hashlib_ragged(self, n):
+        rng = random.Random(n)
+        leaves = [rng.randbytes(rng.randint(1, 40)) for _ in range(n)]
+        assert merkle_root_device(leaves) == \
+            merkle_root(leaves, backend="hashlib")
+
+    @pytest.mark.parametrize("n", [1, 4, 7, 33, 300])
+    def test_root_matches_hashlib_uniform(self, n):
+        rng = random.Random(n)
+        leaves = [rng.randbytes(36) for _ in range(n)]
+        assert pack_leaves(leaves) is not None       # device leaf path
+        assert merkle_root_device(leaves) == \
+            merkle_root(leaves, backend="hashlib")
+
+    def test_empty_and_backend_switch(self):
+        assert merkle_root([], backend="device") == \
+            merkle_root([], backend="hashlib") == \
+            hashlib.sha256(b"").hexdigest()
+        leaves = [bytes([i % 256]) * 8 for i in range(300)]
+        assert merkle_root(leaves) == merkle_root(leaves, backend="hashlib")
+
+    @pytest.mark.parametrize("n", [2, 5, 8, 13, 100])
+    def test_proof_roundtrip_against_device_root(self, n):
+        rng = random.Random(100 + n)
+        leaves = [rng.randbytes(rng.randint(1, 24)) for _ in range(n)]
+        root = merkle_root_device(leaves)
+        for i in range(n):
+            proof = merkle_proof(leaves, i)
+            assert proof == merkle_proof_device(leaves, i)
+            assert verify_merkle_proof(leaves[i], proof, root)
+            assert not verify_merkle_proof(leaves[i] + b"x", proof, root)
+
+
+class TestChunkedExecutor:
+    def test_chunked_bit_identical(self):
+        j = _mix_jash()
+        a = run_full(j)                        # single dispatch
+        b = run_full(j, chunk_size=100)        # ragged chunking
+        np.testing.assert_array_equal(a.args, b.args)
+        np.testing.assert_array_equal(a.results, b.results)
+        np.testing.assert_array_equal(a.hashes, b.hashes)
+        np.testing.assert_array_equal(a.leaf_digests, b.leaf_digests)
+        assert a.merkle_leaves == b.merkle_leaves
+        assert a.commit_root() == b.commit_root()
+
+    def test_leaf_semantics_match_seed(self):
+        fr = run_full(_mix_jash(arg_bits=6))
+        for i in (0, 31, 63):
+            leaf = fr.args[i].tobytes() + fr.results[i].tobytes()
+            assert fr.merkle_leaves[i] == leaf
+            want = np.frombuffer(hashlib.sha256(leaf).digest(), ">u4")
+            np.testing.assert_array_equal(fr.leaf_digests[i],
+                                          want.astype(np.uint32))
+
+    def test_commit_root_matches_reference(self):
+        fr = run_full(_mix_jash())
+        assert fr.commit_root() == \
+            merkle_root(fr.merkle_leaves, backend="hashlib")
+        assert fr.commit_root() == merkle_root_from_digests(fr.leaf_digests)
+
+    def test_optimal_single_pass_matches_lexsort(self):
+        def fn(a):
+            h = (a * jnp.uint32(0x9E3779B1)) ^ (a >> jnp.uint32(3))
+            return jnp.stack([h % jnp.uint32(7), h ^ jnp.uint32(0xABCD)])
+        j = Jash("two-word", fn, JashMeta(arg_bits=9, res_bits=64),
+                 example_args=(jnp.uint32(0),))
+        fr = run_full(j)
+        opt = run_optimal(j)
+        order = np.lexsort((fr.results[:, 1], fr.results[:, 0]))
+        assert opt.best_arg == int(order[0])
+        np.testing.assert_array_equal(opt.best_res, fr.results[order[0]])
+
+
+class TestBlockMicrostepValidation:
+    def test_zero_microsteps_rejected(self):
+        from repro.configs import get_config, reduced
+        from repro.configs.base import InputShape
+        from repro.core.pow_train import PoUWTrainer
+        with pytest.raises(ValueError, match="block_microsteps"):
+            PoUWTrainer(reduced(get_config("qwen3-0.6b")),
+                        InputShape("t", 32, 4, "train"),
+                        block_microsteps=0)

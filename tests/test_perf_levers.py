@@ -14,6 +14,14 @@ from repro.models.model import build_model
 from repro.sharding.partition import _spec_for, param_specs
 
 
+def _amesh(shape, names):
+    """AbstractMesh across jax versions: (shape, names) vs ((name, n), ...)."""
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
 class TestLeversNumericallyExact:
     """constrain_kv / remat / fsdp must not change model outputs."""
 
@@ -34,25 +42,25 @@ class TestLeversNumericallyExact:
 
 class TestExpertAxis:
     def test_expert_axis_model_default(self):
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = _amesh((16, 16), ("data", "model"))
         spec = _spec_for("layers/moe/experts/w1", (35, 128, 7168, 4864),
                          mesh, True)
         assert spec == P(None, "model", "data", None)
 
     def test_expert_axis_data_moves_tensor_to_model(self):
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = _amesh((16, 16), ("data", "model"))
         spec = _spec_for("layers/moe/experts/w1", (35, 128, 7168, 4864),
                          mesh, True, expert_axis="data")
         assert spec == P(None, "data", None, "model")
 
     def test_fsdp_pod_combines_axes(self):
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = _amesh((2, 16, 16), ("pod", "data", "model"))
         spec = _spec_for("layers/mlp/w1", (35, 7168, 4864), mesh, True,
                          fsdp_pod=True)
         assert spec == P(None, ("pod", "data"), "model")
 
     def test_fsdp_pod_falls_back_when_indivisible(self):
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = _amesh((2, 16, 16), ("pod", "data", "model"))
         # 48 % 32 != 0 -> falls back to plain data sharding (48 % 16 == 0)
         spec = _spec_for("layers/mlp/w1", (48, 64), mesh, True,
                          fsdp_pod=True)
