@@ -1,62 +1,39 @@
-"""PNPCoin quickstart: the complete Fig. 1 pipeline in ~60 lines.
+"""PNPCoin quickstart: the complete Fig. 1 pipeline through the chain API.
 
-A researcher submits the paper's own Collatz example (§3.2) to the
-Runtime Authority; miners run full blocks; the chain falls back to
-Classic SHA-256 blocks (§3.4) when the queue empties; every block is
-verified and rewarded.
+A researcher submits the paper's own Collatz example (§3.2) to a
+``Node``; each ``mine_block()`` publishes, mines, self-verifies, commits
+and rewards one block, falling back to Classic SHA-256 blocks (§3.4)
+when the researcher queue empties.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Migration note (PR 2): the ~40 lines of hand-wired RuntimeAuthority +
+Ledger + CreditBook + run_full + quorum_verify + reward_* glue this
+script used to carry now live behind ``repro.chain.Node`` — see
+DESIGN.md §7.  ``repro.core.*`` remains available as the kernel layer.
 """
-import jax.numpy as jnp
-
-from repro.core.authority import RuntimeAuthority
-from repro.core.executor import run_full, run_optimal
+from repro.chain import Node
 from repro.core.jash import Jash, JashMeta, collatz_jash
-from repro.core.ledger import Ledger, merkle_root
-from repro.core.rewards import CreditBook, reward_full, reward_optimal
-from repro.core.verify import quorum_verify
 
-ra = RuntimeAuthority()
-ledger = Ledger()
-book = CreditBook()
+node = Node(classic_arg_bits=10)
 
 # --- researcher submits the paper's Fig. 2->3 Collatz jash ----------------
 base = collatz_jash(max_steps=512)
-report = ra.submit(Jash(base.name, base.fn,
-                        JashMeta(arg_bits=10, res_bits=32, importance=0.8,
-                                 description="Collatz stopping times"),
-                        example_args=base.example_args))
+report = node.submit(Jash(base.name, base.fn,
+                          JashMeta(arg_bits=10, res_bits=32, importance=0.8,
+                                   description="Collatz stopping times"),
+                          example_args=base.example_args))
 print(f"RA review: compiled={report.compiled} "
       f"runtime={report.runtime_mean_s * 1e3:.2f}ms "
       f"priority={report.priority:.3g}")
 
-# --- three blocks: queued jash, then Classic fallback ---------------------
-for height in range(3):
-    jash, source = ra.publish_next()
-    if source == "classic":
-        jash = Jash(jash.name, jash.fn,
-                    JashMeta(arg_bits=10, res_bits=256),
-                    example_args=jash.example_args)
-        opt = run_optimal(jash)
-        ledger.append(jash_id=jash.source_id(), mode="classic",
-                      merkle=merkle_root([opt.best_res.tobytes()]),
-                      winner=opt.winner,
-                      best_res=opt.best_res.tobytes().hex()[:16],
-                      n_results=opt.n_evaluated)
-        reward_optimal(book, opt.winner, 50.0)
-        print(f"block {height}: CLASSIC sha256, winner arg={opt.best_arg} "
-              f"res={opt.best_res.tobytes().hex()[:16]}…")
-    else:
-        full = run_full(jash)
-        assert quorum_verify(jash, full, fraction=0.1).ok
-        ledger.append(jash_id=jash.source_id(), mode="full",
-                      merkle=merkle_root(full.merkle_leaves), winner=None,
-                      best_res=None, n_results=len(full.args))
-        reward_full(book, full.miner_of.tolist(), 50.0)
-        longest = int(full.results[:, 0].max())
-        arg = int(full.args[full.results[:, 0].argmax()])
-        print(f"block {height}: FULL {jash.name}, {len(full.args)} args; "
-              f"longest stopping time {longest} at n={arg}")
+# --- three blocks: the queued jash (full mode), then Classic fallback -----
+for _ in range(3):
+    r = node.mine_block()
+    print(f"block {r.record.height}: {r.record.workload.upper():8s} "
+          f"{r.record.n_results} results, root={r.record.merkle_root[:16]}… "
+          f"mined+verified in {r.block_time_s:.2f}s")
 
-print(f"\nledger verified: {ledger.verify_chain()}  tip={ledger.tip_hash[:16]}…")
-print(f"credits issued: {book.total_issued} across {len(book.balances)} miners")
+s = node.state()
+print(f"\nledger verified: {s.chain_valid}  tip={s.tip_hash[:16]}…")
+print(f"credits issued: {s.total_issued} across {len(s.balances)} miners")

@@ -1,19 +1,50 @@
-"""End-to-end driver (deliverable (b)): train the ~30M-param pnpcoin-demo
-LM for a few hundred PoUW blocks on CPU — one block per training step,
-checkpoint digests chained into the ledger, miners credited.
+"""End-to-end PoUW training through the chain API (deliverable (b)):
+train the ~30M-param pnpcoin-demo LM for a few hundred blocks on CPU —
+each block one training step mined by a ``Node`` carrying a
+``TrainingWorkload``, state digests chained into the ledger, miners
+credited.
 
   PYTHONPATH=src python examples/train_pnp.py [--blocks 300]
 
-(This is a thin veneer over ``repro.launch.train``; see that module for
-the full CLI.)
+Migration note (PR 2): this script used to shell out to
+``repro.launch.train``; it now drives ``repro.chain.Node`` directly.
+``repro.launch.train`` remains the full-featured CLI (checkpoint blocks,
+ledger/credits export).
 """
-import sys
+import argparse
 
-from repro.launch.train import main
+from repro.chain import Node, TrainingWorkload
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.pow_train import PoUWTrainer
+from repro.train.steps import TrainHparams
 
-if __name__ == "__main__":
-    argv = sys.argv[1:] or []
-    main(["--arch", "pnpcoin-demo", "--blocks", "300", "--batch", "16",
-          "--seq", "128", "--mode", "full", "--miners", "8",
-          "--lr", "1e-3", "--ckpt-every", "150",
-          "--out", "experiments/train_pnp", *argv])
+ap = argparse.ArgumentParser()
+ap.add_argument("--blocks", type=int, default=300)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--miners", type=int, default=8)
+ap.add_argument("--lr", type=float, default=1e-3)
+args = ap.parse_args()
+
+cfg = get_config("pnpcoin-demo")
+shape = InputShape("cli", args.seq, args.batch, "train")
+hp = TrainHparams(peak_lr=args.lr, warmup_steps=max(args.blocks // 20, 5),
+                  total_steps=args.blocks)
+node = Node(workloads={"training": TrainingWorkload(
+    lambda: PoUWTrainer(cfg, shape, hp=hp, mode="full",
+                        n_miners=args.miners))})
+
+for b in range(args.blocks):
+    r = node.mine_block("training")
+    if b % 10 == 0 or b == args.blocks - 1:
+        print(f"block {r.record.height:4d} loss={r.payload.loss:.4f} "
+              f"chain={r.record.block_hash[:12]} ({r.block_time_s:.2f}s)",
+              flush=True)
+
+s = node.state()
+assert s.chain_valid
+losses = [p.loss for p in node.chain_payloads()]
+print(f"done: {args.blocks} blocks, loss {losses[0]:.4f} -> "
+      f"{losses[-1]:.4f}, credits issued {s.total_issued:.1f}, "
+      f"chain verified.")

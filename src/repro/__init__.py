@@ -1,0 +1,14 @@
+"""PNPCoin reproduction: distributed useful-work computing on Bitcoin
+infrastructure (Kolar, 2022), on JAX.
+
+The stable public surface is the chain API::
+
+    from repro import Node, Network, Workload
+
+``repro.core`` (kernel layer), ``repro.kernels`` (device SHA-256 /
+Merkle), ``repro.models`` / ``repro.train`` (PoUW payload models) sit
+underneath and move faster; import them directly when you need them.
+"""
+from repro.chain import BlockRecord, Network, Node, Workload
+
+__all__ = ["BlockRecord", "Network", "Node", "Workload"]

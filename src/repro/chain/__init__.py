@@ -1,0 +1,38 @@
+"""``repro.chain`` — the public Node/Network API over the PNPCoin loop.
+
+Layering (DESIGN.md §7)::
+
+    repro.core.*   stable kernel layer (executor, ledger, rewards, verify)
+    repro.chain.*  the protocol: Workload payloads, Node facade, Network
+    examples/      thin scripts over repro.chain
+
+Start here::
+
+    from repro.chain import Node
+    node = Node()
+    node.submit(my_jash)
+    receipt = node.mine_block()
+"""
+from repro.chain.network import BroadcastResult, Network
+from repro.chain.node import BlockReceipt, BlockRecord, Node, NodeState
+from repro.chain.workload import (
+    BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
+    JashFullWorkload, JashOptimalWorkload, TrainingWorkload, Workload,
+)
+
+__all__ = [
+    "BlockContext",
+    "BlockPayload",
+    "BlockReceipt",
+    "BlockRecord",
+    "BroadcastResult",
+    "ChainError",
+    "ClassicSha256Workload",
+    "JashFullWorkload",
+    "JashOptimalWorkload",
+    "Network",
+    "Node",
+    "NodeState",
+    "TrainingWorkload",
+    "Workload",
+]

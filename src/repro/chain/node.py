@@ -1,0 +1,314 @@
+"""The ``Node``: one PNPCoin participant, the Fig. 1 loop behind a facade.
+
+Composes the Runtime Authority (review + publication), the Ledger
+(chained commitments), the CreditBook (rewards) and the
+DifficultyController (§3.1/§5 args-per-block retargeting) behind four
+calls::
+
+    node = Node()
+    node.submit(jash)          # researcher -> RA review
+    receipt = node.mine_block()  # publish -> mine -> verify -> commit
+    node.audit(height)         # re-verify any committed block
+    node.state()               # typed snapshot of the whole node
+
+Every committed block is self-verified *before* it is appended — a node
+never extends its own chain with a payload a peer would reject.  The
+``receive``/``consider_chain`` pair is the peer-side protocol
+``chain/network.py`` drives: bit-exact re-verification on receive, and
+longest-valid-chain fork choice when tips diverge.
+
+``repro.core.*`` stays the stable kernel layer underneath; nothing here
+reaches around the public surfaces of executor/ledger/rewards/verify.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.authority import ReviewReport, RuntimeAuthority
+from repro.core.difficulty import DifficultyController
+from repro.core.jash import Jash
+from repro.core.ledger import Block, Ledger
+from repro.core.rewards import CreditBook
+from repro.chain.workload import (
+    BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
+    JashFullWorkload, JashOptimalWorkload, RewardEntries, Workload,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRecord:
+    """Typed view of one committed block (replaces the positional
+    ``ledger.append(...)`` kwargs soup at the API boundary)."""
+    height: int
+    prev_hash: str
+    block_hash: str
+    workload: str
+    jash_id: str
+    merkle_root: str
+    winner: Optional[int]
+    best_res: Optional[str]
+    n_results: int
+    state_digest: str
+
+    @classmethod
+    def from_block(cls, blk: Block) -> "BlockRecord":
+        return cls(height=blk.height, prev_hash=blk.prev_hash,
+                   block_hash=blk.block_hash, workload=blk.mode,
+                   jash_id=blk.jash_id, merkle_root=blk.merkle_root,
+                   winner=blk.winner, best_res=blk.best_res,
+                   n_results=blk.n_results, state_digest=blk.state_digest)
+
+    def to_block(self) -> Block:
+        """The ledger ``Block`` this record describes (what goes on the
+        wire; the content hash is timestamp-free so it round-trips)."""
+        return Block(height=self.height, prev_hash=self.prev_hash,
+                     jash_id=self.jash_id, mode=self.workload,
+                     merkle_root=self.merkle_root, winner=self.winner,
+                     best_res=self.best_res, n_results=self.n_results,
+                     state_digest=self.state_digest)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockReceipt:
+    """What ``mine_block`` hands back: the committed record, the payload
+    evidence (what peers re-verify), and the credits it minted.  A
+    receipt only exists for a block that passed self-verification —
+    ``mine_block`` raises ``ChainError`` otherwise."""
+    record: BlockRecord
+    payload: BlockPayload
+    rewards: RewardEntries
+    block_time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeState:
+    node_id: int
+    height: int
+    tip_hash: str
+    queue_depth: int
+    work: Optional[int]
+    total_issued: float
+    balances: Dict[int, float]
+    chain_valid: bool
+
+
+class Node:
+    """One PNPCoin node: RA + ledger + credits + difficulty + workloads."""
+
+    def __init__(self, *, node_id: int = 0,
+                 workloads: Optional[Dict[str, Workload]] = None,
+                 block_reward: float = 50.0,
+                 classic_arg_bits: int = 10,
+                 target_block_s: Optional[float] = None,
+                 work: Optional[int] = None,
+                 mesh: Optional[object] = None,
+                 ra: Optional[RuntimeAuthority] = None) -> None:
+        self.node_id = node_id
+        self.block_reward = block_reward
+        self.mesh = mesh
+        self.ra = ra if ra is not None else RuntimeAuthority()
+        self.ledger = Ledger()
+        self.book = CreditBook()
+        self.workloads: Dict[str, Workload] = {
+            "full": JashFullWorkload(),
+            "optimal": JashOptimalWorkload(),
+            "classic": ClassicSha256Workload(arg_bits=classic_arg_bits),
+        }
+        if workloads:
+            self.workloads.update(workloads)
+        if target_block_s is not None and work is None:
+            raise ValueError(
+                "target_block_s without an initial work target is a no-op "
+                "retargeter — pass work= (e.g. from "
+                "repro.core.difficulty.work_for_runtime) as well")
+        self.work = work
+        self.difficulty = (DifficultyController(target_block_s=target_block_s)
+                           if target_block_s is not None else None)
+        self._payloads: Dict[int, BlockPayload] = {}
+
+    # -- researcher side ----------------------------------------------
+    def submit(self, jash: Jash, veto: bool = False) -> ReviewReport:
+        """Researcher submission -> the RA's §3.3 review pipeline."""
+        return self.ra.submit(jash, veto=veto)
+
+    # -- mining side --------------------------------------------------
+    def mine_block(self, workload: Optional[str] = None) -> BlockReceipt:
+        """Publish -> mine -> self-verify -> commit -> reward, one block.
+
+        ``workload=None`` follows the paper's default policy: pop the
+        RA queue and run **full** mode, falling back to **classic**
+        SHA-256 when the queue is empty (§3.4).  Pass "optimal",
+        "training" or "classic" to select the payload explicitly.
+        """
+        t0 = time.perf_counter()
+        if workload in (None, "full", "optimal"):
+            jash, source = self.ra.publish_next()
+            if source == "queued":
+                name = workload or "full"
+            elif workload is None:
+                name = "classic"            # §3.4 fallback, default policy
+            else:
+                raise ChainError(
+                    f"workload {workload!r} requested explicitly but the "
+                    "RA queue is empty — submit a jash first or mine with "
+                    "the default policy (workload=None) for the classic "
+                    "fallback")
+        else:
+            if workload not in self.workloads:
+                raise ChainError(f"unknown workload {workload!r} "
+                                 f"(have {sorted(self.workloads)})")
+            jash, source, name = None, workload, workload
+
+        wl = self.workloads[name]
+        ctx = BlockContext(height=self.ledger.height,
+                           prev_hash=self.ledger.tip_hash,
+                           node_id=self.node_id, jash=jash, source=source,
+                           work=self.work, block_reward=self.block_reward,
+                           mesh=self.mesh)
+        try:
+            payload = wl.mine(wl.prepare(ctx))
+            ok = wl.verify(payload)
+        except Exception:
+            if source == "queued":
+                self.ra.requeue(jash)       # don't lose the submission
+            raise
+        if not ok:
+            if source == "queued":
+                self.ra.requeue(jash)
+            raise ChainError(
+                f"self-mined {name} block at height {ctx.height} failed "
+                "verification — refusing to commit")
+        record, rewards = self._commit(payload)
+
+        dt = time.perf_counter() - t0
+        if self.difficulty is not None:
+            self.difficulty.observe(dt)
+            if self.work is not None:
+                self.work = self.difficulty.propose_work(self.work)
+        return BlockReceipt(record=record, payload=payload, rewards=rewards,
+                            block_time_s=dt)
+
+    def _commit(self, payload: BlockPayload
+                ) -> Tuple[BlockRecord, RewardEntries]:
+        blk = self.ledger.append(
+            jash_id=payload.jash_id, mode=payload.workload,
+            merkle=payload.merkle_root, winner=payload.winner,
+            best_res=payload.best_res, n_results=payload.n_results,
+            state_digest=payload.state_digest)
+        self._payloads[blk.height] = payload
+        rewards = self.workloads[payload.workload].reward(self.book, payload)
+        return BlockRecord.from_block(blk), rewards
+
+    # -- verifier side ------------------------------------------------
+    def audit(self, height: int) -> bool:
+        """Re-verify a committed block: header fields must match the
+        payload and the payload must re-verify bit-exactly (§3 req. 2)."""
+        if not 0 <= height < self.ledger.height:
+            raise ChainError(f"no block at height {height}")
+        blk = self.ledger.blocks[height]
+        payload = self._payloads.get(height)
+        if payload is None:
+            return False
+        return (self._payload_matches(blk, payload)
+                and self.workloads[payload.workload].verify(payload))
+
+    def _payload_matches(self, blk: Block, payload: BlockPayload) -> bool:
+        return (blk.jash_id == payload.jash_id
+                and blk.mode == payload.workload
+                and blk.merkle_root == payload.merkle_root
+                and blk.winner == payload.winner
+                and blk.best_res == payload.best_res
+                and blk.n_results == payload.n_results
+                and blk.state_digest == payload.state_digest
+                and payload.workload in self.workloads)
+
+    # -- peer protocol (driven by chain/network.py) -------------------
+    def receive(self, block: Block, payload: BlockPayload,
+                origin: Optional[int] = None) -> bool:
+        """Accept a broadcast block iff it extends our tip and the payload
+        re-verifies bit-exactly.  Returns False on any mismatch (the
+        network layer then falls back to ``consider_chain``).
+
+        Reward-determining payload fields are enforced here, not in the
+        workload: ``block_reward`` must equal this node's configured
+        reward (a consensus parameter — a payload claiming more mints
+        nothing), and when ``origin`` is given (the network layer passes
+        the actual sender, the in-process stand-in for a block
+        signature) the payload may not claim someone else's lane."""
+        if (block.height != self.ledger.height
+                or block.prev_hash != self.ledger.tip_hash):
+            return False
+        if payload.block_reward != self.block_reward:
+            return False
+        if origin is not None and payload.origin != origin:
+            return False
+        if not self._payload_matches(block, payload):
+            return False
+        wl = self.workloads.get(payload.workload)
+        if wl is None or not wl.verify(payload):
+            return False
+        self._commit(payload)
+        return True
+
+    def consider_chain(self, blocks: Sequence[Block],
+                       payloads: Sequence[BlockPayload]) -> bool:
+        """Longest-valid-chain fork choice: adopt a competing chain iff it
+        is strictly longer, links from genesis, and every payload
+        re-verifies.  The ledger and credit book are rebuilt from the
+        adopted payloads (credits follow the chain, not the node)."""
+        if len(blocks) <= self.ledger.height or len(blocks) != len(payloads):
+            return False
+        # the block reward is a consensus parameter; origin attribution
+        # inside a relayed chain is a signature problem (out of scope for
+        # the in-process network) and is NOT re-checked here
+        if any(p.block_reward != self.block_reward for p in payloads):
+            return False
+        prev = Ledger.GENESIS_HASH
+        for i, (blk, payload) in enumerate(zip(blocks, payloads)):
+            if (blk.height != i or blk.prev_hash != prev
+                    or not self._payload_matches(blk, payload)):
+                return False
+            prev = blk.block_hash
+        # Stateful workloads (training) advance while verifying.  Reset
+        # them to genesis first so the candidate chain is replayed from
+        # scratch and, on adoption, their state reflects exactly the
+        # adopted chain's content (a fork that discards a local training
+        # block must rewind the trainer too, or the node's future blocks
+        # are unverifiable by peers).  Snapshots roll everything back if
+        # a payload fails mid-chain.
+        snaps = [(wl, wl.snapshot()) for wl in self.workloads.values()
+                 if hasattr(wl, "snapshot")]
+        for swl, _ in snaps:
+            swl.reset()
+        for payload in payloads:
+            wl = self.workloads.get(payload.workload)
+            if wl is None or not wl.verify(payload):
+                for swl, snap in snaps:
+                    swl.restore(snap)
+                return False
+        self.ledger = Ledger()
+        self.book = CreditBook()
+        self._payloads = {}
+        for payload in payloads:
+            self._commit(payload)
+        return True
+
+    # -- introspection ------------------------------------------------
+    def state(self) -> NodeState:
+        return NodeState(node_id=self.node_id, height=self.ledger.height,
+                         tip_hash=self.ledger.tip_hash,
+                         queue_depth=self.ra.queue_depth, work=self.work,
+                         total_issued=self.book.total_issued,
+                         balances=dict(self.book.balances),
+                         chain_valid=self.ledger.verify_chain())
+
+    @property
+    def records(self) -> List[BlockRecord]:
+        return [BlockRecord.from_block(b) for b in self.ledger.blocks]
+
+    def chain_payloads(self) -> List[BlockPayload]:
+        """Payload evidence for every committed block, chain order (what
+        a peer pulls to run fork choice)."""
+        return [self._payloads[h] for h in range(self.ledger.height)]

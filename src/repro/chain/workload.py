@@ -1,0 +1,399 @@
+"""The ``Workload`` protocol: what a block's useful work *is*.
+
+PNPCoin frames mining as "execute the published jash over its argument
+space" (§3.3), but the paper admits four distinct block payloads:
+
+  * **full**     — every arg evaluated, Merkle-committed, reward split
+                   across first submissions (+§4 leading-zeros bonus);
+  * **optimal**  — distributed argmin, winner takes the block;
+  * **training** — the flagship §1 payload: one PoUW train step per
+                   block, state digest chained into the ledger;
+  * **classic**  — §3.4 back-compatibility: double-SHA-256 blocks when
+                   the researcher queue is empty.
+
+Each is a ``Workload``: ``prepare(ctx) -> PreparedWork`` (resolve the
+published jash against the block's work target), ``mine(work) ->
+BlockPayload`` (produce the commitment + evidence), ``verify(payload)
+-> bool`` (bit-exact re-execution — the §3 req. 2 determinism audit any
+peer runs on receive), and ``reward(book, payload)`` (credit miners,
+deterministically derivable from the payload so every node's book
+agrees).  ``chain/node.py`` drives the four against one ledger;
+``chain/network.py`` replays them across peers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.authority import classic_jash
+from repro.core.executor import FullResult, run_full, run_optimal
+from repro.core.jash import Jash, JashMeta
+from repro.core.ledger import merkle_root
+from repro.core.rewards import CreditBook, reward_full, reward_optimal
+from repro.core.verify import quorum_verify
+
+# Global miner-id lane: chain-level miner id = node_id * MINER_LANE +
+# local device index, so per-node credit books agree on who earned what
+# without coordinating id allocation.
+MINER_LANE = 1 << 16
+
+
+def global_miner(node_id: int, local: int) -> int:
+    return int(node_id) * MINER_LANE + int(local)
+
+
+class ChainError(RuntimeError):
+    """A block failed verification or could not be committed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockContext:
+    """Everything a workload needs to know about the block being mined."""
+    height: int
+    prev_hash: str
+    node_id: int = 0
+    jash: Optional[Jash] = None        # RA publication ("queued"/"classic")
+    source: str = "queued"
+    work: Optional[int] = None         # args-per-block target (§3.1/§5)
+    block_reward: float = 50.0
+    mesh: Optional[object] = None      # jax Mesh for the miner fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedWork:
+    """A resolved block assignment: the exact jash the miners will run."""
+    ctx: BlockContext
+    jash: Optional[Jash]
+
+
+@dataclasses.dataclass
+class BlockPayload:
+    """Block commitment + in-process evidence.
+
+    The committed fields (``jash_id`` .. ``state_digest``) are what the
+    ledger header signs; the evidence fields carry enough for a peer to
+    re-verify bit-exactly (in-process today, serialized on the wire
+    later).
+    """
+    workload: str                      # "full"|"optimal"|"training"|"classic"
+    jash_id: str
+    merkle_root: str
+    n_results: int
+    winner: Optional[int] = None       # global miner id
+    best_res: Optional[str] = None
+    state_digest: str = ""
+    origin: int = 0                    # node id that mined the block
+    block_reward: float = 50.0
+    # evidence ----------------------------------------------------------
+    jash: Optional[Jash] = None
+    full: Optional[FullResult] = None
+    best_arg: Optional[int] = None
+    loss: Optional[float] = None
+    train_height: Optional[int] = None
+    n_miners: int = 1
+
+
+RewardEntries = Tuple[Tuple[int, float], ...]
+
+
+def _apply_rewards(book: CreditBook, staged: CreditBook) -> RewardEntries:
+    """Merge a staged book into ``book`` and return the applied entries."""
+    entries = tuple(sorted(staged.balances.items()))
+    for miner, amount in entries:
+        book.credit(miner, amount)
+    return entries
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """The block-payload contract every mining mode implements.
+
+    Stateful workloads (whose ``verify`` advances local state, like
+    training) should additionally expose ``snapshot()``/``restore(snap)``
+    so fork choice can roll them back when a candidate chain fails
+    mid-verification."""
+    name: str
+
+    def prepare(self, ctx: BlockContext) -> PreparedWork: ...
+
+    def mine(self, work: PreparedWork) -> BlockPayload: ...
+
+    def verify(self, payload: BlockPayload) -> bool: ...
+
+    def reward(self, book: CreditBook, payload: BlockPayload
+               ) -> RewardEntries: ...
+
+
+# ---------------------------------------------------------------------------
+# full mode
+# ---------------------------------------------------------------------------
+
+
+def _sized(jash: Jash, work: Optional[int]) -> Jash:
+    """Re-publish ``jash`` with the controller's args-per-block target
+    (§3.1 granularity: ``max_arg`` trims below the power-of-two bound)."""
+    if work is None or work >= jash.meta.n_args:
+        return jash
+    meta = dataclasses.replace(jash.meta, max_arg=max(int(work), 1))
+    return Jash(jash.name, jash.fn, meta, example_args=jash.example_args)
+
+
+class JashFullWorkload:
+    """§3.3 full execution: every valid arg, Merkle-committed, reward
+    split over first submissions with the §4 leading-zeros bonus."""
+
+    name = "full"
+
+    def __init__(self, *, verify_fraction: float = 0.25,
+                 bonus_fraction: float = 0.1) -> None:
+        self.verify_fraction = verify_fraction
+        self.bonus_fraction = bonus_fraction
+
+    def prepare(self, ctx: BlockContext) -> PreparedWork:
+        if ctx.jash is None:
+            raise ChainError("full workload needs a published jash")
+        return PreparedWork(ctx, _sized(ctx.jash, ctx.work))
+
+    def mine(self, work: PreparedWork) -> BlockPayload:
+        ctx, jash = work.ctx, work.jash
+        full = run_full(jash, mesh=ctx.mesh)
+        return BlockPayload(
+            workload=self.name, jash_id=jash.source_id(),
+            merkle_root=full.commit_root(), n_results=len(full.args),
+            origin=ctx.node_id, block_reward=ctx.block_reward,
+            jash=jash, full=full)
+
+    def verify(self, payload: BlockPayload) -> bool:
+        full = payload.full
+        if full is None or payload.jash is None:
+            return False
+        if payload.jash.source_id() != payload.jash_id:
+            return False            # committed id must match the evidence
+        # independent root recomputation (hashlib, NOT the device kernel
+        # that produced the commitment) from the raw (arg, res) arrays —
+        # catches tampered roots, tampered leaf digests, and device-kernel
+        # bugs alike …
+        if merkle_root(list(full.merkle_leaves),
+                       backend="hashlib") != payload.merkle_root:
+            return False
+        # … and deterministic re-execution catches tampered results.
+        return quorum_verify(payload.jash, full,
+                             fraction=self.verify_fraction).ok
+
+    def reward(self, book: CreditBook, payload: BlockPayload
+               ) -> RewardEntries:
+        full = payload.full
+        staged = CreditBook()
+        submitters = [global_miner(payload.origin, m)
+                      for m in full.miner_of]
+        # §4: the miner whose submission hash has the most leading zeros
+        # takes a bonus slice — lexicographic min over sha256(arg || res),
+        # single pass per word with early exit (no O(n log n) sort).
+        bonus = None
+        if self.bonus_fraction > 0.0 and len(full.hashes):
+            idx = np.arange(len(full.hashes))
+            for col in range(full.hashes.shape[1]):
+                word = full.hashes[idx, col]
+                idx = idx[word == word.min()]
+                if len(idx) == 1:
+                    break
+            bonus = global_miner(payload.origin,
+                                 int(full.miner_of[idx[0]]))
+        reward_full(staged, submitters, payload.block_reward,
+                    bonus_winner=bonus, bonus_fraction=self.bonus_fraction)
+        return _apply_rewards(book, staged)
+
+
+# ---------------------------------------------------------------------------
+# optimal mode
+# ---------------------------------------------------------------------------
+
+
+class JashOptimalWorkload:
+    """§3.3 optimal execution: lowest res wins the whole block reward."""
+
+    name = "optimal"
+
+    def prepare(self, ctx: BlockContext) -> PreparedWork:
+        if ctx.jash is None:
+            raise ChainError("optimal workload needs a published jash")
+        return PreparedWork(ctx, _sized(ctx.jash, ctx.work))
+
+    def mine(self, work: PreparedWork) -> BlockPayload:
+        ctx, jash = work.ctx, work.jash
+        opt = run_optimal(jash, mesh=ctx.mesh)
+        leaf = (np.uint32(opt.best_arg).tobytes()
+                + opt.best_res.astype("<u4").tobytes())
+        return BlockPayload(
+            workload=self.name, jash_id=jash.source_id(),
+            merkle_root=merkle_root([leaf]), n_results=opt.n_evaluated,
+            winner=global_miner(ctx.node_id, opt.winner),
+            best_res=opt.best_res.tobytes().hex(),
+            origin=ctx.node_id, block_reward=ctx.block_reward,
+            jash=jash, best_arg=opt.best_arg)
+
+    def verify(self, payload: BlockPayload) -> bool:
+        if payload.jash is None:
+            return False
+        if payload.jash.source_id() != payload.jash_id:
+            return False            # committed id must match the evidence
+        # the winner's device index needs the miner's mesh to re-derive,
+        # but its *lane* must belong to the claimed origin — a payload
+        # crediting someone else's lane is rejected outright
+        if (payload.winner is None
+                or payload.winner // MINER_LANE != payload.origin):
+            return False
+        opt = run_optimal(payload.jash)      # determinism, §3 req. 2
+        leaf = (np.uint32(opt.best_arg).tobytes()
+                + opt.best_res.astype("<u4").tobytes())
+        return (opt.best_arg == payload.best_arg
+                and opt.best_res.tobytes().hex() == payload.best_res
+                and merkle_root([leaf]) == payload.merkle_root)
+
+    def reward(self, book: CreditBook, payload: BlockPayload
+               ) -> RewardEntries:
+        staged = CreditBook()
+        reward_optimal(staged, payload.winner, payload.block_reward)
+        return _apply_rewards(book, staged)
+
+
+# ---------------------------------------------------------------------------
+# classic fallback (§3.4)
+# ---------------------------------------------------------------------------
+
+
+class ClassicSha256Workload(JashOptimalWorkload):
+    """§3.4 back-compatibility: when the researcher queue is empty the
+    chain mines plain double-SHA-256 blocks — an optimal-mode search over
+    a bounded nonce space."""
+
+    name = "classic"
+
+    def __init__(self, *, arg_bits: int = 10) -> None:
+        self.arg_bits = arg_bits
+
+    def prepare(self, ctx: BlockContext) -> PreparedWork:
+        base = ctx.jash if ctx.jash is not None else classic_jash()
+        jash = Jash(base.name, base.fn,
+                    JashMeta(arg_bits=self.arg_bits, res_bits=256,
+                             description=base.meta.description),
+                    example_args=base.example_args)
+        return PreparedWork(ctx, _sized(jash, ctx.work))
+
+
+# ---------------------------------------------------------------------------
+# training (PoUW) mode
+# ---------------------------------------------------------------------------
+
+
+class TrainingWorkload:
+    """The §1 flagship payload: each block is one (or ``block_microsteps``)
+    deterministic train step(s); the post-step state digest is the
+    chained commitment.
+
+    Verification *is* re-execution: a peer receiving a training block
+    advances its own (identically seeded) trainer one block and compares
+    digests bit-exactly (§3 req. 2) — the audit doubles as state sync, so
+    every node holds the model the chain says it should.  A failed
+    verify rolls the local trainer back, leaving state untouched.
+    """
+
+    name = "training"
+
+    def __init__(self, trainer_factory) -> None:
+        self._factory = trainer_factory
+        self._trainer = None
+        self._self_check = None
+
+    @property
+    def trainer(self):
+        if self._trainer is None:
+            self._trainer = self._factory()
+        return self._trainer
+
+    def reset(self) -> None:
+        """Back to genesis: the next access rebuilds the trainer from the
+        factory (deterministic by seed).  Fork choice calls this so an
+        adopted chain is replayed from scratch and discarded local
+        training blocks are truly unwound."""
+        self._trainer = None
+        self._self_check = None
+
+    # -- trainer state is functional (immutable pytrees), so a snapshot
+    #    is just the current references; the internal credit book is
+    #    included so a rolled-back verify mints nothing ----------------
+    def snapshot(self):
+        t = self.trainer
+        return (t.state, t.key, list(t.ledger.blocks), list(t.history),
+                dict(t.book.balances), t.book.total_issued)
+
+    def restore(self, snap) -> None:
+        t = self.trainer
+        t.state, t.key = snap[0], snap[1]
+        t.ledger.blocks = snap[2]
+        t.history = snap[3]
+        t.book.balances = snap[4]
+        t.book.total_issued = snap[5]
+
+    def prepare(self, ctx: BlockContext) -> PreparedWork:
+        return PreparedWork(ctx, self.trainer.step_jash)
+
+    def mine(self, work: PreparedWork) -> BlockPayload:
+        ctx = work.ctx
+        t = self.trainer
+        rec = t.run_block()
+        blk = t.ledger.blocks[rec.height]
+        self._self_check = payload = BlockPayload(
+            workload=self.name, jash_id=blk.jash_id,
+            merkle_root=blk.merkle_root, n_results=blk.n_results,
+            winner=(None if blk.winner is None
+                    else global_miner(ctx.node_id, blk.winner)),
+            best_res=blk.best_res, state_digest=rec.state_digest,
+            origin=ctx.node_id, block_reward=ctx.block_reward,
+            loss=rec.loss, train_height=rec.height, n_miners=t.n_miners)
+        return payload
+
+    def verify(self, payload: BlockPayload) -> bool:
+        t = self.trainer
+        h = payload.train_height
+        if h is None or h > t.ledger.height:
+            return False                      # out-of-order: can't replay
+        if payload.jash_id != t.step_jash.source_id():
+            return False                      # forged jash id
+        if (payload.winner is not None
+                and payload.winner // MINER_LANE != payload.origin):
+            return False                      # ES winner outside origin lane
+        if h < t.ledger.height:
+            # Already applied locally.  The Node's immediate self-check of
+            # a just-mined payload is a one-shot fast path (this process
+            # computed the digest microseconds ago; a replay adds no
+            # assurance and would double the training hot loop).  Every
+            # other call — audit(), peer receive, fork choice — checks
+            # against history AND genuinely re-executes on the cached
+            # incremental replay trainer (§3 req. 2 demands replay).
+            fresh = payload is self._self_check
+            self._self_check = None
+            return (t.history[h].state_digest == payload.state_digest
+                    and t.ledger.blocks[h].merkle_root
+                    == payload.merkle_root
+                    and (fresh or t.audit_block(h)))
+        snap = self.snapshot()
+        rec = t.run_block()                   # bit-exact re-execution
+        ok = (rec.state_digest == payload.state_digest
+              and t.ledger.blocks[h].merkle_root == payload.merkle_root)
+        if not ok:
+            self.restore(snap)
+        return ok
+
+    def reward(self, book: CreditBook, payload: BlockPayload
+               ) -> RewardEntries:
+        staged = CreditBook()
+        if payload.winner is not None:        # optimal/ES trainer mode
+            reward_optimal(staged, payload.winner, payload.block_reward)
+        else:                                 # full: split across miners
+            submitters = [global_miner(payload.origin, m)
+                          for m in range(payload.n_miners)]
+            reward_full(staged, submitters, payload.block_reward)
+        return _apply_rewards(book, staged)

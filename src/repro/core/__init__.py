@@ -1,9 +1,47 @@
-from repro.core.authority import RuntimeAuthority, classic_jash  # noqa: F401
-from repro.core.executor import run_full, run_optimal  # noqa: F401
-from repro.core.jash import (  # noqa: F401
+"""``repro.core`` — the stable kernel layer under ``repro.chain``.
+
+Everything re-exported here is declared in ``__all__``; anything else
+(``repro.core.executor.FullResult`` internals, ``repro.core.es``, …) is
+reachable by direct module import but is not part of the stable surface.
+"""
+from repro.core.authority import (
+    ReviewReport, RuntimeAuthority, classic_jash,
+)
+from repro.core.difficulty import DifficultyController, work_for_runtime
+from repro.core.executor import (
+    FullResult, OptimalResult, run_full, run_optimal,
+)
+from repro.core.jash import (
     Jash, JashMeta, JashValidationError, bounded_while, collatz_jash,
 )
-from repro.core.ledger import Block, Ledger, merkle_root  # noqa: F401
-from repro.core.pow_train import PoUWTrainer  # noqa: F401
-from repro.core.rewards import CreditBook, reward_full, reward_optimal  # noqa: F401
-from repro.core.verify import quorum_verify, verify_inclusion  # noqa: F401
+from repro.core.ledger import Block, Ledger, merkle_root
+from repro.core.pow_train import PoUWTrainer
+from repro.core.rewards import CreditBook, reward_full, reward_optimal
+from repro.core.verify import VerifyReport, quorum_verify, verify_inclusion
+
+__all__ = [
+    "Block",
+    "CreditBook",
+    "DifficultyController",
+    "FullResult",
+    "Jash",
+    "JashMeta",
+    "JashValidationError",
+    "Ledger",
+    "OptimalResult",
+    "PoUWTrainer",
+    "ReviewReport",
+    "RuntimeAuthority",
+    "VerifyReport",
+    "bounded_while",
+    "classic_jash",
+    "collatz_jash",
+    "merkle_root",
+    "quorum_verify",
+    "reward_full",
+    "reward_optimal",
+    "run_full",
+    "run_optimal",
+    "verify_inclusion",
+    "work_for_runtime",
+]

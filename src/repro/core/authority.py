@@ -109,6 +109,17 @@ class RuntimeAuthority:
             return entry.jash, "queued"
         return classic_jash(), "classic"
 
+    def requeue(self, jash: Jash) -> None:
+        """Return a published-but-unmined jash to the queue at its
+        reviewed priority (the chain layer uses this when a mined block
+        fails self-verification, so a researcher's submission is not
+        silently lost)."""
+        report = self.reviews.get(jash.source_id())
+        priority = report.priority if report is not None else 0.0
+        heapq.heappush(self._queue,
+                       _QueueEntry(-priority, self._seq, jash, report))
+        self._seq += 1
+
     @property
     def queue_depth(self) -> int:
         return len(self._queue)

@@ -1,0 +1,325 @@
+"""Chain API acceptance: Node facade, Workload payloads, and a multi-node
+Network that converges to one bit-exact chain across all four workloads
+(full / optimal / training / classic §3.4 fallback)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.chain import (
+    BlockRecord, ChainError, Network, Node, TrainingWorkload, Workload,
+    ClassicSha256Workload, JashFullWorkload, JashOptimalWorkload,
+)
+from repro.configs import get_config, reduced
+from repro.configs.base import InputShape
+from repro.core.jash import Jash, JashMeta, collatz_jash
+from repro.core.pow_train import PoUWTrainer
+from repro.train.steps import TrainHparams
+
+
+def small_collatz(arg_bits: int = 6, max_steps: int = 64,
+                  importance: float = 0.9) -> Jash:
+    base = collatz_jash(max_steps=max_steps)
+    return Jash(base.name, base.fn,
+                JashMeta(arg_bits=arg_bits, res_bits=32,
+                         importance=importance),
+                example_args=base.example_args)
+
+
+def training_workload(seed: int = 7) -> TrainingWorkload:
+    cfg = reduced(get_config("qwen3-0.6b"))
+    shape = InputShape("t", 32, 4, "train")
+    return TrainingWorkload(
+        lambda: PoUWTrainer(cfg, shape,
+                            hp=TrainHparams(peak_lr=1e-3, warmup_steps=2,
+                                            total_steps=16),
+                            mode="full", n_miners=2, seed=seed))
+
+
+def two_node_network() -> Network:
+    return Network.create(
+        2, node_factory=lambda i: Node(
+            node_id=i, classic_arg_bits=6,
+            workloads={"training": training_workload()}))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 2 nodes, >= 5 blocks, all four workloads, one verified chain
+# ---------------------------------------------------------------------------
+
+
+class TestNetworkAcceptance:
+    def test_five_blocks_four_workloads_converge(self):
+        net = two_node_network()
+        net.nodes[0].submit(small_collatz(max_steps=64))
+        net.nodes[1].submit(small_collatz(max_steps=32))
+
+        # block 3 uses the default policy with empty queues -> classic
+        schedule = ["full", "optimal", "training", None, "training"]
+        results = net.run(5, schedule)
+
+        modes = [r.receipt.record.workload for r in results]
+        assert modes == ["full", "optimal", "training", "classic",
+                         "training"]
+        assert all(not r.rejected_by for r in results)
+
+        # single verified chain, bit-exact merkle roots at every height
+        assert net.converged()
+        assert net.heights == [5, 5]
+        roots = [[b.merkle_root for b in n.ledger.blocks]
+                 for n in net.nodes]
+        assert roots[0] == roots[1]
+        hashes = [[b.block_hash for b in n.ledger.blocks]
+                  for n in net.nodes]
+        assert hashes[0] == hashes[1]
+
+        # every block audits on every node
+        for node in net.nodes:
+            assert all(node.audit(h) for h in range(5))
+
+        # per-node credit books agree and conserve the block rewards
+        books = [sorted(n.book.balances.items()) for n in net.nodes]
+        assert books[0] == books[1]
+        for node in net.nodes:
+            assert np.isclose(node.book.total_issued, 5 * 50.0)
+            assert np.isclose(sum(node.book.balances.values()),
+                              node.book.total_issued)
+
+    def test_concurrent_miners_fork_resolves_to_longest(self):
+        """Two nodes mine height-0 concurrently (no broadcast): a fork.
+        The next broadcast carries the longer chain and the loser adopts
+        it wholesale — ledger and credit book both rebuilt."""
+        net = two_node_network()
+        r0 = net.nodes[0].mine_block("classic")
+        r1 = net.nodes[1].mine_block("classic")
+        assert net.nodes[0].ledger.tip_hash != "" and not net.converged()
+        issued_before = net.nodes[0].book.total_issued
+
+        # node 1 extends its fork and broadcasts: strictly longer chain
+        r2 = net.nodes[1].mine_block("classic")
+        res = net.broadcast(1, r2.record.to_block(), r2)
+        assert res.accepted_by == [1, 0]
+        assert net.converged()
+        assert net.heights == [2, 2]
+        # node 0's own fork block (and its credits) were discarded
+        assert net.nodes[0].book.total_issued == \
+            net.nodes[1].book.total_issued
+        books = [sorted(n.book.balances.items()) for n in net.nodes]
+        assert books[0] == books[1]
+        assert r0.record.block_hash not in \
+            [b.block_hash for b in net.nodes[0].ledger.blocks]
+        assert issued_before == 50.0  # fork block had minted before adopt
+
+    def test_corrupted_payload_rejected_no_credit(self):
+        """A node broadcasting a tampered payload is rejected by peers
+        (bit-exact re-verification fails) and earns no credit there."""
+        net = two_node_network()
+        net.nodes[0].submit(small_collatz())
+        receipt = net.nodes[0].mine_block("full")
+
+        # tamper: claim different results (inflate one res word)
+        full = receipt.payload.full
+        bad_results = full.results.copy()
+        bad_results[0, 0] ^= 0x1
+        bad_full = dataclasses.replace(full, results=bad_results)
+        bad_payload = dataclasses.replace(receipt.payload, full=bad_full)
+        blk = receipt.record.to_block()
+
+        assert not net.nodes[1].receive(blk, bad_payload)
+        assert net.nodes[1].ledger.height == 0
+        assert net.nodes[1].book.total_issued == 0.0
+        assert net.nodes[1].book.balances == {}
+
+        # a tampered merkle root is equally rejected (header/payload
+        # mismatch) even with untouched results
+        bad_root = dataclasses.replace(
+            receipt.payload, merkle_root="00" * 32)
+        assert not net.nodes[1].receive(blk, bad_root)
+
+        # reward-determining fields are enforced too: an inflated
+        # block_reward (consensus parameter) and a stolen origin lane
+        # (sender attribution) both mint nothing
+        greedy = dataclasses.replace(receipt.payload, block_reward=1e9)
+        assert not net.nodes[1].receive(blk, greedy, origin=0)
+        stolen = dataclasses.replace(receipt.payload, origin=1)
+        assert not net.nodes[1].receive(blk, stolen, origin=0)
+        assert net.nodes[1].book.total_issued == 0.0
+
+        # the honest payload is accepted by the same peer
+        assert net.nodes[1].receive(blk, receipt.payload, origin=0)
+        assert net.nodes[1].ledger.height == 1
+
+    def test_optimal_winner_lane_enforced(self):
+        """A consistent header+payload crediting another node's miner
+        lane is still rejected by the workload's lane check."""
+        from repro.chain.workload import MINER_LANE
+
+        net = two_node_network()
+        net.nodes[0].submit(small_collatz())
+        receipt = net.nodes[0].mine_block("optimal")
+        stolen_winner = MINER_LANE + 7          # node 1's lane
+        bad_payload = dataclasses.replace(receipt.payload,
+                                          winner=stolen_winner)
+        bad_blk = dataclasses.replace(receipt.record,
+                                      winner=stolen_winner).to_block()
+        assert not net.nodes[1].receive(bad_blk, bad_payload, origin=0)
+        assert net.nodes[1].book.total_issued == 0.0
+
+    def test_fork_discarding_training_block_rewinds_trainer(self):
+        """Adopting a chain that drops a locally-mined training block
+        must rewind the trainer too, or the node's future training
+        blocks are unverifiable by every peer."""
+        net = two_node_network()
+        net.nodes[0].mine_block("training")         # private fork block
+        net.nodes[1].mine_block("classic")
+        r = net.nodes[1].mine_block("classic")
+        res = net.broadcast(1, r.record.to_block(), r)
+        assert res.accepted_by == [1, 0]
+        assert net.converged() and net.heights == [2, 2]
+        assert net.nodes[0].workloads["training"].trainer.ledger.height == 0
+        # the rewound node can mine training blocks the network accepts
+        res2 = net.mine(0, "training")
+        assert not res2.rejected_by
+        assert net.converged() and net.heights == [3, 3]
+
+    def test_forged_jash_id_rejected(self):
+        """A consistent header+payload pair claiming a different jash id
+        than the evidence jash must not enter any peer's ledger."""
+        net = two_node_network()
+        receipt = net.nodes[0].mine_block("classic")
+        fake = "deadbeef" * 2
+        bad_payload = dataclasses.replace(receipt.payload, jash_id=fake)
+        bad_blk = dataclasses.replace(receipt.record,
+                                      jash_id=fake).to_block()
+        assert not net.nodes[1].receive(bad_blk, bad_payload, origin=0)
+        assert net.nodes[1].ledger.height == 0
+
+    def test_corrupted_training_digest_rejected_and_rolled_back(self):
+        net = two_node_network()
+        receipt = net.nodes[0].mine_block("training")
+        bad = dataclasses.replace(receipt.payload,
+                                  state_digest="ab" * 32)
+        blk_bad = dataclasses.replace(receipt.record,
+                                      state_digest="ab" * 32,
+                                      merkle_root=receipt.record.merkle_root
+                                      ).to_block()
+        peer_wl = net.nodes[1].workloads["training"]
+        assert not net.nodes[1].receive(blk_bad, bad)
+        # the failed verify rolled the peer's trainer back — including
+        # its internal credit book (no minting for rejected blocks)
+        assert peer_wl.trainer.ledger.height == 0
+        assert peer_wl.trainer.book.total_issued == 0.0
+        # and the honest block still verifies afterwards
+        assert net.nodes[1].receive(receipt.record.to_block(),
+                                    receipt.payload)
+        assert peer_wl.trainer.ledger.height == 1
+
+
+# ---------------------------------------------------------------------------
+# Node facade
+# ---------------------------------------------------------------------------
+
+
+class TestNode:
+    def test_default_policy_full_then_classic_fallback(self):
+        node = Node(classic_arg_bits=6)
+        node.submit(small_collatz())
+        modes = [node.mine_block().record.workload for _ in range(3)]
+        assert modes == ["full", "classic", "classic"]
+        s = node.state()
+        assert s.height == 3 and s.chain_valid
+        assert np.isclose(s.total_issued, 3 * 50.0)
+        assert all(node.audit(h) for h in range(3))
+
+    def test_mine_block_returns_typed_records(self):
+        node = Node(classic_arg_bits=6)
+        receipt = node.mine_block()
+        assert isinstance(receipt.record, BlockRecord)
+        assert receipt.record.workload == "classic"
+        assert receipt.record.to_block().block_hash == \
+            receipt.record.block_hash
+        assert receipt.rewards and receipt.block_time_s > 0
+
+    def test_optimal_workload_explicit(self):
+        node = Node(classic_arg_bits=6)
+        node.submit(small_collatz())
+        receipt = node.mine_block("optimal")
+        assert receipt.record.workload == "optimal"
+        assert receipt.record.winner is not None
+        assert receipt.record.best_res
+        assert node.audit(0)
+
+    def test_unknown_workload_raises(self):
+        node = Node()
+        with pytest.raises(ChainError, match="unknown workload"):
+            node.mine_block("espresso")
+
+    def test_explicit_jash_workload_empty_queue_raises(self):
+        """An explicit full/optimal request must not silently degrade to
+        a classic block (whose payload has no FullResult)."""
+        node = Node(classic_arg_bits=6)
+        with pytest.raises(ChainError, match="queue is empty"):
+            node.mine_block("full")
+        with pytest.raises(ChainError, match="queue is empty"):
+            node.mine_block("optimal")
+        # default policy still falls back to classic (§3.4)
+        assert node.mine_block().record.workload == "classic"
+
+    def test_training_block_honors_node_reward(self):
+        node = Node(block_reward=100.0,
+                    workloads={"training": training_workload()})
+        receipt = node.mine_block("training")
+        assert receipt.payload.block_reward == 100.0
+        assert np.isclose(node.book.total_issued, 100.0)
+
+    def test_failed_self_verify_requeues_jash(self):
+        """A mined block that fails self-verification must not cost the
+        researcher their queued submission."""
+        class _Paranoid(JashFullWorkload):
+            def verify(self, payload):
+                return False
+
+        node = Node(classic_arg_bits=6)
+        node.workloads["full"] = _Paranoid()
+        node.submit(small_collatz())
+        with pytest.raises(ChainError, match="failed"):
+            node.mine_block("full")
+        assert node.ra.queue_depth == 1
+        assert node.ledger.height == 0
+        # the requeued jash mines fine once the workload behaves
+        node.workloads["full"] = JashFullWorkload()
+        assert node.mine_block().record.workload == "full"
+
+    def test_network_create_rejects_shared_workloads(self):
+        with pytest.raises(ValueError, match="node_factory"):
+            Network.create(2, workloads={"training": training_workload()})
+
+    def test_target_block_s_without_work_raises(self):
+        with pytest.raises(ValueError, match="work"):
+            Node(target_block_s=1.0)
+
+    def test_difficulty_integration_adjusts_work(self):
+        node = Node(classic_arg_bits=10, target_block_s=1e-9, work=512)
+        node.mine_block("classic")
+        first_work = 512
+        node.mine_block("classic")
+        # a nanosecond target against real block times must shrink work
+        assert node.work < first_work
+        # work target caps the mined arg space via meta.max_arg (§3.1)
+        assert node.chain_payloads()[1].jash.meta.n_args <= first_work
+
+    def test_workload_protocol_runtime_checkable(self):
+        for wl in (JashFullWorkload(), JashOptimalWorkload(),
+                   ClassicSha256Workload(), training_workload()):
+            assert isinstance(wl, Workload)
+
+    def test_public_surface(self):
+        import repro
+        import repro.chain as chain
+        assert set(repro.__all__) == {"BlockRecord", "Network", "Node",
+                                      "Workload"}
+        for name in chain.__all__:
+            assert getattr(chain, name) is not None
+        import repro.core as core
+        for name in core.__all__:
+            assert getattr(core, name) is not None

@@ -2,9 +2,10 @@
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property-based tests need hypothesis")
-from hypothesis import given, settings, strategies as st
+try:                 # property tests skip cleanly without hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.core.difficulty import DifficultyController, work_for_runtime
 
@@ -27,18 +28,63 @@ class TestController:
         ctrl.observe(0.001)                    # wildly fast block
         assert ctrl.next_work(1000) <= 4000
 
-    @given(st.floats(0.001, 100.0), st.integers(1, 1 << 20))
-    @settings(max_examples=40, deadline=None)
-    def test_work_stays_in_bounds(self, block_time, work):
-        ctrl = DifficultyController(target_block_s=1.0, min_work=4,
-                                    max_work=1 << 22)
-        ctrl.observe(block_time)
-        new = ctrl.next_work(work)
-        assert 4 <= new <= 1 << 22
-
     def test_no_observation_no_change(self):
         ctrl = DifficultyController(target_block_s=1.0)
         assert ctrl.next_work(123) == 123
+
+    def test_first_proposal_unchanged_regression(self):
+        """Before any observe() there is nothing to retarget against:
+        propose_work must hand the current work back unchanged, for any
+        bounds configuration."""
+        ctrl = DifficultyController(target_block_s=1.0, min_work=4096,
+                                    max_work=1 << 22)
+        assert ctrl.ema_block_s is None
+        assert ctrl.propose_work(123) == 123       # below min_work: no clamp
+        assert ctrl.propose_work(1 << 30) == 1 << 30
+
+    def test_ema_seeds_from_warmup_mean(self):
+        """The EMA seed is the mean of the first ``seed_samples``
+        observations — a single outlier first block (cold compile) no
+        longer locks in with full weight."""
+        ctrl = DifficultyController(target_block_s=1.0, seed_samples=4)
+        for dt in (4.0, 2.0, 1.0, 1.0):
+            ctrl.observe(dt)
+        assert ctrl.ema_block_s == pytest.approx(2.0)
+        # past the seed window the usual EMA recurrence applies — fed a
+        # sample distinct from the warmup mean so a controller stuck in
+        # the seed phase (running mean 2.4) would fail here
+        ctrl.observe(4.0)
+        assert ctrl.ema_block_s == pytest.approx(0.7 * 2.0 + 0.3 * 4.0)
+
+    def test_seed_samples_validated(self):
+        with pytest.raises(ValueError, match="seed_samples"):
+            DifficultyController(target_block_s=1.0, seed_samples=0)
+
+    def test_outlier_first_sample_diluted(self):
+        seeded = DifficultyController(target_block_s=1.0, seed_samples=4)
+        single = DifficultyController(target_block_s=1.0, seed_samples=1)
+        for c in (seeded, single):
+            c.observe(100.0)                       # cold-compile outlier
+            c.observe(1.0)
+        assert seeded.ema_block_s == pytest.approx(50.5)   # running mean
+        assert single.ema_block_s == pytest.approx(0.7 * 100.0 + 0.3 * 1.0)
+
+    def test_next_work_alias(self):
+        ctrl = DifficultyController(target_block_s=1.0)
+        ctrl.observe(2.0)
+        assert ctrl.next_work(1000) == ctrl.propose_work(1000)
+
+
+if given is not None:
+    class TestControllerProperties:
+        @given(st.floats(0.001, 100.0), st.integers(1, 1 << 20))
+        @settings(max_examples=40, deadline=None)
+        def test_work_stays_in_bounds(self, block_time, work):
+            ctrl = DifficultyController(target_block_s=1.0, min_work=4,
+                                        max_work=1 << 22)
+            ctrl.observe(block_time)
+            new = ctrl.next_work(work)
+            assert 4 <= new <= 1 << 22
 
 
 class TestInitialSizing:

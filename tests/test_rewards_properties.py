@@ -1,0 +1,61 @@
+"""Credit conservation (PNPCoin §4): the PoUW analogue of the coin only
+holds value if every block's reward is conserved — for any sequence of
+full/optimal blocks, any miner assignment, and any ``bonus_fraction``
+split, the credits issued equal the sum of balances equal the sum of
+block rewards."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rewards import CreditBook, reward_full, reward_optimal
+
+# a block is either full (submitter list + optional bonus winner + split
+# fraction) or optimal (winner takes all)
+_full_block = st.tuples(
+    st.just("full"),
+    st.lists(st.integers(0, 15), min_size=1, max_size=48),
+    st.one_of(st.none(), st.integers(0, 15)),
+    st.floats(0.0, 0.9, allow_nan=False))
+_optimal_block = st.tuples(st.just("optimal"), st.integers(0, 15))
+
+
+@given(blocks=st.lists(st.one_of(_full_block, _optimal_block),
+                       min_size=1, max_size=24),
+       block_reward=st.floats(0.5, 200.0, allow_nan=False))
+@settings(max_examples=80, deadline=None)
+def test_credit_conservation(blocks, block_reward):
+    book = CreditBook()
+    for blk in blocks:
+        if blk[0] == "full":
+            _, submitters, bonus_winner, bonus_fraction = blk
+            reward_full(book, submitters, block_reward,
+                        bonus_winner=bonus_winner,
+                        bonus_fraction=bonus_fraction)
+        else:
+            reward_optimal(book, blk[1], block_reward)
+
+    minted = len(blocks) * block_reward
+    assert np.isclose(book.total_issued, minted, rtol=1e-9, atol=1e-9)
+    assert np.isclose(sum(book.balances.values()), book.total_issued,
+                      rtol=1e-9, atol=1e-9)
+
+
+@given(n=st.integers(1, 64), bonus_fraction=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_bonus_split_exact(n, bonus_fraction):
+    """The §4 leading-zeros bonus carves its fraction out of the base
+    split — it must never mint extra credit."""
+    book = CreditBook()
+    reward_full(book, list(range(n)), 50.0, bonus_winner=0,
+                bonus_fraction=bonus_fraction)
+    assert np.isclose(book.total_issued, 50.0, rtol=1e-9)
+    assert np.isclose(sum(book.balances.values()), 50.0, rtol=1e-9)
+
+
+def test_empty_block_mints_nothing():
+    book = CreditBook()
+    reward_full(book, [], 50.0)
+    assert book.total_issued == 0.0 and book.balances == {}

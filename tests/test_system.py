@@ -1,52 +1,37 @@
 """End-to-end behaviour tests: the full PNPCoin loop from researcher
-submission to rewarded, verified, chained blocks — and training-as-mining
-actually learning."""
+submission to rewarded, verified, chained blocks — driven through the
+``repro.chain`` API — and training-as-mining actually learning."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.chain import Node, TrainingWorkload
 from repro.configs import get_config, reduced
 from repro.configs.base import InputShape
-from repro.core.authority import RuntimeAuthority
-from repro.core.executor import run_full, run_optimal
 from repro.core.jash import Jash, JashMeta, collatz_jash
-from repro.core.ledger import Ledger, merkle_root
 from repro.core.pow_train import PoUWTrainer
-from repro.core.rewards import CreditBook, reward_full
-from repro.core.verify import quorum_verify
 from repro.train.steps import TrainHparams
 
 
 def test_full_pnpcoin_loop():
     """Researcher -> RA review -> publication -> mining -> verification
-    -> ledger -> rewards: the complete Fig. 1 pipeline."""
-    ra = RuntimeAuthority()
-    ledger = Ledger()
-    book = CreditBook()
+    -> ledger -> rewards: the complete Fig. 1 pipeline, one facade."""
+    node = Node(classic_arg_bits=5)
+    base = collatz_jash(max_steps=256)
+    node.submit(Jash(base.name, base.fn,
+                     JashMeta(arg_bits=5, res_bits=32),
+                     example_args=base.example_args))
 
-    ra.submit(collatz_jash(max_steps=256))
-    for block_i in range(3):
-        jash, src = ra.publish_next()
-        if src == "classic":
-            jash = Jash(jash.name, jash.fn,
-                        JashMeta(arg_bits=5, res_bits=256),
-                        example_args=jash.example_args)
-        else:
-            jash = Jash(jash.name, jash.fn,
-                        JashMeta(arg_bits=5, res_bits=32),
-                        example_args=jash.example_args)
-        full = run_full(jash)
-        assert quorum_verify(jash, full, fraction=0.3).ok
-        root = merkle_root(full.merkle_leaves)
-        ledger.append(jash_id=jash.source_id(), mode="full", merkle=root,
-                      winner=None, best_res=None,
-                      n_results=len(full.args))
-        reward_full(book, full.miner_of.tolist(), 50.0)
+    receipts = [node.mine_block() for _ in range(3)]
+    assert [r.record.workload for r in receipts] == \
+        ["full", "classic", "classic"]
 
-    assert ledger.verify_chain()
-    assert ledger.height == 3
-    assert np.isclose(book.total_issued, 150.0)
+    s = node.state()
+    assert s.chain_valid and s.height == 3
+    assert np.isclose(s.total_issued, 150.0)
+    assert np.isclose(sum(s.balances.values()), s.total_issued)
+    assert all(node.audit(h) for h in range(3))
 
 
 def test_training_as_mining_learns():
@@ -54,19 +39,22 @@ def test_training_as_mining_learns():
     paper's 'Deep Net training' payload does useful work."""
     cfg = reduced(get_config("qwen3-0.6b"))
     shape = InputShape("t", 64, 8, "train")
-    tr = PoUWTrainer(cfg, shape,
-                     hp=TrainHparams(peak_lr=2e-3, warmup_steps=5,
-                                     total_steps=80),
-                     mode="full", n_miners=4)
-    recs = tr.run(40)
-    first = np.mean([r.loss for r in recs[:5]])
-    last = np.mean([r.loss for r in recs[-5:]])
+    node = Node(workloads={"training": TrainingWorkload(
+        lambda: PoUWTrainer(cfg, shape,
+                            hp=TrainHparams(peak_lr=2e-3, warmup_steps=5,
+                                            total_steps=80),
+                            mode="full", n_miners=4))})
+    receipts = [node.mine_block("training") for _ in range(40)]
+    losses = [r.payload.loss for r in receipts]
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
     assert last < first - 0.15, (first, last)
-    assert tr.ledger.verify_chain()
+    assert node.state().chain_valid
+    assert node.audit(39)           # replay audit on the latest block
 
 
 def test_optimal_mode_improves_over_random():
-    """ES mining should (slightly) reduce loss vs the init params."""
+    """ES mining should (slightly) reduce loss vs the init params —
+    kernel-layer coverage of the PoUWTrainer under the chain facade."""
     cfg = reduced(get_config("qwen3-0.6b"))
     shape = InputShape("t", 32, 4, "train")
     tr = PoUWTrainer(cfg, shape, mode="optimal", pop_size=8, sigma=0.01,
@@ -95,10 +83,11 @@ def test_docking_use_case_end_to_end():
                 JashMeta(arg_bits=5, res_bits=2, max_arg=N_R * N_P,
                          data_checksum="ab" * 32, importance=0.9),
                 example_args=(jnp.uint32(0),))
-    ra = RuntimeAuthority()
-    ra.submit(jash)
-    pub, _ = ra.publish_next()
-    full = run_full(pub)
+    node = Node()
+    node.submit(jash)
+    receipt = node.mine_block()     # default policy: queued jash -> full
+    assert receipt.record.workload == "full"
+    full = receipt.payload.full
     binds = int((full.results[:, 0] == 1).sum())
     assert 0 < binds < N_R * N_P
-    assert quorum_verify(pub, full, fraction=1.0).ok
+    assert node.audit(0)            # quorum re-execution + root recompute
