@@ -16,6 +16,9 @@ of its quantitative *claims* instead:
   merkle_commit   DESIGN §6 device block commitment vs the seed Python path
   executor_chunked DESIGN §6 chunked fused full-mode dispatch
   block_scan      DESIGN §6 scan-fused PoUW block vs per-microstep dispatch
+  sim_gossip      DESIGN §9 async gossip sim: fork depth, orphan rate,
+                  time-to-finality under partitions and adversaries
+                  (consumes the SimReport of the canonical scenarios)
 
 Prints ``name,us_per_call,derived`` CSV rows.  The commit-pipeline rows
 are also written machine-readably to BENCH_pipeline.json (repo root) so
@@ -361,6 +364,35 @@ def bench_commit_pipeline(n_leaves: int = 4096,
     return payload
 
 
+def bench_sim_gossip(n_lanes: int = 1):
+    """DESIGN §9: the async gossip simulator under partition + adversary
+    scenarios.  Each row consumes the deterministic ``SimReport`` — fork
+    depth histogram, orphan rate, time-to-finality — plus the wallclock
+    cost of driving the scenario (events/s is the simulator's own
+    overhead figure; block *mining* dominates it)."""
+    from repro.chain.sim import adversarial_scenario, partitioned_scenario
+
+    for name, build in (
+        ("partition_4node",
+         lambda: partitioned_scenario(n_nodes=4, seed=0,
+                                      n_lanes=n_lanes)),
+        ("adversarial_5node",
+         lambda: adversarial_scenario(n_honest=3, seed=0)),
+    ):
+        sim = build()
+        t0 = time.perf_counter()
+        rep = sim.run()
+        dt = time.perf_counter() - t0
+        assert rep.converged and rep.credit_divergence == 0.0, name
+        depths = ";".join(f"d{k}x{v}"
+                          for k, v in rep.fork_depth_hist.items())
+        row(f"sim_gossip.{name}", dt * 1e6,
+            f"events={rep.n_events} events_per_s={rep.n_events / dt:.0f} "
+            f"mined={rep.blocks_mined} orphan_rate={rep.orphan_rate:.2f} "
+            f"forks=[{depths}] ttf_mean_s={rep.ttf_mean:.2f} "
+            f"ttf_max_s={rep.ttf_max:.2f}")
+
+
 def bench_roofline():
     """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
     files = sorted(glob.glob("experiments/dryrun/*__single.json"))
@@ -390,8 +422,9 @@ def main(smoke: bool = False) -> None:
     if smoke:
         # CI subset: the commit pipeline at a reduced leaf count (full
         # 4096-leaf numbers are recorded in the committed
-        # BENCH_pipeline.json by a full run)
+        # BENCH_pipeline.json by a full run) + the gossip sim scenarios
         bench_commit_pipeline(n_leaves=256, write_json=False)
+        bench_sim_gossip()
         print(f"# {len(ROWS)} rows (smoke)")
         return
     fph = bench_hash_flops()
@@ -402,6 +435,7 @@ def main(smoke: bool = False) -> None:
     bench_docking()
     bench_verification()
     bench_commit_pipeline()
+    bench_sim_gossip()
     bench_roofline()
     print(f"# {len(ROWS)} rows")
 

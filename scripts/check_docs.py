@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Doc-consistency CI check (wired into the examples-smoke job).
+
+Two invariants keep the docs honest:
+
+1. **API coverage** — every name in the ``__all__`` of ``repro``,
+   ``repro.chain`` and ``repro.core`` has a ``### `module.name` ``
+   heading in ``docs/api.md`` (a new export without a doc entry fails
+   CI; a doc entry for a removed export fails too).
+2. **README executes** — every ```` ```python ```` block in README.md
+   runs, in order, in one shared namespace (a doctest-style session:
+   later blocks may use names defined by earlier ones).
+
+Run it the way CI does::
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+MODULES = ("repro", "repro.chain", "repro.core")
+
+
+def check_api_coverage(api_md: Path = REPO / "docs" / "api.md"
+                       ) -> list:
+    """Names exported but undocumented, plus documented-but-not-exported
+    headings (empty list == consistent)."""
+    text = api_md.read_text()
+    problems = []
+    documented = set(re.findall(r"^###\s+`([\w.]+)`", text, re.M))
+    exported = set()
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        for name in mod.__all__:
+            exported.add(f"{modname}.{name}")
+            if f"{modname}.{name}" not in documented:
+                problems.append(
+                    f"{modname}.{name} is exported in {modname}.__all__ "
+                    f"but has no `### \\`{modname}.{name}\\`` entry in "
+                    f"{api_md.relative_to(REPO)}")
+    for heading in sorted(documented):
+        modname = heading.rsplit(".", 1)[0]
+        if modname in MODULES and heading not in exported:
+            problems.append(
+                f"{heading} is documented in {api_md.relative_to(REPO)} "
+                f"but not exported from {modname}.__all__ (stale entry?)")
+    return problems
+
+
+def run_readme_blocks(readme: Path = REPO / "README.md") -> list:
+    """Execute every ```python block of the README in one shared
+    namespace, in order.  Returns a list of failure descriptions."""
+    text = readme.read_text()
+    blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    ns: dict = {}
+    problems = []
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"<README block {i}>", "exec"), ns)
+        except Exception as e:                     # noqa: BLE001
+            problems.append(
+                f"README python block {i} failed: {type(e).__name__}: {e}"
+                f"\n---\n{block}---")
+    if not blocks:
+        problems.append("README.md contains no ```python blocks")
+    return problems
+
+
+def main() -> int:
+    problems = check_api_coverage()
+    n_api = len(problems)
+    print(f"api coverage: {'OK' if not n_api else f'{n_api} problem(s)'} "
+          f"({sum(len(importlib.import_module(m).__all__) for m in MODULES)}"
+          " exported names checked)")
+    readme_problems = run_readme_blocks()
+    problems += readme_problems
+    print(f"README blocks: "
+          f"{'OK' if not readme_problems else 'FAILED'}")
+    for p in problems:
+        print(f"  - {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

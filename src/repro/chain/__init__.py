@@ -12,9 +12,16 @@ Start here::
     node = Node()
     node.submit(my_jash)
     receipt = node.mine_block()
+
+``repro.chain.sim`` layers a deterministic event-driven asynchronous
+network simulator (latency, drops, partitions, churn, adversaries) on
+top of Node/Network; its core surface (``Sim``/``SimConfig``/
+``SimReport``/``LinkModel``) is re-exported here, the adversary classes
+and canonical scenarios live in the module.
 """
 from repro.chain.network import BroadcastResult, Network
 from repro.chain.node import BlockReceipt, BlockRecord, Node, NodeState
+from repro.chain.sim import LinkModel, Sim, SimConfig, SimReport
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, TrainingWorkload, Workload,
@@ -30,9 +37,13 @@ __all__ = [
     "ClassicSha256Workload",
     "JashFullWorkload",
     "JashOptimalWorkload",
+    "LinkModel",
     "Network",
     "Node",
     "NodeState",
+    "Sim",
+    "SimConfig",
+    "SimReport",
     "TrainingWorkload",
     "Workload",
 ]

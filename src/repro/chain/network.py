@@ -11,6 +11,12 @@ When a peer's tip diverges, longest-valid-chain fork choice applies:
 the strictly longer chain whose every payload re-verifies wins, and the
 loser's ledger *and credit book* are rebuilt from the adopted chain.
 
+This network is deliberately *synchronous and honest*: broadcasts are
+instantaneous, nothing is dropped, and every sender is who it claims to
+be.  For latency, message loss, partitions, churn and adversarial
+miners, layer ``repro.chain.sim`` (a seeded discrete-event simulator)
+over the same ``Node`` API.
+
 Run a 2-node smoke simulation (used by CI)::
 
     PYTHONPATH=src python -m repro.chain.network --nodes 2 --blocks 4
@@ -82,10 +88,15 @@ class Network:
                 payload: BlockPayload) -> bool:
         """Deliver one block to one peer: fast path appends to the tip;
         on tip mismatch the peer pulls the origin's whole chain and runs
-        longest-valid-chain fork choice."""
+        longest-valid-chain fork choice.  Duplicate deliveries (the
+        block hash is already in the peer's chain — gossip is
+        at-least-once) are an idempotent no-op, skipping the pointless
+        full-chain re-verification a chain pull would cost."""
         peer = self.nodes[dest]
         if peer.receive(block, payload, origin=origin):
             return True
+        if peer.has_block(block.block_hash):
+            return False
         src = self.nodes[origin]
         return peer.consider_chain(src.ledger.blocks, src.chain_payloads())
 

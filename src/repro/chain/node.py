@@ -104,10 +104,30 @@ class Node:
                  target_block_s: Optional[float] = None,
                  work: Optional[int] = None,
                  mesh: Optional[object] = None,
+                 n_lanes: int = 1,
                  ra: Optional[RuntimeAuthority] = None) -> None:
+        """``n_lanes`` is multi-lane mining: partition full/optimal
+        execution over ``n_lanes`` single-device miner lanes, all run in
+        one vmapped dispatch (lane ``l`` earns as global miner
+        ``node_id * MINER_LANE + l``).  Mutually exclusive with a
+        sharded ``mesh``, whose axes already define the miner fleet.
+        Lane partitioning never changes the mined bits, so peers need no
+        knowledge of a miner's lane count to verify its blocks."""
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        if n_lanes > 1 and any(
+                a in getattr(mesh, "axis_names", ())
+                for a in ("pod", "data")):
+            # fail at construction, not on the first mine_block deep
+            # inside a simulation
+            raise ValueError(
+                "n_lanes is the single-device miner partition; the mesh "
+                "already defines the miner fleet via its axes — use one "
+                "or the other")
         self.node_id = node_id
         self.block_reward = block_reward
         self.mesh = mesh
+        self.n_lanes = n_lanes
         self.ra = ra if ra is not None else RuntimeAuthority()
         self.ledger = Ledger()
         self.book = CreditBook()
@@ -166,7 +186,7 @@ class Node:
                            prev_hash=self.ledger.tip_hash,
                            node_id=self.node_id, jash=jash, source=source,
                            work=self.work, block_reward=self.block_reward,
-                           mesh=self.mesh)
+                           mesh=self.mesh, lanes=self.n_lanes)
         try:
             payload = wl.mine(wl.prepare(ctx))
             ok = wl.verify(payload)
@@ -225,6 +245,13 @@ class Node:
                 and payload.workload in self.workloads)
 
     # -- peer protocol (driven by chain/network.py) -------------------
+    def has_block(self, block_hash: str) -> bool:
+        """True iff a block with this content hash is already committed
+        — the duplicate check gossip layers run before treating a failed
+        ``receive`` as a fork signal (at-least-once delivery must be an
+        idempotent no-op, never a chain pull)."""
+        return any(b.block_hash == block_hash for b in self.ledger.blocks)
+
     def receive(self, block: Block, payload: BlockPayload,
                 origin: Optional[int] = None) -> bool:
         """Accept a broadcast block iff it extends our tip and the payload
@@ -297,6 +324,10 @@ class Node:
 
     # -- introspection ------------------------------------------------
     def state(self) -> NodeState:
+        """Typed snapshot of the whole node.  ``chain_valid`` re-walks
+        the hash links from genesis (cheap header check only — use
+        ``audit`` for payload re-verification); ``balances`` is a copy,
+        so a held snapshot is immune to later fork-choice rebuilds."""
         return NodeState(node_id=self.node_id, height=self.ledger.height,
                          tip_hash=self.ledger.tip_hash,
                          queue_depth=self.ra.queue_depth, work=self.work,
@@ -306,6 +337,8 @@ class Node:
 
     @property
     def records(self) -> List[BlockRecord]:
+        """Typed view of the committed chain, genesis -> tip.  Reflects
+        the *current* fork choice — a reorg replaces earlier entries."""
         return [BlockRecord.from_block(b) for b in self.ledger.blocks]
 
     def chain_payloads(self) -> List[BlockPayload]:

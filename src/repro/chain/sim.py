@@ -1,0 +1,732 @@
+"""``repro.chain.sim`` — deterministic event-driven async gossip simulator.
+
+``chain/network.py`` models instantaneous, honest, lock-step broadcast;
+the paper's claim is that the publication→mining→verification loop
+survives a *real* network.  This module layers a seeded discrete-event
+scheduler over the existing ``Node``/``Workload`` API so the scenarios
+where PoUW schemes actually break — fork depth and verification lag
+under asynchrony — can be measured:
+
+* **latency & loss** — every link delivery draws from a configurable
+  latency distribution (``LinkModel``) and may be dropped;
+* **partitions** — ``partition_at``/``heal_at`` split the network into
+  isolated groups and rejoin them (healing triggers tip announcements,
+  so the groups converge by longest-valid-chain fork choice);
+* **churn** — ``join_at`` adds a node mid-chain; it syncs by pulling a
+  peer's chain through ``Node.consider_chain`` exactly like any forked
+  peer;
+* **adversaries** — ``WithholdingMiner`` (selfish mining: private chain
+  released later), ``StaleSpammer`` (rebroadcasts old blocks),
+  ``PayloadCorrupter`` (tampers every outgoing block/payload pair) — all
+  exercising the receive-side re-verification and fork-choice rollback
+  paths.
+
+**Determinism invariant**: given the same nodes, scenario, and
+``SimConfig.seed``, a run is *bit-reproducible* — the event order, every
+latency/drop draw, the final chains, the credit books, and the
+``SimReport`` (its ``to_json()`` included) are identical across runs.
+Everything random goes through one seeded ``random.Random``; simulated
+time never reads the wallclock.  Nodes with wallclock difficulty
+retargeting (``target_block_s``) are rejected at construction because
+their chain content would depend on host timing (override with
+``SimConfig(allow_wallclock_difficulty=True)`` if you explicitly want a
+non-reproducible run).
+
+Run the canonical scenarios from the CLI::
+
+    PYTHONPATH=src python -m repro.chain.sim --scenario partition
+    PYTHONPATH=src python -m repro.chain.sim --scenario adversarial
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.chain.network import Network
+from repro.chain.node import Node
+from repro.chain.workload import BlockPayload, ChainError
+from repro.core.ledger import Block
+
+__all__ = [
+    "Adversary",
+    "LinkModel",
+    "PayloadCorrupter",
+    "Sim",
+    "SimConfig",
+    "SimReport",
+    "StaleSpammer",
+    "WithholdingMiner",
+    "adversarial_scenario",
+    "partitioned_scenario",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Per-link delivery model: uniform latency in ``[min_latency,
+    max_latency]`` seconds of *simulated* time, i.i.d. drop probability,
+    and the extra round-trip a failed direct delivery pays before the
+    receiver pulls the sender's whole chain (``sync_latency``)."""
+    min_latency: float = 0.01
+    max_latency: float = 0.05
+    drop_prob: float = 0.0
+    sync_latency: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Simulator knobs.  ``seed`` drives every random draw (latency,
+    drops, jitter, churn peer choice); ``max_events`` is the runaway
+    backstop for event loops."""
+    seed: int = 0
+    link: LinkModel = LinkModel()
+    max_events: int = 100_000
+    allow_wallclock_difficulty: bool = False
+
+
+class Adversary:
+    """Base adversary: honest behavior, with the two hooks dishonest
+    nodes override.  ``transform`` is applied to *everything* the node
+    sends (block broadcasts, tip announcements, and full-chain syncs),
+    so a corrupting node cannot accidentally leak its honest local state;
+    ``withholds()`` keeps mined blocks private until released."""
+
+    def install(self, sim: "Sim", node_id: int) -> None:
+        """Called once when the simulation starts; schedule any timed
+        behavior (releases, spam) here."""
+
+    def withholds(self) -> bool:
+        return False
+
+    def transform(self, block: Block, payload: BlockPayload
+                  ) -> Tuple[Block, BlockPayload]:
+        return block, payload
+
+
+class WithholdingMiner(Adversary):
+    """Selfish miner: keeps every block it mines private, then at
+    ``release_at`` announces its tip — if the private chain is strictly
+    longer, honest peers reorg onto it (their own blocks are orphaned
+    and their credit books rebuilt from the adopted payloads)."""
+
+    def __init__(self, release_at: float) -> None:
+        self.release_at = release_at
+        self.withholding = True
+
+    def install(self, sim: "Sim", node_id: int) -> None:
+        sim.at(self.release_at, sim._release, node_id)
+
+    def withholds(self) -> bool:
+        return self.withholding
+
+
+class StaleSpammer(Adversary):
+    """Rebroadcasts an old block of its own chain every ``every``
+    seconds until ``until`` — peers count the duplicates and discard
+    them without state changes (a receive-side idempotence check)."""
+
+    def __init__(self, every: float, until: float, height: int = 0) -> None:
+        self.every, self.until, self.height = every, until, height
+
+    def install(self, sim: "Sim", node_id: int) -> None:
+        t = self.every
+        while t <= self.until:
+            sim.at(t, sim._spam, node_id, self.height)
+            t += self.every
+
+
+class PayloadCorrupter(Adversary):
+    """Byzantine sender: every outgoing (block, payload) pair gets a
+    consistent bogus Merkle root, so the header/payload cross-check
+    passes and rejection happens where it must — in the workload's
+    deterministic re-verification (§3 req. 2).  Corrupted *chains*
+    additionally break their hash links, so ``consider_chain`` rejects
+    them at the linkage check."""
+
+    BAD_ROOT = "f" * 64
+
+    def transform(self, block: Block, payload: BlockPayload
+                  ) -> Tuple[Block, BlockPayload]:
+        return (dataclasses.replace(block, merkle_root=self.BAD_ROOT),
+                dataclasses.replace(payload, merkle_root=self.BAD_ROOT))
+
+
+@dataclasses.dataclass(frozen=True)
+class _MinedBlock:
+    block_hash: str
+    height: int
+    origin: int
+    t_mined: float
+    workload: str
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Deterministic summary of one simulation run (same seed ⇒
+    bit-identical report; see the module docstring).
+
+    Health metrics: ``fork_depth_hist`` maps reorg depth (number of
+    blocks a node discarded when adopting a competing chain; depth 0 =
+    pure catch-up sync) to occurrence count; ``orphan_rate`` is the
+    fraction of mined blocks that did not end up in the canonical chain;
+    ``ttf_mean``/``ttf_max`` are time-to-finality — mine time to the
+    moment the *last* honest node accepted the block — over canonical
+    blocks every honest node holds; ``credit_divergence`` is the maximum
+    pairwise L1 distance between honest nodes' credit books (zero iff
+    the books are bit-consistent)."""
+    seed: int
+    n_nodes: int
+    n_events: int
+    t_end: float
+    # mining
+    blocks_mined: int
+    blocks_withheld: int
+    mine_failures: int
+    # gossip
+    deliveries_sent: int
+    accepts: int
+    duplicates: int
+    rejects: int
+    drops_random: int
+    drops_partition: int
+    spam_sent: int
+    # fork choice
+    syncs: int
+    reorgs: int
+    sync_rejects: int
+    joins: int
+    fork_depth_hist: Dict[int, int]
+    # chain health
+    canonical_height: int
+    orphans: int
+    orphan_rate: float
+    finalized: int
+    unfinalized: int
+    ttf_mean: float
+    ttf_max: float
+    final_heights: List[int]
+    converged: bool
+    credit_divergence: float
+
+    def to_json(self) -> str:
+        """Canonical JSON (sorted keys) — the bit-reproducibility
+        artifact: two runs with the same seed must produce identical
+        strings."""
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+
+class Sim:
+    """Seeded discrete-event asynchronous network simulator over
+    ``Node`` instances.
+
+    Wire protocol per event (all on *simulated* time):
+
+    1. a ``mine_at``/``auto_mine`` event makes one node mine one block
+       (``Node.mine_block`` — self-verified before commit, exactly as on
+       the synchronous ``Network``);
+    2. the block is gossiped to every connected peer, each delivery
+       drawing its own latency (and possibly being dropped);
+    3. on delivery the peer runs the bit-exact receive-side
+       re-verification (``Node.receive``); a tip mismatch schedules a
+       chain pull one ``sync_latency`` later, which applies
+       longest-valid-chain fork choice (``Node.consider_chain`` —
+       ledger *and* credit book rebuilt, stateful workloads rolled
+       back/replayed);
+    4. partitions drop cross-group traffic (including in-flight messages
+       at delivery time); healing makes every node announce its tip so
+       divergent groups reconverge through step 3.
+
+    Construction rejects duplicate node ids, workload instances shared
+    across nodes (sharing voids independent re-verification — same rule
+    as ``Network.create``), and wallclock difficulty retargeting (breaks
+    bit-reproducibility; see the module docstring).
+    """
+
+    def __init__(self, nodes: Sequence[Node],
+                 config: SimConfig = SimConfig(),
+                 adversaries: Optional[Dict[int, Adversary]] = None) -> None:
+        if not nodes:
+            raise ValueError("a simulation needs at least one node")
+        self.config = config
+        self._nodes: Dict[int, Node] = {}
+        seen_wl: Dict[int, int] = {}
+        for node in nodes:
+            self._check_node(node, seen_wl)
+            self._nodes[node.node_id] = node
+        self._adversaries = dict(adversaries or {})
+        for nid in self._adversaries:
+            if nid not in self._nodes:
+                raise ValueError(f"adversary for unknown node {nid}")
+
+        self._rng = random.Random(config.seed)
+        self._events: List[Tuple[float, int, Callable, tuple]] = []
+        self._seq = 0
+        self.now = 0.0
+        self._group: Dict[int, int] = {nid: 0 for nid in self._nodes}
+
+        # bookkeeping for the report
+        self._mined: Dict[str, _MinedBlock] = {}
+        self._accepts: Dict[str, Dict[int, float]] = {}
+        self._fork_depths: Dict[int, int] = {}
+        self._counters = {k: 0 for k in (
+            "blocks_mined", "blocks_withheld", "mine_failures",
+            "deliveries_sent", "accepts", "duplicates", "rejects",
+            "drops_random", "drops_partition", "spam_sent",
+            "syncs", "reorgs", "sync_rejects", "joins")}
+        self._n_events = 0
+
+        for nid, adv in sorted(self._adversaries.items()):
+            adv.install(self, nid)
+
+    def _check_node(self, node: Node, seen_wl: Dict[int, int]) -> None:
+        if node.node_id in self._nodes:
+            raise ValueError(f"duplicate node_id {node.node_id}")
+        if node.difficulty is not None \
+                and not self.config.allow_wallclock_difficulty:
+            raise ValueError(
+                "node retargets difficulty on wallclock block times — that "
+                "makes chain content depend on host timing and breaks the "
+                "simulator's bit-reproducibility guarantee; construct sim "
+                "nodes without target_block_s (or set "
+                "SimConfig(allow_wallclock_difficulty=True) for an "
+                "explicitly non-reproducible run)")
+        for wl in node.workloads.values():
+            owner = seen_wl.setdefault(id(wl), node.node_id)
+            if owner != node.node_id:
+                raise ValueError(
+                    f"workload instance shared between nodes {owner} and "
+                    f"{node.node_id} — every node needs its own Workload "
+                    "objects or 're-verification' compares a stateful "
+                    "workload's history against itself")
+
+    # -- scheduling API -----------------------------------------------
+    def at(self, t: float, fn: Callable, *args) -> None:
+        """Schedule ``fn(*args)`` at simulated time ``t`` (events at the
+        same time fire in scheduling order — the tiebreaker that keeps
+        runs deterministic)."""
+        self._schedule(t, fn, *args)
+
+    def _schedule(self, t: float, fn: Callable, *args) -> None:
+        # simulated time is monotonic: nothing may fire before `now`
+        # (past-dated events would invert mine/accept timestamps and
+        # corrupt the finality metrics)
+        heapq.heappush(self._events, (max(t, self.now), self._seq, fn,
+                                      args))
+        self._seq += 1
+
+    def mine_at(self, t: float, node_id: int,
+                workload: Optional[str] = None) -> None:
+        """One node mines one block at ``t`` and gossips it to every
+        connected peer (unless its adversary withholds)."""
+        self._schedule(t, self._mine, node_id, workload)
+
+    def auto_mine(self, node_id: int, every: float, until: float, *,
+                  start: Optional[float] = None, jitter: float = 0.0,
+                  workload: Optional[str] = None) -> None:
+        """Recurring mining: first block at ``start`` (default
+        ``every``), then every ``every`` ± uniform ``jitter`` seconds
+        while the next tick is <= ``until``."""
+        self._schedule(start if start is not None else every,
+                       self._auto_tick, node_id, every, until, jitter,
+                       workload)
+
+    def partition_at(self, t: float,
+                     groups: Sequence[Sequence[int]]) -> None:
+        """Split the network at ``t``: only nodes in the same group can
+        exchange messages afterwards (nodes absent from every group are
+        isolated).  Messages in flight across a new boundary are dropped
+        at delivery time."""
+        self._schedule(t, self._partition,
+                       tuple(tuple(g) for g in groups))
+
+    def heal_at(self, t: float) -> None:
+        """Rejoin all groups at ``t``.  Every node then announces its
+        tip, so partitioned chains reconverge by longest-valid-chain
+        fork choice (equal-length competing tips stay split until the
+        next mined block breaks the tie, as on any real chain)."""
+        self._schedule(t, self._heal)
+
+    def join_at(self, t: float, node: Node,
+                sync_from: Optional[int] = None) -> None:
+        """Node churn: ``node`` joins mid-chain at ``t`` and immediately
+        pulls a connected peer's chain (``sync_from``, or a seeded-random
+        choice) through ``consider_chain`` — the same fork-choice path a
+        diverged peer uses, so a joiner's ledger/credit book is rebuilt
+        from verified payloads, never trusted."""
+        self._schedule(t, self._join, node, sync_from)
+
+    def announce_at(self, t: float, node_id: int) -> None:
+        """The node gossips its current tip (block + payload) at ``t``;
+        peers behind it will reject the direct append and pull the full
+        chain."""
+        self._schedule(t, self._announce, node_id)
+
+    # -- event handlers -----------------------------------------------
+    def _connected(self, a: int, b: int) -> bool:
+        return self._group.get(a) == self._group.get(b)
+
+    def _auto_tick(self, nid: int, every: float, until: float,
+                   jitter: float, workload: Optional[str]) -> None:
+        self._mine(nid, workload)
+        nxt = self.now + every
+        if jitter > 0.0:
+            nxt += self._rng.uniform(-jitter, jitter)
+        # simulated time is monotonic: a jitter draw larger than the
+        # period must never schedule into the past (that would invert
+        # mine/accept timestamps and corrupt the finality metrics)
+        nxt = max(nxt, self.now)
+        if nxt <= until:
+            self._schedule(nxt, self._auto_tick, nid, every, until, jitter,
+                           workload)
+
+    def _mine(self, nid: int, workload: Optional[str]) -> None:
+        node = self._nodes.get(nid)
+        if node is None:
+            return
+        try:
+            receipt = node.mine_block(workload)
+        except ChainError:
+            self._counters["mine_failures"] += 1
+            return
+        rec = receipt.record
+        self._counters["blocks_mined"] += 1
+        self._mined[rec.block_hash] = _MinedBlock(
+            rec.block_hash, rec.height, nid, self.now, rec.workload)
+        self._accepts.setdefault(rec.block_hash, {})[nid] = self.now
+        adv = self._adversaries.get(nid)
+        if adv is not None and adv.withholds():
+            self._counters["blocks_withheld"] += 1
+            return
+        self._gossip(nid, rec.to_block(), receipt.payload)
+
+    def _gossip(self, origin: int, block: Block,
+                payload: BlockPayload) -> None:
+        adv = self._adversaries.get(origin)
+        if adv is not None:
+            block, payload = adv.transform(block, payload)
+        link = self.config.link
+        for dest in sorted(self._nodes):
+            if dest == origin:
+                continue
+            if not self._connected(origin, dest):
+                self._counters["drops_partition"] += 1
+                continue
+            if self._rng.random() < link.drop_prob:
+                self._counters["drops_random"] += 1
+                continue
+            lat = self._rng.uniform(link.min_latency, link.max_latency)
+            self._counters["deliveries_sent"] += 1
+            self._schedule(self.now + lat, self._deliver, origin, dest,
+                           block, payload)
+
+    def _deliver(self, origin: int, dest: int, block: Block,
+                 payload: BlockPayload) -> None:
+        node = self._nodes.get(dest)
+        if node is None:
+            return
+        if not self._connected(origin, dest):
+            # the link went down while the message was in flight
+            self._counters["drops_partition"] += 1
+            return
+        if node.has_block(block.block_hash):
+            self._counters["duplicates"] += 1
+            return
+        if node.receive(block, payload, origin=origin):
+            self._counters["accepts"] += 1
+            self._accepts.setdefault(block.block_hash, {}) \
+                .setdefault(dest, self.now)
+            return
+        # invalid payload OR tip mismatch: pull the sender's whole chain
+        # after a sync round-trip and run fork choice on it
+        self._counters["rejects"] += 1
+        self._schedule(self.now + self.config.link.sync_latency,
+                       self._sync, origin, dest)
+
+    def _sync(self, origin: int, dest: int) -> None:
+        src, node = self._nodes.get(origin), self._nodes.get(dest)
+        if src is None or node is None:
+            return
+        if not self._connected(origin, dest):
+            self._counters["drops_partition"] += 1
+            return
+        self._counters["syncs"] += 1
+        blocks: List[Block] = list(src.ledger.blocks)
+        payloads = src.chain_payloads()
+        adv = self._adversaries.get(origin)
+        if adv is not None:
+            pairs = [adv.transform(b, p) for b, p in zip(blocks, payloads)]
+            blocks = [b for b, _ in pairs]
+            payloads = [p for _, p in pairs]
+        pre = [b.block_hash for b in node.ledger.blocks]
+        if not node.consider_chain(blocks, payloads):
+            self._counters["sync_rejects"] += 1
+            return
+        self._counters["reorgs"] += 1
+        new = [b.block_hash for b in node.ledger.blocks]
+        common = 0
+        for a, b in zip(pre, new):
+            if a != b:
+                break
+            common += 1
+        depth = len(pre) - common       # blocks the node discarded
+        self._fork_depths[depth] = self._fork_depths.get(depth, 0) + 1
+        for h in new[common:]:
+            self._accepts.setdefault(h, {}).setdefault(dest, self.now)
+
+    def _partition(self, groups: Tuple[Tuple[int, ...], ...]) -> None:
+        listed = set()
+        for g, members in enumerate(groups, start=1):
+            for nid in members:
+                self._group[nid] = g
+                listed.add(nid)
+        for nid in self._group:
+            if nid not in listed:
+                self._group[nid] = -(nid + 1)     # isolated singleton
+
+    def _heal(self) -> None:
+        for nid in self._group:
+            self._group[nid] = 0
+        for nid in sorted(self._nodes):
+            self._announce(nid)
+
+    def _announce(self, nid: int) -> None:
+        node = self._nodes.get(nid)
+        if node is None or node.ledger.height == 0:
+            return
+        self._gossip(nid, node.ledger.blocks[-1],
+                     node.chain_payloads()[-1])
+
+    def _join(self, node: Node, sync_from: Optional[int]) -> None:
+        seen_wl: Dict[int, int] = {}
+        for other in self._nodes.values():
+            for wl in other.workloads.values():
+                seen_wl[id(wl)] = other.node_id
+        self._check_node(node, seen_wl)
+        nid = node.node_id
+        self._nodes[nid] = node
+        self._group[nid] = 0
+        self._counters["joins"] += 1
+        if sync_from is not None:
+            if sync_from not in self._nodes:
+                raise ValueError(
+                    f"join_at sync_from={sync_from} is not a known node")
+            # always schedule the explicitly requested sync; if the link
+            # is partitioned, _sync counts it as drops_partition instead
+            # of silently skipping the bootstrap
+            src = sync_from
+        else:
+            peers = [p for p in sorted(self._nodes)
+                     if p != nid and self._connected(nid, p)]
+            if not peers:
+                return
+            src = self._rng.choice(peers)
+        self._schedule(self.now + self.config.link.sync_latency,
+                       self._sync, src, nid)
+
+    def _spam(self, nid: int, height: int) -> None:
+        node = self._nodes.get(nid)
+        if node is None or height >= node.ledger.height:
+            return
+        self._counters["spam_sent"] += 1
+        self._gossip(nid, node.ledger.blocks[height],
+                     node.chain_payloads()[height])
+
+    def _release(self, nid: int) -> None:
+        adv = self._adversaries.get(nid)
+        if isinstance(adv, WithholdingMiner):
+            adv.withholding = False
+        self._announce(nid)
+
+    # -- run + report -------------------------------------------------
+    def run(self, until: Optional[float] = None) -> SimReport:
+        """Drain the event queue (optionally only up to ``until``) and
+        return the ``SimReport``.  Processing is single-threaded and
+        deterministic; ``config.max_events`` bounds runaway feedback
+        loops (exceeding it raises rather than silently truncating)."""
+        while self._events:
+            if self._n_events >= self.config.max_events:
+                raise RuntimeError(
+                    f"simulation exceeded max_events="
+                    f"{self.config.max_events} — runaway event loop?")
+            t = self._events[0][0]
+            if until is not None and t > until:
+                break
+            t, _, fn, args = heapq.heappop(self._events)
+            self.now = t
+            self._n_events += 1
+            fn(*args)
+        return self.report()
+
+    @property
+    def honest_nodes(self) -> List[Node]:
+        """Nodes with no adversary attached, ascending id — the
+        population convergence and divergence metrics quantify over."""
+        return [self._nodes[nid] for nid in sorted(self._nodes)
+                if nid not in self._adversaries]
+
+    def converged(self) -> bool:
+        """True iff every honest node holds the same verified chain —
+        equal tips, valid hash links, bit-identical Merkle roots at
+        every height (delegates to ``Network.converged``)."""
+        honest = self.honest_nodes
+        if not honest:
+            return True
+        return Network(honest).converged()
+
+    def report(self) -> SimReport:
+        """Build the deterministic ``SimReport`` from the current
+        simulation state (``run`` calls this at the end; calling it
+        mid-run is fine and snapshots the metrics so far)."""
+        honest = self.honest_nodes
+        canonical = max(honest, key=lambda n: (n.ledger.height,
+                                               -n.node_id),
+                        default=None)
+        canon_hashes = ([b.block_hash for b in canonical.ledger.blocks]
+                        if canonical is not None else [])
+        canon_set = set(canon_hashes)
+        orphans = sum(1 for h in self._mined if h not in canon_set)
+
+        honest_ids = [n.node_id for n in honest]
+        ttfs: List[float] = []
+        finalized = unfinalized = 0
+        for h in canon_hashes:
+            info = self._mined.get(h)
+            if info is None:
+                continue                       # block predates the sim
+            times = self._accepts.get(h, {})
+            if all(nid in times for nid in honest_ids):
+                ttfs.append(max(times[nid] for nid in honest_ids)
+                            - info.t_mined)
+                finalized += 1
+            else:
+                unfinalized += 1
+
+        divergence = 0.0
+        books = [n.book.balances for n in honest]
+        for i in range(len(books)):
+            for j in range(i + 1, len(books)):
+                keys = set(books[i]) | set(books[j])
+                d = sum(abs(books[i].get(k, 0.0) - books[j].get(k, 0.0))
+                        for k in keys)
+                divergence = max(divergence, d)
+
+        c = self._counters
+        return SimReport(
+            seed=self.config.seed,
+            n_nodes=len(self._nodes),
+            n_events=self._n_events,
+            t_end=self.now,
+            blocks_mined=c["blocks_mined"],
+            blocks_withheld=c["blocks_withheld"],
+            mine_failures=c["mine_failures"],
+            deliveries_sent=c["deliveries_sent"],
+            accepts=c["accepts"],
+            duplicates=c["duplicates"],
+            rejects=c["rejects"],
+            drops_random=c["drops_random"],
+            drops_partition=c["drops_partition"],
+            spam_sent=c["spam_sent"],
+            syncs=c["syncs"],
+            reorgs=c["reorgs"],
+            sync_rejects=c["sync_rejects"],
+            joins=c["joins"],
+            fork_depth_hist=dict(sorted(self._fork_depths.items())),
+            canonical_height=len(canon_hashes),
+            orphans=orphans,
+            orphan_rate=orphans / max(len(self._mined), 1),
+            finalized=finalized,
+            unfinalized=unfinalized,
+            ttf_mean=(sum(ttfs) / len(ttfs)) if ttfs else 0.0,
+            ttf_max=max(ttfs) if ttfs else 0.0,
+            final_heights=[self._nodes[nid].ledger.height
+                           for nid in sorted(self._nodes)],
+            converged=self.converged(),
+            credit_divergence=divergence,
+        )
+
+
+# ---------------------------------------------------------------------------
+# canonical scenarios (used by tests, benchmarks and the CLI)
+# ---------------------------------------------------------------------------
+
+
+def partitioned_scenario(n_nodes: int = 4, seed: int = 0, *,
+                         blocks_a: int = 2, blocks_b: int = 3,
+                         classic_arg_bits: int = 6,
+                         n_lanes: int = 1,
+                         drop_prob: float = 0.0) -> Sim:
+    """The acceptance scenario: the network splits into two halves, each
+    half mines its own chain (``blocks_a`` vs ``blocks_b`` classic
+    blocks), then the partition heals — the shorter half must reorg onto
+    the longer chain and every honest credit book must be rebuilt to
+    bit-consistency (``credit_divergence == 0``)."""
+    nodes = [Node(node_id=i, classic_arg_bits=classic_arg_bits,
+                  n_lanes=n_lanes) for i in range(n_nodes)]
+    cfg = SimConfig(seed=seed,
+                    link=LinkModel(drop_prob=drop_prob))
+    sim = Sim(nodes, cfg)
+    half = max(n_nodes // 2, 1)
+    sim.partition_at(0.0, [list(range(half)), list(range(half, n_nodes))])
+    t = 1.0
+    for b in range(blocks_a):
+        sim.mine_at(t, b % half)
+        t += 1.0
+    t = 1.5
+    for b in range(blocks_b):
+        sim.mine_at(t, half + b % max(n_nodes - half, 1))
+        t += 1.0
+    sim.heal_at(2.0 + max(blocks_a, blocks_b))
+    return sim
+
+
+def adversarial_scenario(n_honest: int = 3, seed: int = 0, *,
+                         classic_arg_bits: int = 6) -> Sim:
+    """Withholding + corruption in one run: node ``n_honest`` selfish-
+    mines a 3-block private chain and releases it at t=6 (outrunning the
+    2 honest blocks — a depth-2 reorg with orphans); node
+    ``n_honest + 1`` corrupts everything it sends, so its block is
+    rejected by every peer and orphaned.  A final honest block at t=8
+    converges everyone onto one chain."""
+    wid, cid = n_honest, n_honest + 1
+    nodes = [Node(node_id=i, classic_arg_bits=classic_arg_bits)
+             for i in range(n_honest + 2)]
+    sim = Sim(nodes, SimConfig(seed=seed),
+              adversaries={wid: WithholdingMiner(release_at=6.0),
+                           cid: PayloadCorrupter()})
+    for t in (0.5, 1.0, 1.5):                   # private chain, 3 blocks
+        sim.mine_at(t, wid)
+    sim.mine_at(2.0, 0)                          # honest chain, 2 blocks
+    sim.mine_at(4.0, 1 % n_honest)
+    sim.mine_at(3.0, cid)                        # corrupted broadcast
+    sim.mine_at(8.0, 0)                          # post-release tiebreak
+    return sim
+
+
+def _main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", choices=("partition", "adversarial"),
+                    default="partition")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--nodes", type=int, default=4,
+                    help="node count (partition) / honest count "
+                         "(adversarial)")
+    args = ap.parse_args()
+    if args.scenario == "partition":
+        sim = partitioned_scenario(n_nodes=args.nodes, seed=args.seed)
+    else:
+        sim = adversarial_scenario(n_honest=max(args.nodes - 2, 1),
+                                   seed=args.seed)
+    report = sim.run()
+    print(json.dumps(dataclasses.asdict(report), indent=2, sort_keys=True))
+    assert report.converged, "honest nodes failed to converge"
+    assert report.credit_divergence == 0.0, "credit books diverged"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -50,7 +50,13 @@ class ChainError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class BlockContext:
-    """Everything a workload needs to know about the block being mined."""
+    """Everything a workload needs to know about the block being mined.
+
+    ``lanes`` is the single-device miner partition (``Node(n_lanes=k)``):
+    full/optimal mining vmaps over ``k`` lane-partitioned miner ids in
+    one device dispatch, and lane ``l`` of node ``i`` is credited as
+    global miner ``global_miner(i, l)``.  Lane partitioning never
+    changes the mined bits, so peers verify with ``lanes=1``."""
     height: int
     prev_hash: str
     node_id: int = 0
@@ -59,6 +65,7 @@ class BlockContext:
     work: Optional[int] = None         # args-per-block target (§3.1/§5)
     block_reward: float = 50.0
     mesh: Optional[object] = None      # jax Mesh for the miner fleet
+    lanes: int = 1                     # single-device miner lanes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,13 +159,21 @@ class JashFullWorkload:
         self.bonus_fraction = bonus_fraction
 
     def prepare(self, ctx: BlockContext) -> PreparedWork:
+        """Resolve the published jash against the block's args-per-block
+        target (§3.1 granularity via ``meta.max_arg``).  Raises
+        ``ChainError`` without a publication — full mode never invents
+        its own work."""
         if ctx.jash is None:
             raise ChainError("full workload needs a published jash")
         return PreparedWork(ctx, _sized(ctx.jash, ctx.work))
 
     def mine(self, work: PreparedWork) -> BlockPayload:
+        """Evaluate every valid arg on the fused executor (one vmapped
+        dispatch per chunk across ``ctx.lanes`` miner lanes) and commit
+        the device Merkle root.  The payload carries the full evidence
+        (`args`/`results`/`hashes`/`miner_of`) a peer re-verifies."""
         ctx, jash = work.ctx, work.jash
-        full = run_full(jash, mesh=ctx.mesh)
+        full = run_full(jash, mesh=ctx.mesh, lanes=ctx.lanes)
         return BlockPayload(
             workload=self.name, jash_id=jash.source_id(),
             merkle_root=full.commit_root(), n_results=len(full.args),
@@ -166,6 +181,15 @@ class JashFullWorkload:
             jash=jash, full=full)
 
     def verify(self, payload: BlockPayload) -> bool:
+        """The §3 req. 2 determinism audit every peer runs on receive:
+        (a) the committed ``jash_id`` must equal the evidence jash's
+        ``source_id()``; (b) the committed root is recomputed
+        *independently* (hashlib, not the device kernel that produced
+        it) from the raw ``(arg, res)`` arrays; (c) a random
+        ``verify_fraction`` of the arg space is re-executed bit-exactly.
+        Lane partitioning does not change results, so a ``lanes=1``
+        verifier audits a multi-lane miner unchanged.  Stateless: safe
+        to call any number of times, nothing to roll back."""
         full = payload.full
         if full is None or payload.jash is None:
             return False
@@ -184,6 +208,11 @@ class JashFullWorkload:
 
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries:
+        """Split the block reward evenly over first submissions
+        (``full.miner_of`` mapped into the origin node's miner lanes)
+        plus the §4 leading-zeros bonus.  Derived only from the payload,
+        so every node's book stays bit-identical — the invariant fork
+        choice relies on when it rebuilds books from adopted payloads."""
         full = payload.full
         staged = CreditBook()
         submitters = [global_miner(payload.origin, m)
@@ -217,13 +246,20 @@ class JashOptimalWorkload:
     name = "optimal"
 
     def prepare(self, ctx: BlockContext) -> PreparedWork:
+        """Resolve the published jash against the args-per-block target;
+        raises ``ChainError`` without a publication."""
         if ctx.jash is None:
             raise ChainError("optimal workload needs a published jash")
         return PreparedWork(ctx, _sized(ctx.jash, ctx.work))
 
     def mine(self, work: PreparedWork) -> BlockPayload:
+        """Distributed argmin over the arg space — ``ctx.lanes`` miner
+        lanes reduced in one vmapped dispatch; the winning lane's global
+        miner id takes the block.  ``(best_arg, best_res)`` is
+        independent of the lane count (contiguous lanes preserve the
+        first-occurrence tie-break), which is what peers re-derive."""
         ctx, jash = work.ctx, work.jash
-        opt = run_optimal(jash, mesh=ctx.mesh)
+        opt = run_optimal(jash, mesh=ctx.mesh, lanes=ctx.lanes)
         leaf = (np.uint32(opt.best_arg).tobytes()
                 + opt.best_res.astype("<u4").tobytes())
         return BlockPayload(
@@ -235,6 +271,13 @@ class JashOptimalWorkload:
             jash=jash, best_arg=opt.best_arg)
 
     def verify(self, payload: BlockPayload) -> bool:
+        """Deterministic argmin replay (§3 req. 2), run on receive: the
+        committed ``jash_id`` must match the evidence, the claimed
+        winner's lane must belong to the claimed origin (a payload
+        crediting someone else's lane mints nothing), and a single-lane
+        re-execution must reproduce ``(best_arg, best_res)`` and the
+        one-leaf Merkle root bit-exactly.  Stateless — nothing to roll
+        back on failure."""
         if payload.jash is None:
             return False
         if payload.jash.source_id() != payload.jash_id:
@@ -254,6 +297,9 @@ class JashOptimalWorkload:
 
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries:
+        """Winner takes the whole block reward — derived only from the
+        payload (already lane-checked by ``verify``), so rebuilt books
+        agree bit-exactly across nodes after fork adoption."""
         staged = CreditBook()
         reward_optimal(staged, payload.winner, payload.block_reward)
         return _apply_rewards(book, staged)
@@ -267,15 +313,35 @@ class JashOptimalWorkload:
 class ClassicSha256Workload(JashOptimalWorkload):
     """§3.4 back-compatibility: when the researcher queue is empty the
     chain mines plain double-SHA-256 blocks — an optimal-mode search over
-    a bounded nonce space."""
+    a bounded nonce space (``arg_bits`` nonces; lowest double-SHA-256
+    wins, i.e. "most leading zeros" exactly as in Bitcoin).
+
+    This is the **default-policy fallback**: ``Node.mine_block(None)``
+    selects it whenever the RA queue is empty, so an idle chain keeps
+    extending (and keeps its difficulty/work signal alive) instead of
+    stalling.  Verification and rewards are inherited unchanged from
+    ``JashOptimalWorkload`` — a classic block is re-verified on receive
+    by the same deterministic argmin replay, and participates in
+    longest-valid-chain fork choice exactly like any jash block (mixed
+    classic/full/optimal chains replay workload-by-workload)."""
 
     name = "classic"
 
     def __init__(self, *, arg_bits: int = 10) -> None:
         self.arg_bits = arg_bits
+        self._base: Optional[Jash] = None
 
     def prepare(self, ctx: BlockContext) -> PreparedWork:
-        base = ctx.jash if ctx.jash is not None else classic_jash()
+        """Publish the (cached) classic double-SHA-256 jash over this
+        workload's nonce space.  The base jash is built once per
+        workload so its function identity is stable and every classic
+        block reuses the executors' compiled caches."""
+        if ctx.jash is not None:
+            base = ctx.jash
+        else:
+            if self._base is None:
+                self._base = classic_jash()
+            base = self._base
         jash = Jash(base.name, base.fn,
                     JashMeta(arg_bits=self.arg_bits, res_bits=256,
                              description=base.meta.description),
@@ -338,9 +404,17 @@ class TrainingWorkload:
         t.book.total_issued = snap[5]
 
     def prepare(self, ctx: BlockContext) -> PreparedWork:
+        """The published jash *is* the validated train step (the trainer
+        re-derives the block's batch from (seed, height), so there is no
+        per-block work sizing)."""
         return PreparedWork(ctx, self.trainer.step_jash)
 
     def mine(self, work: PreparedWork) -> BlockPayload:
+        """Advance the local trainer one block (``block_microsteps``
+        scan-fused train steps) and commit the post-step state digest.
+        Mining mutates trainer state — if this block later loses fork
+        choice, ``consider_chain`` unwinds it via ``reset()`` + replay
+        of the adopted chain."""
         ctx = work.ctx
         t = self.trainer
         rec = t.run_block()
@@ -356,6 +430,16 @@ class TrainingWorkload:
         return payload
 
     def verify(self, payload: BlockPayload) -> bool:
+        """Verification *is* re-execution, and it is **stateful**: a
+        payload at the trainer's own height advances the local trainer
+        one block and compares state digests bit-exactly (§3 req. 2), so
+        on receive the audit doubles as state sync.  A mismatch restores
+        the pre-verify snapshot — trainer state, history, *and* its
+        internal credit book — leaving the node exactly where it was.
+        Payloads below the local height re-verify against history plus a
+        genuine incremental replay (``audit_block``); the only exception
+        is the one-shot fast path for the payload this very process just
+        mined (documented inline below)."""
         t = self.trainer
         h = payload.train_height
         if h is None or h > t.ledger.height:
@@ -389,6 +473,10 @@ class TrainingWorkload:
 
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries:
+        """Full-mode training splits the reward across the origin's
+        ``n_miners`` lanes; ES/optimal training pays the winning lane.
+        Derived only from the payload so rebuilt books agree after fork
+        adoption."""
         staged = CreditBook()
         if payload.winner is not None:        # optimal/ES trainer mode
             reward_optimal(staged, payload.winner, payload.block_reward)

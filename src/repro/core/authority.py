@@ -125,18 +125,21 @@ class RuntimeAuthority:
         return len(self._queue)
 
 
+def _classic_fn(arg: "jax.Array") -> "jax.Array":
+    # module-level (stable identity) so every classic block — across
+    # blocks and across in-process nodes — hits the executors' compiled
+    # caches instead of re-jitting a fresh closure per publication
+    msg = jnp.stack([arg.astype(jnp.uint32),
+                     jnp.uint32(0x504e5043)])[None]        # "PNPC" salt
+    h1 = sha256_words(msg)
+    return sha256_words(h1)[0]                              # double-SHA256
+
+
 def classic_jash(arg_bits: int = 20) -> Jash:
     """§3.4: 'jash functions containing the SHA-256 hashes with fixed
     input, and empty meta files' — plain double-SHA-256 proof of work."""
-
-    def fn(arg: jax.Array) -> jax.Array:
-        msg = jnp.stack([arg.astype(jnp.uint32),
-                         jnp.uint32(0x504e5043)])[None]    # "PNPC" salt
-        h1 = sha256_words(msg)
-        return sha256_words(h1)[0]                          # double-SHA256
-
     meta = JashMeta(arg_bits=arg_bits, res_bits=256, data_checksum="",
                     data_acquisition="none", importance=0.0,
                     description="Classic SHA-256 block (back-compat §3.4)")
-    return Jash("classic-sha256", fn, meta,
+    return Jash("classic-sha256", _classic_fn, meta,
                 example_args=(jnp.uint32(0),))

@@ -16,9 +16,23 @@ zeros": each miner reduces its slice to the lexicographic (res, arg)
 minimum in a single vectorized pass (min + tie-masked min + argmax — no
 O(n log n) sort), and a global gather-min picks the block winner.
 
+**multi-lane mining** — ``lanes=k`` emulates a k-miner fleet on one
+device: the arg space is partitioned over k miner lanes and the whole
+fleet runs as one vmapped dispatch (full mode: a strided
+``(width, lanes)`` re-tile inside the fused chunk executor, so
+``miner_of = arg % lanes`` attribution matches the mesh convention;
+optimal mode: contiguous per-lane slices, each reduced to its
+lexicographic minimum, with a cross-lane argmin picking the winner
+lane).  Lane partitioning never changes the mined bits: full-mode
+results/hashes and the optimal ``(best_arg, best_res)`` are bit-identical
+to ``lanes=1`` — contiguous optimal slices preserve the global
+first-occurrence tie-break — which is what lets a verifier replay with
+``lanes=1`` and still match a multi-lane miner's commitment exactly.
+
 On the CPU container the same code runs on a 1-device mesh; on the
 production mesh the miner axis is ("data",) (256 miners/pod) or
-("pod", "data") (512).
+("pod", "data") (512).  ``lanes`` and a sharded mesh are mutually
+exclusive: a real fleet already has its miner axes.
 """
 from __future__ import annotations
 
@@ -94,13 +108,28 @@ def _miner_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
 
 @functools.lru_cache(maxsize=128)
 def _chunk_executor(jash_fn: Callable, mesh: Optional[Mesh],
-                    axes: Tuple[str, ...]):
+                    axes: Tuple[str, ...], lanes: int = 1):
     """Compiled full-mode chunk dispatcher, cached on the jash function so
     repeated ``run_full`` calls (and all chunks within one) reuse one
-    executable instead of re-jitting a fresh closure per call."""
+    executable instead of re-jitting a fresh closure per call.
+
+    With ``lanes > 1`` (single-device multi-lane mode) the chunk is
+    re-tiled to ``(width, lanes)`` and the jash is vmapped over both
+    axes: lane ``l`` evaluates exactly the args ``≡ l (mod lanes)`` it is
+    credited for (``miner_of = arg % lanes``), and the whole lane fleet
+    is still one device dispatch.  Element-wise independence makes the
+    outputs bit-identical to the ``lanes=1`` layout."""
 
     def eval_chunk(args_slice):
-        res = jax.vmap(lambda a: _as_words(jash_fn(a)))(args_slice)
+        if lanes > 1:
+            # strided lane partition: row-major (width, lanes) puts arg
+            # a in column a % lanes == its miner lane
+            lane_args = args_slice.reshape(-1, lanes)
+            res = jax.vmap(jax.vmap(lambda a: _as_words(jash_fn(a))))(
+                lane_args)
+            res = res.reshape(args_slice.shape[0], -1)
+        else:
+            res = jax.vmap(lambda a: _as_words(jash_fn(a)))(args_slice)
         msg = jnp.concatenate([args_slice[:, None], res], axis=1)
         hashes = sha256_words(msg)
         # Merkle leaf = little-endian bytes of (arg, res) words; bswap
@@ -119,21 +148,32 @@ def _chunk_executor(jash_fn: Callable, mesh: Optional[Mesh],
 
 def run_full(jash: Jash, *, mesh: Optional[Mesh] = None,
              block_reward: float = 1.0,
-             chunk_size: Optional[int] = None) -> FullResult:
+             chunk_size: Optional[int] = None,
+             lanes: int = 1) -> FullResult:
     """Evaluate every valid arg (§3.3 full mode), ``chunk_size`` rows per
     dispatch (None = whole space in one dispatch, capped at
-    ``DEFAULT_CHUNK``)."""
+    ``DEFAULT_CHUNK``).  ``lanes`` partitions the arg space over that
+    many single-device miner lanes (one vmapped dispatch; ``miner_of =
+    arg % lanes``); results are bit-identical to ``lanes=1``."""
     if chunk_size is not None and chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
     n = jash.meta.n_args
     axes = _miner_axes(mesh)
-    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and lanes != 1:
+        raise ValueError(
+            "lanes is the single-device miner partition; a sharded mesh "
+            "already defines the miner fleet via its axes — use one or "
+            "the other")
+    lanes = min(lanes, n)
+    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else lanes
 
     chunk = min(n, chunk_size or DEFAULT_CHUNK)
     chunk += -chunk % n_miners                 # dispatch divisible by miners
     n_chunks = -(-n // chunk)
 
-    jitted = _chunk_executor(jash.fn, mesh, axes)
+    jitted = _chunk_executor(jash.fn, mesh, axes, lanes)
     ctx = mesh if (mesh is not None and axes) else None
 
     # the last chunk is right-sized (rounded up to the miner count) so a
@@ -177,27 +217,72 @@ def _lex_argmin(w0: jax.Array, w1: jax.Array) -> jax.Array:
     return jnp.argmax(tie & (w1 == m1))
 
 
-def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None) -> OptimalResult:
+def _eval_and_reduce(jash_fn: Callable, args_slice, valid_slice):
+    """One miner's slice -> its lexicographic (res, arg) minimum, first
+    occurrence (three reductions, no sort)."""
+    res = jax.vmap(lambda a: _as_words(jash_fn(a)))(args_slice)
+    w0 = jnp.where(valid_slice, res[:, 0], MAXW)
+    w1 = res[:, 1] if res.shape[1] > 1 else jnp.zeros_like(res[:, 0])
+    w1 = jnp.where(valid_slice, w1, MAXW)
+    i = _lex_argmin(w0, w1)
+    return w0[i], w1[i], args_slice[i], res[i]
+
+
+@functools.lru_cache(maxsize=128)
+def _optimal_executor(jash_fn: Callable, lanes: int):
+    """Compiled single-device optimal-mode reducer, cached on the jash
+    function (repeated mining/verification replays reuse one executable
+    instead of re-jitting a fresh closure per call — the same fix
+    ``_chunk_executor`` applies to full mode).
+
+    ``lanes > 1`` vmaps the per-miner reduction over contiguous
+    per-lane slices of the arg space in one dispatch; a cross-lane
+    lex-argmin then picks the winner lane.  Contiguous slices preserve
+    the global first-occurrence tie-break, so ``(best_arg, best_res)``
+    is bit-identical for every lane count."""
+
+    def reduce_all(args, valid):
+        lane_args = args.reshape(lanes, -1)
+        lane_valid = valid.reshape(lanes, -1)
+        w0s, w1s, argss, ress = jax.vmap(
+            lambda a, v: _eval_and_reduce(jash_fn, a, v))(
+                lane_args, lane_valid)
+        best = _lex_argmin(w0s, w1s)
+        return argss[best], ress[best], best.astype(jnp.int32)
+
+    return jax.jit(reduce_all)
+
+
+def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None,
+                lanes: int = 1) -> OptimalResult:
     """Distributed argmin of res (§3.3 optimal mode).  The res ordering is
-    lexicographic on words == 'most leading zeros' for hash-like outputs."""
+    lexicographic on words == 'most leading zeros' for hash-like outputs.
+
+    ``lanes`` partitions the arg space into that many contiguous
+    single-device miner lanes mined in one vmapped dispatch; ``winner``
+    is the lane holding the block minimum.  ``(best_arg, best_res)`` is
+    independent of the lane count, so a verifier replaying with
+    ``lanes=1`` reproduces a multi-lane miner's commitment bit-exactly.
+    """
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
     n = jash.meta.n_args
     axes = _miner_axes(mesh)
-    n_miners = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
-    n_pad = -n % n_miners
-    args = jnp.arange(n + n_pad, dtype=jnp.uint32)
-    valid = args < n
-
-    def eval_and_reduce(args_slice, valid_slice):
-        res = jax.vmap(lambda a: _as_words(jash.fn(a)))(args_slice)
-        w0 = jnp.where(valid_slice, res[:, 0], MAXW)
-        w1 = res[:, 1] if res.shape[1] > 1 else jnp.zeros_like(res[:, 0])
-        w1 = jnp.where(valid_slice, w1, MAXW)
-        i = _lex_argmin(w0, w1)
-        return w0[i], w1[i], args_slice[i], res[i]
 
     if mesh is not None and axes:
+        if lanes != 1:
+            raise ValueError(
+                "lanes is the single-device miner partition; a sharded "
+                "mesh already defines the miner fleet via its axes — use "
+                "one or the other")
+        n_miners = int(np.prod([mesh.shape[a] for a in axes]))
+        n_pad = -n % n_miners
+        args = jnp.arange(n + n_pad, dtype=jnp.uint32)
+        valid = args < n
+
         def sharded(args_all, valid_all):
-            w0, w1, arg, res = eval_and_reduce(args_all, valid_all)
+            w0, w1, arg, res = _eval_and_reduce(jash.fn, args_all,
+                                                valid_all)
             w0g = jax.lax.all_gather(w0, axes)
             w1g = jax.lax.all_gather(w1, axes)
             argsg = jax.lax.all_gather(arg, axes)
@@ -210,8 +295,12 @@ def run_optimal(jash: Jash, *, mesh: Optional[Mesh] = None) -> OptimalResult:
         with mesh:
             best_arg, best_res, winner = jax.jit(fn)(args, valid)
     else:
-        _, _, best_arg, best_res = jax.jit(eval_and_reduce)(args, valid)
-        winner = 0
+        lanes = min(lanes, n)
+        n_pad = -n % lanes
+        args = jnp.arange(n + n_pad, dtype=jnp.uint32)
+        valid = args < n
+        best_arg, best_res, winner = _optimal_executor(jash.fn, lanes)(
+            args, valid)
 
     return OptimalResult(best_arg=int(best_arg),
                          best_res=np.atleast_1d(np.asarray(best_res)),

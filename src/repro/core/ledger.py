@@ -10,6 +10,7 @@ except by publishing a jash id the miners then commit.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import json
 import time
@@ -108,8 +109,12 @@ class Block:
         d.pop("timestamp")
         return json.dumps(d, sort_keys=True).encode()
 
-    @property
+    @functools.cached_property
     def block_hash(self) -> str:
+        # cached: duplicate detection on the gossip hot path compares
+        # hashes against whole chains, and the frozen dataclass never
+        # changes after construction (cached_property writes straight to
+        # __dict__, bypassing the frozen __setattr__)
         return sha256_hex(self.header_bytes())
 
 

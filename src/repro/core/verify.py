@@ -10,6 +10,7 @@ against the block's Merkle root — the light-client path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
@@ -29,6 +30,14 @@ class VerifyReport:
     mismatched_args: tuple = ()
 
 
+@functools.lru_cache(maxsize=128)
+def _recompute_fn(jash_fn):
+    """Compiled subset re-executor, cached on the jash function so every
+    audit of the same jash (a network's worth of receive-side verifies)
+    reuses one executable instead of re-jitting per call."""
+    return jax.jit(jax.vmap(lambda a: _as_words(jash_fn(a))))
+
+
 def quorum_verify(jash: Jash, full: FullResult, *, fraction: float = 0.05,
                   seed: int = 0, min_checks: int = 4) -> VerifyReport:
     """Deterministic re-execution of a random subset of args."""
@@ -38,8 +47,7 @@ def quorum_verify(jash: Jash, full: FullResult, *, fraction: float = 0.05,
     idx = rng.choice(n, size=min(k, n), replace=False)
 
     args = jnp.asarray(full.args[idx], jnp.uint32)
-    recomputed = jax.jit(jax.vmap(lambda a: _as_words(jash.fn(a))))(args)
-    recomputed = np.asarray(recomputed)
+    recomputed = np.asarray(_recompute_fn(jash.fn)(args))
 
     mism = [int(full.args[i]) for j, i in enumerate(idx)
             if not np.array_equal(recomputed[j], full.results[i])]

@@ -1,0 +1,53 @@
+"""Doc-consistency: docs/api.md covers every exported name, README and
+api.md code blocks actually execute (the same checks
+``scripts/check_docs.py`` runs in CI — kept in tier-1 so a doc drift
+fails fast locally too)."""
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "scripts" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_api_md_covers_all_exports():
+    problems = _load_checker().check_api_coverage()
+    assert not problems, "\n".join(problems)
+
+
+def test_readme_python_blocks_execute():
+    problems = _load_checker().run_readme_blocks()
+    assert not problems, "\n".join(problems)
+
+
+def test_api_md_snippets_execute():
+    """Every ```python block of docs/api.md runs, in order, in one
+    shared namespace (the first block defines the shared ``small_jash``
+    helper the entries use)."""
+    text = (REPO / "docs" / "api.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    assert len(blocks) > 40          # one per documented entry, roughly
+    ns = {}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"<api.md block {i}>", "exec"), ns)
+        except Exception as e:       # noqa: BLE001
+            raise AssertionError(
+                f"docs/api.md python block {i} failed "
+                f"({type(e).__name__}: {e}):\n{block}") from e
+
+
+def test_readme_documents_classic_fallback():
+    """The §3.4 classic fallback must stay documented in the README
+    workload table (it is the default-policy behavior users hit first)."""
+    text = (REPO / "README.md").read_text()
+    assert "| `classic` | §3.4 |" in text
+    assert "default-policy fallback" in text

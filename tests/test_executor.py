@@ -99,6 +99,73 @@ class TestVerification:
         assert not verify_inclusion(fr, 7, "00" * 32)
 
 
+class TestMultiLane:
+    """lanes=k partitions the arg space over k single-device miner
+    lanes in one vmapped dispatch; the mined bits must be identical to
+    lanes=1 (that is what lets a single-lane verifier audit a
+    multi-lane miner)."""
+
+    def _mix_jash(self, arg_bits=8):
+        def fn(a):
+            return (a * jnp.uint32(2654435761)) ^ jnp.uint32(0xDEADBEEF)
+        return Jash("mix", fn, JashMeta(arg_bits=arg_bits, res_bits=32),
+                    example_args=(jnp.uint32(0),))
+
+    def test_full_mode_bit_identical_across_lane_counts(self):
+        j = self._mix_jash()
+        base = run_full(j)
+        for lanes in (2, 3, 4, 8):
+            fr = run_full(j, lanes=lanes)
+            np.testing.assert_array_equal(fr.results, base.results)
+            np.testing.assert_array_equal(fr.hashes, base.hashes)
+            np.testing.assert_array_equal(fr.leaf_digests,
+                                          base.leaf_digests)
+            np.testing.assert_array_equal(
+                fr.miner_of, np.arange(256) % lanes)
+            assert fr.commit_root() == base.commit_root()
+
+    def test_optimal_mode_winner_lane_and_parity(self):
+        j = self._mix_jash()
+        base = run_optimal(j)
+        for lanes in (2, 3, 7, 256, 300):
+            opt = run_optimal(j, lanes=lanes)
+            assert opt.best_arg == base.best_arg
+            np.testing.assert_array_equal(opt.best_res, base.best_res)
+            # winner == the contiguous lane slice holding best_arg
+            eff = min(lanes, 256)
+            width = (256 + (-256 % eff)) // eff
+            assert opt.winner == base.best_arg // width
+
+    def test_optimal_first_occurrence_tie_break_survives_lanes(self):
+        # constant jash: every arg ties; the winner must stay arg 0 in
+        # lane 0 for every lane count (contiguous lanes preserve the
+        # global first-occurrence)
+        def fn(a):
+            return jnp.uint32(7) + jnp.uint32(0) * a
+        j = Jash("const", fn, JashMeta(arg_bits=5, res_bits=32),
+                 example_args=(jnp.uint32(0),))
+        for lanes in (1, 2, 4, 32):
+            opt = run_optimal(j, lanes=lanes)
+            assert opt.best_arg == 0 and opt.winner == 0
+
+    def test_lanes_and_mesh_are_mutually_exclusive(self):
+        import jax as _jax
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(_jax.devices()[:1]), ("data",))
+        j = self._mix_jash()
+        with pytest.raises(ValueError, match="lanes"):
+            run_full(j, mesh=mesh, lanes=2)
+        with pytest.raises(ValueError, match="lanes"):
+            run_optimal(j, mesh=mesh, lanes=2)
+
+    def test_invalid_lanes_rejected(self):
+        j = self._mix_jash()
+        with pytest.raises(ValueError, match="lanes"):
+            run_full(j, lanes=0)
+        with pytest.raises(ValueError, match="lanes"):
+            run_optimal(j, lanes=-1)
+
+
 class TestRuntimeAuthority:
     def test_review_and_priority_order(self):
         ra = RuntimeAuthority()
