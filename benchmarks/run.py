@@ -18,12 +18,20 @@ of its quantitative *claims* instead:
   block_scan      DESIGN §6 scan-fused PoUW block vs per-microstep dispatch
   sim_gossip      DESIGN §9 async gossip sim: fork depth, orphan rate,
                   time-to-finality under partitions and adversaries
-                  (consumes the SimReport of the canonical scenarios)
+                  (consumes the SimReport of the canonical scenarios),
+                  plus the DESIGN §10 scale scenarios (16x128, 64x512)
+                  the shared verify cache makes tractable
+  verify_pipeline DESIGN §10 ``verify_chain_batched`` over a mixed
+                  256-block segment vs the per-block receive-path loop
 
-Prints ``name,us_per_call,derived`` CSV rows.  The commit-pipeline rows
-are also written machine-readably to BENCH_pipeline.json (repo root) so
-subsequent PRs can track the trajectory.  ``--smoke`` runs only a reduced
-commit-pipeline subset (CI).
+Prints ``name,us_per_call,derived`` CSV rows.  The pipeline rows are
+also written machine-readably to BENCH_pipeline.json (repo root): the
+latest run's rows sit at the top level and every full run appends a
+``history`` entry (git sha, date, rows), so the perf trajectory across
+PRs stays recorded.  ``--smoke`` runs a reduced subset (CI) and *gates*:
+the reduced ``merkle_commit`` and ``verify_chain_batched`` timings are
+compared against the committed ``smoke_baseline`` and the run fails on a
+>2.5x slowdown (generous tolerance for CI jitter).
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ import glob
 import json
 import os
 import statistics
+import subprocess
 import time
 
 import jax
@@ -41,8 +50,20 @@ ROWS = []
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_pipeline.json")
 
+# --smoke fails when a gated metric is slower than the committed
+# smoke_baseline by more than this factor (CI-jitter tolerance)
+SMOKE_SLOWDOWN_LIMIT = 2.5
+
+
+_QUIET = False     # True while the full run re-measures at smoke scale
+
 
 def row(name: str, us_per_call: float, derived: str = "") -> None:
+    if _QUIET:
+        # the full run's smoke-baseline pass re-runs sections at
+        # reduced scale; emitting their rows would duplicate names
+        # (e.g. merkle_commit.device) with conflicting timings
+        return
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
@@ -242,7 +263,7 @@ def _median_ms(fn, n: int) -> float:
 
 
 def bench_commit_pipeline(n_leaves: int = 4096,
-                          write_json: bool = True) -> dict:
+                          train_section: bool = True) -> dict:
     """DESIGN.md §6: the on-device block-commitment pipeline vs the seed.
 
     merkle_commit compares the seed's end-to-end commit path from a mined
@@ -310,6 +331,18 @@ def bench_commit_pipeline(n_leaves: int = 4096,
         f"({ms_root_only / ms_dev:.2f}x vs root-only)")
 
     # --- block_scan: scan-fused PoUW block -------------------------------
+    if not train_section:
+        # reduced-scale re-measure for the smoke gate: only the merkle
+        # metric is consumed, skip the (expensive) trainer section
+        return {
+            "n_leaves": n_leaves,
+            "merkle_commit": {
+                "us_seed_path": ms_seed * 1e3,
+                "us_hashlib_root_only": ms_root_only * 1e3,
+                "us_device": ms_dev * 1e3,
+                "speedup": speedup,
+            },
+        }
     cfg = reduced(get_config("qwen3-0.6b"))
     shape = InputShape("t", 32, 4, "train")
     micro = 4
@@ -334,7 +367,7 @@ def bench_commit_pipeline(n_leaves: int = 4096,
         f"seed pattern: {micro} dispatches, no ledger; "
         f"scan/step={ms_scan / ms_seed_steps:.2f}")
 
-    payload = {
+    return {
         "n_leaves": n_leaves,
         "merkle_commit": {
             "us_seed_path": ms_seed * 1e3,
@@ -356,12 +389,127 @@ def bench_commit_pipeline(n_leaves: int = 4096,
             "us_per_step_dispatch": ms_seed_steps * 1e3,
         },
     }
-    if write_json:
-        with open(BENCH_JSON, "w") as fh:
-            json.dump(payload, fh, indent=2)
-            fh.write("\n")
-        print(f"# wrote {os.path.abspath(BENCH_JSON)}")
-    return payload
+
+
+def bench_verify_pipeline(n_blocks: int = 256, full_arg_bits: int = 10
+                          ) -> dict:
+    """DESIGN §10: batched chain re-verification vs the per-block
+    receive path.
+
+    The segment mirrors what fork choice and chain sync actually
+    replay — a mixed chain, half full-mode blocks drawn from
+    ``n_publications`` distinct publications each re-mined repeatedly
+    (deterministic mining makes the repeats byte-identical evidence,
+    exactly as real classic/re-mined chains do, but every block is its
+    own payload/evidence object — nothing is shared by identity), and
+    half classic blocks.  The per-block baseline is exactly the
+    ``wl.verify`` loop ``consider_chain`` used to run (hashlib root +
+    quorum dispatch per full block); ``verify_chain_batched`` groups
+    the segment per workload: full blocks dedup byte-identical
+    evidence and share one stacked leaf-digest dispatch, one forest
+    reduction and one stacked quorum dispatch per publication, classic
+    blocks share a single replay of their common arg space."""
+    import dataclasses as _dc
+
+    from repro.core.executor import run_full
+    from repro.core.jash import Jash, JashMeta
+    from repro.chain.workload import (
+        BlockContext, BlockPayload, ClassicSha256Workload,
+        JashFullWorkload, verify_chain_batched)
+
+    n_publications = 8
+
+    def make_jash(salt):
+        def mixer(a):
+            h = (a + jnp.uint32(salt)) * jnp.uint32(2654435761)
+            return jnp.stack(
+                [(h ^ jnp.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF)) *
+                 jnp.uint32(2246822519) for i in range(8)])
+        return Jash(f"verify-bench-{salt}", mixer,
+                    JashMeta(arg_bits=full_arg_bits, res_bits=256),
+                    example_args=(jnp.uint32(0),))
+
+    pubs = [make_jash(s) for s in range(n_publications)]
+    fulls = [run_full(j) for j in pubs]
+    workloads = {"full": JashFullWorkload(),
+                 "classic": ClassicSha256Workload(arg_bits=full_arg_bits)}
+    cw = workloads["classic"]
+
+    def full_payload(slot):
+        j, fr = pubs[slot % n_publications], fulls[slot % n_publications]
+        # fresh arrays + payload per block: byte-identical to the
+        # publication's evidence (deterministic re-mine), distinct
+        # objects (dedup must work by content, not identity)
+        fr = _dc.replace(fr, args=fr.args.copy(),
+                         results=fr.results.copy())
+        return BlockPayload(
+            workload="full", jash_id=j.source_id(),
+            merkle_root=fr.commit_root(), n_results=len(fr.args),
+            jash=j, full=fr)
+
+    payloads = [full_payload(i // 2) if i % 2 == 0
+                else cw.mine(cw.prepare(BlockContext(height=i,
+                                                     prev_hash="")))
+                for i in range(n_blocks)]
+
+    # explicit raises, not asserts: these checks are the timed work —
+    # under ``python -O`` an assert would strip and time empty bodies
+    def per_block():
+        if not all(workloads[p.workload].verify(p) for p in payloads):
+            raise RuntimeError("per-block verification rejected a block")
+
+    def batched():
+        if not verify_chain_batched(workloads, payloads):
+            raise RuntimeError("batched verification rejected the segment")
+
+    batched()                                          # compile
+    per_block()
+    ms_loop = _median_ms(per_block, 3)
+    ms_batch = _median_ms(batched, 3)
+    speedup = ms_loop / ms_batch
+    row(f"verify_pipeline.per_block_{n_blocks}", ms_loop * 1e3,
+        f"receive-path wl.verify loop (half full over {n_publications} "
+        "publications, half classic)")
+    row(f"verify_pipeline.batched_{n_blocks}", ms_batch * 1e3,
+        f"verify_chain_batched speedup={speedup:.2f}x")
+    return {
+        "n_blocks": n_blocks,
+        "full_arg_bits": full_arg_bits,
+        "composition": (f"alternating full / classic; full blocks from "
+                        f"{n_publications} publications (byte-identical "
+                        "re-mines, distinct objects)"),
+        "us_per_block_loop": ms_loop * 1e3,
+        "us_batched": ms_batch * 1e3,
+        "speedup": speedup,
+    }
+
+
+def bench_sim_scale() -> dict:
+    """DESIGN §10: the gossip scale scenarios the verify cache + batched
+    fork choice make tractable.  Wall-clock covers mining AND the N-1
+    per-block re-verifications (cached: once per trust domain)."""
+    from repro.chain.sim import throughput_scenario
+
+    out = {}
+    for name, nodes, blocks in (("gossip_16x128", 16, 128),
+                                ("gossip_64x512", 64, 512)):
+        sim = throughput_scenario(nodes, blocks)
+        t0 = time.perf_counter()
+        rep = sim.run()
+        dt = time.perf_counter() - t0
+        if not rep.converged or rep.credit_divergence != 0.0:
+            raise RuntimeError(
+                f"{name}: scenario diverged (converged={rep.converged}, "
+                f"divergence={rep.credit_divergence})")
+        hits = sim.verify_cache.hits if sim.verify_cache else 0
+        row(f"sim_gossip.{name}", dt * 1e6,
+            f"events={rep.n_events} events_per_s={rep.n_events / dt:.0f} "
+            f"mined={rep.blocks_mined} cache_hits={hits} "
+            f"converged={rep.converged}")
+        out[name] = {"wall_s": dt, "events": rep.n_events,
+                     "blocks_mined": rep.blocks_mined,
+                     "verify_cache_hits": hits}
+    return out
 
 
 def bench_sim_gossip(n_lanes: int = 1):
@@ -383,7 +531,10 @@ def bench_sim_gossip(n_lanes: int = 1):
         t0 = time.perf_counter()
         rep = sim.run()
         dt = time.perf_counter() - t0
-        assert rep.converged and rep.credit_divergence == 0.0, name
+        if not rep.converged or rep.credit_divergence != 0.0:
+            raise RuntimeError(
+                f"{name}: scenario diverged (converged={rep.converged}, "
+                f"divergence={rep.credit_divergence})")
         depths = ";".join(f"d{k}x{v}"
                           for k, v in rep.fork_depth_hist.items())
         row(f"sim_gossip.{name}", dt * 1e6,
@@ -417,15 +568,113 @@ def bench_roofline():
             f"useful={d['useful_flops_ratio']:.2f}")
 
 
+# smoke-scale parameters: the exact shapes --smoke re-measures and the
+# full run records as the regression baseline
+SMOKE_LEAVES = 256
+SMOKE_VERIFY_BLOCKS = 64
+SMOKE_VERIFY_ARG_BITS = 8
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:                                  # noqa: BLE001
+        return "unknown"
+
+
+def write_bench_json(payload: dict) -> None:
+    """Latest rows at the top level; every run appended to ``history``
+    (git sha, date, rows) so the trajectory across PRs is recorded.  A
+    pre-history file's top-level rows are folded in as the first
+    entry."""
+    history = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as fh:
+                old = json.load(fh)
+            history = old.pop("history", [])
+            if not history and old:
+                history = [{"git_sha": "pre-history", "date": "",
+                            "rows": old}]
+        except (OSError, json.JSONDecodeError):
+            pass
+    history.append({"git_sha": _git_sha(),
+                    "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+                    "rows": payload})
+    with open(BENCH_JSON, "w") as fh:
+        json.dump({**payload, "history": history}, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {os.path.abspath(BENCH_JSON)} "
+          f"({len(history)} history entries)")
+
+
+def check_smoke_regression(measured: dict) -> int:
+    """Gate the reduced-scale metrics against the committed
+    ``smoke_baseline``; returns the number of regressions (>2.5x)."""
+    try:
+        with open(BENCH_JSON) as fh:
+            baseline = json.load(fh).get("smoke_baseline")
+    except (OSError, json.JSONDecodeError):
+        baseline = None
+    if not baseline:
+        print("# no smoke_baseline in committed BENCH_pipeline.json — "
+              "regression gate skipped (run a full bench to record one)")
+        return 0
+    failures = 0
+    for key in ("merkle_commit_us_device", "verify_chain_batched_us"):
+        base, got = baseline.get(key), measured.get(key)
+        if base is None or got is None:
+            continue
+        verdict = "OK"
+        if got > base * SMOKE_SLOWDOWN_LIMIT:
+            verdict = f"REGRESSION (>{SMOKE_SLOWDOWN_LIMIT}x)"
+            failures += 1
+        print(f"# gate {key}: measured {got:.0f}us vs baseline "
+              f"{base:.0f}us -> {verdict}")
+    return failures
+
+
+def _smoke_scale_metrics(train_section: bool = True,
+                         quiet: bool = False) -> dict:
+    """The two gated metrics, measured at smoke scale (the full run
+    records them as the baseline — with ``quiet`` row suppression so
+    reduced-scale timings don't shadow the full-scale rows; --smoke
+    re-measures and compares)."""
+    global _QUIET
+    _QUIET = quiet
+    try:
+        commit = bench_commit_pipeline(n_leaves=SMOKE_LEAVES,
+                                       train_section=train_section)
+        verify = bench_verify_pipeline(n_blocks=SMOKE_VERIFY_BLOCKS,
+                                       full_arg_bits=SMOKE_VERIFY_ARG_BITS)
+    finally:
+        _QUIET = False
+    return {
+        "n_leaves": SMOKE_LEAVES,
+        "verify_blocks": SMOKE_VERIFY_BLOCKS,
+        "verify_arg_bits": SMOKE_VERIFY_ARG_BITS,
+        "merkle_commit_us_device": commit["merkle_commit"]["us_device"],
+        "verify_chain_batched_us": verify["us_batched"],
+    }
+
+
 def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     if smoke:
-        # CI subset: the commit pipeline at a reduced leaf count (full
-        # 4096-leaf numbers are recorded in the committed
-        # BENCH_pipeline.json by a full run) + the gossip sim scenarios
-        bench_commit_pipeline(n_leaves=256, write_json=False)
+        # CI subset: commit + verify pipelines at reduced scale (the
+        # full-scale numbers are recorded in the committed
+        # BENCH_pipeline.json by a full run) + the gossip sim
+        # scenarios, then the regression gate against smoke_baseline
+        measured = _smoke_scale_metrics()
         bench_sim_gossip()
+        failures = check_smoke_regression(measured)
         print(f"# {len(ROWS)} rows (smoke)")
+        if failures:
+            raise SystemExit(f"{failures} bench regression(s) vs "
+                             "committed smoke_baseline")
         return
     fph = bench_hash_flops()
     bench_network_claim(fph)
@@ -434,9 +683,14 @@ def main(smoke: bool = False) -> None:
     bench_pouw_overhead()
     bench_docking()
     bench_verification()
-    bench_commit_pipeline()
+    payload = bench_commit_pipeline()
+    payload["verify_pipeline"] = bench_verify_pipeline()
+    payload["sim_gossip"] = bench_sim_scale()
+    payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
+                                                     quiet=True)
     bench_sim_gossip()
     bench_roofline()
+    write_bench_json(payload)
     print(f"# {len(ROWS)} rows")
 
 

@@ -20,11 +20,13 @@ top of Node/Network; its core surface (``Sim``/``SimConfig``/
 and canonical scenarios live in the module.
 """
 from repro.chain.network import BroadcastResult, Network
-from repro.chain.node import BlockReceipt, BlockRecord, Node, NodeState
+from repro.chain.node import (BlockReceipt, BlockRecord, Node, NodeState,
+                              VerifyCache)
 from repro.chain.sim import LinkModel, Sim, SimConfig, SimReport
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, TrainingWorkload, Workload,
+    verify_chain_batched,
 )
 
 __all__ = [
@@ -45,5 +47,7 @@ __all__ = [
     "SimConfig",
     "SimReport",
     "TrainingWorkload",
+    "VerifyCache",
     "Workload",
+    "verify_chain_batched",
 ]

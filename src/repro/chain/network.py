@@ -11,6 +11,17 @@ When a peer's tip diverges, longest-valid-chain fork choice applies:
 the strictly longer chain whose every payload re-verifies wins, and the
 loser's ledger *and credit book* are rebuilt from the adopted chain.
 
+Because §3.3 makes *every* peer re-verify *every* block, an N-node
+network pays N-1 verifications per block — the dominant compute once
+gossip works.  A ``Network`` therefore forms one **trust domain**: a
+shared content-addressed ``VerifyCache`` in which each unique (block
+hash, payload object) is verified once and every other member skips
+straight to the cheap header/consensus checks (DESIGN.md §10).
+Stateful (training) payloads never use it — their verification doubles
+as state sync.  Pass ``shared_verify_cache=False`` (or construct nodes
+with ``use_verify_cache=False``) to make every node re-verify
+everything itself, the adversarial-analysis configuration.
+
 This network is deliberately *synchronous and honest*: broadcasts are
 instantaneous, nothing is dropped, and every sender is who it claims to
 be.  For latency, message loss, partitions, churn and adversarial
@@ -26,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Sequence
 
-from repro.chain.node import BlockReceipt, Node
+from repro.chain.node import BlockReceipt, Node, VerifyCache
 from repro.chain.workload import BlockPayload
 from repro.core.ledger import Block
 
@@ -41,15 +52,35 @@ class BroadcastResult:
 class Network:
     """N nodes, block broadcast, longest-valid-chain convergence."""
 
-    def __init__(self, nodes: Sequence[Node]) -> None:
+    def __init__(self, nodes: Sequence[Node], *,
+                 shared_verify_cache: bool = True) -> None:
         if not nodes:
             raise ValueError("a network needs at least one node")
         self.nodes = list(nodes)
         self.log: List[BroadcastResult] = []
+        # one trust domain: a node that verified a payload spares every
+        # other member the §3 req. 2 re-execution.  Constructing a
+        # Network around existing nodes NEVER mutates them (a read-only
+        # wrapper must not enroll live nodes into a new domain behind
+        # the caller's back) — only ``create``, which builds the nodes
+        # itself, enrolls via ``enroll_nodes``.
+        self.verify_cache = VerifyCache() if shared_verify_cache else None
+
+    def enroll_nodes(self) -> None:
+        """Enroll member nodes into this network's trust domain.
+        Explicit and opt-in: nodes that opted out
+        (``use_verify_cache=False``) or already belong to a domain
+        (e.g. a ``Sim``'s) keep their configuration."""
+        if self.verify_cache is None:
+            return
+        for node in self.nodes:
+            if node.use_verify_cache and node.verify_cache is None:
+                node.verify_cache = self.verify_cache
 
     @classmethod
     def create(cls, n_nodes: int,
                node_factory: Optional[Callable[[int], Node]] = None,
+               shared_verify_cache: bool = True,
                **node_kwargs) -> "Network":
         if node_factory is None and "workloads" in node_kwargs:
             # one shared Workload instance across nodes would make every
@@ -61,7 +92,10 @@ class Network:
                 "own Workload objects — sharing one instance across nodes "
                 "voids independent re-verification")
         factory = node_factory or (lambda i: Node(node_id=i, **node_kwargs))
-        return cls([factory(i) for i in range(n_nodes)])
+        net = cls([factory(i) for i in range(n_nodes)],
+                  shared_verify_cache=shared_verify_cache)
+        net.enroll_nodes()       # create owns these nodes — see __init__
+        return net
 
     # -- mining + gossip ----------------------------------------------
     def mine(self, origin: int = 0,
@@ -160,8 +194,7 @@ def smoke(n_nodes: int = 2, n_blocks: int = 4, verbose: bool = True) -> int:
         assert not res.rejected_by, f"peers rejected: {res.rejected_by}"
 
     assert net.converged(), (net.heights, net.tips)
-    assert all(n.audit(h) for n in net.nodes
-               for h in range(n.ledger.height))
+    assert all(n.audit_chain() for n in net.nodes)
     books = {tuple(sorted(n.book.balances.items())) for n in net.nodes}
     assert len(books) == 1, "credit books diverged"
     if verbose:

@@ -22,6 +22,7 @@ reaches around the public surfaces of executor/ledger/rewards/verify.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -34,7 +35,92 @@ from repro.core.rewards import CreditBook
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, RewardEntries, Workload,
+    is_stateful, verify_chain_batched,
 )
+
+
+class VerifyCache:
+    """Content-addressed record of payloads already verified in one
+    *trust domain* (a pool of honest nodes sharing verification work —
+    ``Network``/``Sim`` create one and hand it to their nodes).
+
+    An entry means "this exact payload object, committed under this
+    ``block_hash``, passed workload verification on some node of the
+    domain"; peers then skip re-running the §3 req. 2 re-execution and
+    re-verify nothing but the cheap header/consensus checks.  Two
+    guards keep cache hits consensus-identical to full verification:
+
+    * hits require the **same payload object** (``is``), not just the
+      same block hash — a Byzantine sender shipping tampered evidence
+      under an honest header misses and gets fully verified;
+    * only **stateless** workloads participate: training verification
+      doubles as state sync and must replay on every node.
+
+    The domain assumption is that member nodes run an identical
+    verification policy (same workload parameters).  Nodes that do not
+    — or adversarial-scenario nodes that must re-verify everything
+    themselves — opt out with ``Node(use_verify_cache=False)``.
+
+    ``maxsize`` bounds the cache (entries pin whole payloads — full
+    evidence arrays included — and a long-running domain would
+    otherwise retain every orphaned and reorged-away block forever);
+    the oldest entries are evicted first, and an evicted block simply
+    costs its next receiver one ordinary re-verification.
+    """
+
+    def __init__(self, maxsize: int = 4096) -> None:
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._verified: Dict[str, BlockPayload] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._verified)
+
+    def check(self, block_hash: str, payload: BlockPayload) -> bool:
+        """True iff this exact payload was already verified under this
+        block hash somewhere in the trust domain."""
+        if self._verified.get(block_hash) is payload:
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def add(self, block_hash: str, payload: BlockPayload) -> None:
+        """Record a payload that just passed workload verification."""
+        if block_hash not in self._verified:
+            while len(self._verified) >= self.maxsize:   # FIFO evict
+                self._verified.pop(next(iter(self._verified)))
+            self._verified[block_hash] = payload
+
+
+@dataclasses.dataclass(frozen=True)
+class _ChainSnapshot:
+    """Periodic per-node checkpoint fork choice restarts from: the
+    credit book and stateful-workload state as of ``height`` committed
+    blocks.  Ledger blocks and payloads are not stored — the common
+    prefix up to the fork point is shared with the live chain."""
+    height: int
+    balances: Dict[int, float]
+    total_issued: float
+    wl_snaps: Tuple[Tuple[str, object], ...]   # stateful name -> snap
+
+
+def _stateful_snapshot(wl) -> object:
+    """Snapshot a stateful workload without forcing lazy state into
+    existence: ``None`` stands for "pristine, restore == reset"."""
+    if getattr(wl, "is_pristine", lambda: False)():
+        return None
+    return wl.snapshot()
+
+
+def _stateful_restore(wl, snap) -> None:
+    if snap is None:
+        wl.reset()
+    else:
+        wl.restore(snap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +191,9 @@ class Node:
                  work: Optional[int] = None,
                  mesh: Optional[object] = None,
                  n_lanes: int = 1,
+                 snapshot_interval: int = 8,
+                 snapshot_ring: int = 4,
+                 use_verify_cache: bool = True,
                  ra: Optional[RuntimeAuthority] = None) -> None:
         """``n_lanes`` is multi-lane mining: partition full/optimal
         execution over ``n_lanes`` single-device miner lanes, all run in
@@ -112,9 +201,28 @@ class Node:
         ``node_id * MINER_LANE + l``).  Mutually exclusive with a
         sharded ``mesh``, whose axes already define the miner fleet.
         Lane partitioning never changes the mined bits, so peers need no
-        knowledge of a miner's lane count to verify its blocks."""
+        knowledge of a miner's lane count to verify its blocks.
+
+        Every ``snapshot_interval`` committed blocks the node rings a
+        fork-choice checkpoint (keeping the last ``snapshot_ring``), so
+        ``consider_chain`` rebuilds from the newest checkpoint at or
+        below the fork point instead of replaying from genesis.
+        ``snapshot_interval=0`` (or a zero ring) disables checkpoints —
+        fork choice then always replays from genesis, which is the
+        reference behavior the incremental path must match bit-exactly.
+
+        ``use_verify_cache=False`` keeps this node out of any shared
+        ``VerifyCache`` a ``Network``/``Sim`` would attach — it then
+        re-verifies every payload itself (what adversarial scenarios
+        and nodes with non-default verification policy want)."""
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        if snapshot_interval < 0:
+            raise ValueError(
+                f"snapshot_interval must be >= 0, got {snapshot_interval}")
+        if snapshot_ring < 0:
+            raise ValueError(
+                f"snapshot_ring must be >= 0, got {snapshot_ring}")
         if n_lanes > 1 and any(
                 a in getattr(mesh, "axis_names", ())
                 for a in ("pod", "data")):
@@ -147,6 +255,13 @@ class Node:
         self.difficulty = (DifficultyController(target_block_s=target_block_s)
                            if target_block_s is not None else None)
         self._payloads: Dict[int, BlockPayload] = {}
+        self.snapshot_interval = snapshot_interval
+        self._snapshots: collections.deque = collections.deque(
+            maxlen=snapshot_ring)
+        self.use_verify_cache = use_verify_cache
+        self.verify_cache: Optional[VerifyCache] = None
+        self._hash_index: set = set()      # block hashes of self.ledger
+        self._in_rebuild = False           # fork-choice commit loop
 
     # -- researcher side ----------------------------------------------
     def submit(self, jash: Jash, veto: bool = False) -> ReviewReport:
@@ -201,6 +316,9 @@ class Node:
                 f"self-mined {name} block at height {ctx.height} failed "
                 "verification — refusing to commit")
         record, rewards = self._commit(payload)
+        if self.verify_cache is not None and not is_stateful(wl):
+            # the self-verification above counts for the trust domain
+            self.verify_cache.add(record.block_hash, payload)
 
         dt = time.perf_counter() - t0
         if self.difficulty is not None:
@@ -217,9 +335,40 @@ class Node:
             merkle=payload.merkle_root, winner=payload.winner,
             best_res=payload.best_res, n_results=payload.n_results,
             state_digest=payload.state_digest)
+        self._hash_index.add(blk.block_hash)
         self._payloads[blk.height] = payload
         rewards = self.workloads[payload.workload].reward(self.book, payload)
+        # during a fork-choice rebuild the stateful workloads already
+        # sit at the *tail end* state (batched verification replayed
+        # them before the commit loop), so a mid-loop checkpoint would
+        # pair an intermediate height with end-of-chain trainer state —
+        # consider_chain suppresses the ring and pushes one consistent
+        # checkpoint at the adopted tip instead
+        if (self.snapshot_interval > 0 and not self._in_rebuild
+                and self.ledger.height % self.snapshot_interval == 0):
+            self._push_snapshot()
         return BlockRecord.from_block(blk), rewards
+
+    # -- fork-choice checkpoints --------------------------------------
+    def _push_snapshot(self) -> None:
+        wl_snaps = tuple(
+            (name, _stateful_snapshot(wl))
+            for name, wl in self.workloads.items() if is_stateful(wl))
+        self._snapshots.append(_ChainSnapshot(
+            height=self.ledger.height,
+            balances=dict(self.book.balances),
+            total_issued=self.book.total_issued,
+            wl_snaps=wl_snaps))
+
+    def _snapshot_at(self, height: int) -> Optional[_ChainSnapshot]:
+        """Newest ringed checkpoint at or below ``height`` (None means
+        restart from genesis)."""
+        best = None
+        for snap in self._snapshots:
+            if snap.height <= height and (best is None
+                                          or snap.height > best.height):
+                best = snap
+        return best
 
     # -- verifier side ------------------------------------------------
     def audit(self, height: int) -> bool:
@@ -233,6 +382,26 @@ class Node:
             return False
         return (self._payload_matches(blk, payload)
                 and self.workloads[payload.workload].verify(payload))
+
+    def audit_chain(self, heights: Optional[Sequence[int]] = None) -> bool:
+        """Batched ``audit``: re-verify many committed blocks (default:
+        the whole chain) with the stateless workloads grouped into
+        single dispatches.  Accept/reject equals ``all(self.audit(h)
+        for h in heights)``; like ``audit``, this never consults the
+        shared ``VerifyCache`` — an audit is this node proving the
+        chain to itself."""
+        hs = list(range(self.ledger.height)) if heights is None \
+            else list(heights)
+        payloads = []
+        for h in hs:
+            if not 0 <= h < self.ledger.height:
+                raise ChainError(f"no block at height {h}")
+            payload = self._payloads.get(h)
+            if payload is None or not self._payload_matches(
+                    self.ledger.blocks[h], payload):
+                return False
+            payloads.append(payload)
+        return verify_chain_batched(self.workloads, payloads)
 
     def _payload_matches(self, blk: Block, payload: BlockPayload) -> bool:
         return (blk.jash_id == payload.jash_id
@@ -249,8 +418,11 @@ class Node:
         """True iff a block with this content hash is already committed
         — the duplicate check gossip layers run before treating a failed
         ``receive`` as a fork signal (at-least-once delivery must be an
-        idempotent no-op, never a chain pull)."""
-        return any(b.block_hash == block_hash for b in self.ledger.blocks)
+        idempotent no-op, never a chain pull).  O(1) via a hash index
+        maintained by commit/fork-choice (gossip runs this once per
+        delivery, so a chain-length scan would be quadratic over a
+        sim's lifetime)."""
+        return block_hash in self._hash_index
 
     def receive(self, block: Block, payload: BlockPayload,
                 origin: Optional[int] = None) -> bool:
@@ -274,8 +446,15 @@ class Node:
         if not self._payload_matches(block, payload):
             return False
         wl = self.workloads.get(payload.workload)
-        if wl is None or not wl.verify(payload):
+        if wl is None:
             return False
+        shareable = not is_stateful(wl) and self.verify_cache is not None
+        if not (shareable
+                and self.verify_cache.check(block.block_hash, payload)):
+            if not wl.verify(payload):
+                return False
+            if shareable:
+                self.verify_cache.add(block.block_hash, payload)
         self._commit(payload)
         return True
 
@@ -284,7 +463,19 @@ class Node:
         """Longest-valid-chain fork choice: adopt a competing chain iff it
         is strictly longer, links from genesis, and every payload
         re-verifies.  The ledger and credit book are rebuilt from the
-        adopted payloads (credits follow the chain, not the node)."""
+        adopted payloads (credits follow the chain, not the node).
+
+        The rebuild is **fork-point incremental**: hash links are still
+        checked from genesis (cheap host work), but payload
+        re-verification and ledger/book/trainer reconstruction restart
+        from the newest ringed checkpoint at or below the fork point —
+        everything before it is common prefix this node already
+        verified when it committed it.  Stateless payloads of the
+        candidate tail verify in one batched dispatch (minus shared
+        ``VerifyCache`` hits); stateful ones replay in chain order from
+        the checkpoint.  Accept/reject, adopted tips, and rebuilt books
+        are bit-identical to a genesis replay (``snapshot_interval=0``
+        forces that reference behavior)."""
         if len(blocks) <= self.ledger.height or len(blocks) != len(payloads):
             return False
         # the block reward is a consensus parameter; origin attribution
@@ -298,28 +489,63 @@ class Node:
                     or not self._payload_matches(blk, payload)):
                 return False
             prev = blk.block_hash
-        # Stateful workloads (training) advance while verifying.  Reset
-        # them to genesis first so the candidate chain is replayed from
-        # scratch and, on adoption, their state reflects exactly the
-        # adopted chain's content (a fork that discards a local training
-        # block must rewind the trainer too, or the node's future blocks
-        # are unverifiable by peers).  Snapshots roll everything back if
-        # a payload fails mid-chain.
-        snaps = [(wl, wl.snapshot()) for wl in self.workloads.values()
-                 if hasattr(wl, "snapshot")]
-        for swl, _ in snaps:
-            swl.reset()
-        for payload in payloads:
-            wl = self.workloads.get(payload.workload)
-            if wl is None or not wl.verify(payload):
-                for swl, snap in snaps:
-                    swl.restore(snap)
-                return False
-        self.ledger = Ledger()
-        self.book = CreditBook()
-        self._payloads = {}
-        for payload in payloads:
-            self._commit(payload)
+        # fork point: longest common block-hash prefix with our chain
+        common = 0
+        for ours, theirs in zip(self.ledger.blocks, blocks):
+            if ours.block_hash != theirs.block_hash:
+                break
+            common += 1
+        snap = self._snapshot_at(common)
+        start = snap.height if snap is not None else 0
+        ring_snaps = dict(snap.wl_snaps) if snap is not None else {}
+        # Stateful workloads (training) advance while verifying.  Roll
+        # them back to the checkpoint so the candidate tail is replayed
+        # on exactly the state the common prefix produced (a fork that
+        # discards a local training block must rewind the trainer too,
+        # or the node's future blocks are unverifiable by peers).  The
+        # pre-fork state rolls everything back if the candidate fails.
+        stateful = [(name, wl) for name, wl in self.workloads.items()
+                    if is_stateful(wl)]
+        rollback = [(wl, _stateful_snapshot(wl)) for _, wl in stateful]
+        for name, wl in stateful:
+            _stateful_restore(wl, ring_snaps.get(name))
+        precleared = [False] * (len(payloads) - start)
+        if self.verify_cache is not None:
+            for i in range(start, len(payloads)):
+                wl = self.workloads.get(payloads[i].workload)
+                if (wl is not None and not is_stateful(wl)
+                        and self.verify_cache.check(blocks[i].block_hash,
+                                                    payloads[i])):
+                    precleared[i - start] = True
+        if not verify_chain_batched(self.workloads, payloads[start:],
+                                    precleared=precleared):
+            for wl, pre_fork in rollback:
+                _stateful_restore(wl, pre_fork)
+            return False
+        # adopt: truncate to the checkpoint and rebuild from there (the
+        # kept prefix is bit-identical between the two chains)
+        del self.ledger.blocks[start:]
+        self.book.balances = dict(snap.balances) if snap else {}
+        self.book.total_issued = snap.total_issued if snap else 0.0
+        self._payloads = {h: self._payloads[h] for h in range(start)}
+        self._hash_index = {b.block_hash for b in self.ledger.blocks}
+        # checkpoints past the fork point describe the abandoned branch
+        keep = [s for s in self._snapshots if s.height <= common]
+        self._snapshots = collections.deque(keep,
+                                            maxlen=self._snapshots.maxlen)
+        self._in_rebuild = True
+        try:
+            for blk, payload in zip(blocks[start:], payloads[start:]):
+                self._commit(payload)
+                if self.verify_cache is not None and not is_stateful(
+                        self.workloads[payload.workload]):
+                    self.verify_cache.add(blk.block_hash, payload)
+        finally:
+            self._in_rebuild = False
+        # one checkpoint at the adopted tip, where ledger, book, and
+        # stateful workloads are all consistent again
+        if self.snapshot_interval > 0 and self._snapshots.maxlen:
+            self._push_snapshot()
         return True
 
     # -- introspection ------------------------------------------------

@@ -46,7 +46,7 @@ import random
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.chain.network import Network
-from repro.chain.node import Node
+from repro.chain.node import Node, VerifyCache
 from repro.chain.workload import BlockPayload, ChainError
 from repro.core.ledger import Block
 
@@ -61,6 +61,7 @@ __all__ = [
     "WithholdingMiner",
     "adversarial_scenario",
     "partitioned_scenario",
+    "throughput_scenario",
 ]
 
 
@@ -80,11 +81,22 @@ class LinkModel:
 class SimConfig:
     """Simulator knobs.  ``seed`` drives every random draw (latency,
     drops, jitter, churn peer choice); ``max_events`` is the runaway
-    backstop for event loops."""
+    backstop for event loops.
+
+    ``shared_verify_cache`` puts the *honest* nodes in one trust domain
+    (a ``VerifyCache``): each unique broadcast payload is §3 req. 2
+    re-verified once across the pool instead of once per node — the
+    lever that lets 64-node scenarios run in reasonable wall-clock.
+    Adversary-controlled nodes are never enrolled, and honest nodes can
+    opt out individually with ``Node(use_verify_cache=False)`` (an
+    adversarial analysis in which every node must check everything
+    itself).  Accept/reject decisions — and hence the ``SimReport`` —
+    are identical either way; only who runs the verification changes."""
     seed: int = 0
     link: LinkModel = LinkModel()
     max_events: int = 100_000
     allow_wallclock_difficulty: bool = False
+    shared_verify_cache: bool = True
 
 
 class Adversary:
@@ -260,6 +272,10 @@ class Sim:
         for nid in self._adversaries:
             if nid not in self._nodes:
                 raise ValueError(f"adversary for unknown node {nid}")
+        self.verify_cache = (VerifyCache()
+                             if config.shared_verify_cache else None)
+        for node in self._nodes.values():
+            self._enroll(node)
 
         self._rng = random.Random(config.seed)
         self._events: List[Tuple[float, int, Callable, tuple]] = []
@@ -280,6 +296,17 @@ class Sim:
 
         for nid, adv in sorted(self._adversaries.items()):
             adv.install(self, nid)
+
+    def _enroll(self, node: Node) -> None:
+        """Enroll an honest node in the shared verify-cache trust
+        domain.  Adversary-controlled nodes are excluded (they should
+        not be able to pre-clear payloads for honest peers, nor lean on
+        honest verification work), as are nodes that opted out or
+        already belong to a domain."""
+        if (self.verify_cache is not None
+                and node.node_id not in self._adversaries
+                and node.use_verify_cache and node.verify_cache is None):
+            node.verify_cache = self.verify_cache
 
     def _check_node(self, node: Node, seen_wl: Dict[int, int]) -> None:
         if node.node_id in self._nodes:
@@ -507,6 +534,7 @@ class Sim:
         self._check_node(node, seen_wl)
         nid = node.node_id
         self._nodes[nid] = node
+        self._enroll(node)
         self._group[nid] = 0
         self._counters["joins"] += 1
         if sync_from is not None:
@@ -574,7 +602,9 @@ class Sim:
         honest = self.honest_nodes
         if not honest:
             return True
-        return Network(honest).converged()
+        # a read-only check: never graft a fresh Network trust domain
+        # onto nodes that live in this Sim's domain
+        return Network(honest, shared_verify_cache=False).converged()
 
     def report(self) -> SimReport:
         """Build the deterministic ``SimReport`` from the current
@@ -682,6 +712,32 @@ def partitioned_scenario(n_nodes: int = 4, seed: int = 0, *,
     return sim
 
 
+def throughput_scenario(n_nodes: int = 16, n_blocks: int = 128, *,
+                        seed: int = 0, classic_arg_bits: int = 6,
+                        spacing: float = 0.2,
+                        shared_verify_cache: bool = True) -> Sim:
+    """The scale scenario: ``n_nodes`` honest peers round-robin mine
+    ``n_blocks`` classic blocks, each gossiped to every peer — the
+    workload whose cost is dominated by §3.3's N-1 re-verifications
+    per block.  ``spacing`` (simulated seconds between mine events)
+    above the link's max latency keeps the chain extending serially,
+    so the wall-clock of ``run()`` measures the verification pipeline,
+    not fork churn.  ``shared_verify_cache=False`` is the
+    every-node-verifies-everything baseline the batched pipeline is
+    benchmarked against."""
+    nodes = [Node(node_id=i, classic_arg_bits=classic_arg_bits)
+             for i in range(n_nodes)]
+    events = 4 * n_blocks * max(n_nodes, 2)    # mines + per-link traffic
+    sim = Sim(nodes, SimConfig(seed=seed,
+                               max_events=max(100_000, events),
+                               shared_verify_cache=shared_verify_cache))
+    t = 1.0
+    for b in range(n_blocks):
+        sim.mine_at(t, b % n_nodes)
+        t += spacing
+    return sim
+
+
 def adversarial_scenario(n_honest: int = 3, seed: int = 0, *,
                          classic_arg_bits: int = 6) -> Sim:
     """Withholding + corruption in one run: node ``n_honest`` selfish-
@@ -709,15 +765,21 @@ def _main() -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--scenario", choices=("partition", "adversarial"),
+    ap.add_argument("--scenario",
+                    choices=("partition", "adversarial", "throughput"),
                     default="partition")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--nodes", type=int, default=4,
-                    help="node count (partition) / honest count "
-                         "(adversarial)")
+                    help="node count (partition/throughput) / honest "
+                         "count (adversarial)")
+    ap.add_argument("--blocks", type=int, default=32,
+                    help="chain length (throughput scenario)")
     args = ap.parse_args()
     if args.scenario == "partition":
         sim = partitioned_scenario(n_nodes=args.nodes, seed=args.seed)
+    elif args.scenario == "throughput":
+        sim = throughput_scenario(n_nodes=args.nodes,
+                                  n_blocks=args.blocks, seed=args.seed)
     else:
         sim = adversarial_scenario(n_honest=max(args.nodes - 2, 1),
                                    seed=args.seed)

@@ -23,7 +23,9 @@ agrees).  ``chain/node.py`` drives the four against one ledger;
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Protocol, Tuple, runtime_checkable
+import hashlib
+from typing import (Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -32,7 +34,8 @@ from repro.core.executor import FullResult, run_full, run_optimal
 from repro.core.jash import Jash, JashMeta
 from repro.core.ledger import merkle_root
 from repro.core.rewards import CreditBook, reward_full, reward_optimal
-from repro.core.verify import quorum_verify
+from repro.core.verify import (quorum_verify, quorum_verify_batched,
+                               recompute_roots_batched)
 
 # Global miner-id lane: chain-level miner id = node_id * MINER_LANE +
 # local device index, so per-node credit books agree on who earned what
@@ -120,7 +123,11 @@ class Workload(Protocol):
     Stateful workloads (whose ``verify`` advances local state, like
     training) should additionally expose ``snapshot()``/``restore(snap)``
     so fork choice can roll them back when a candidate chain fails
-    mid-verification."""
+    mid-verification.  Stateless workloads may expose
+    ``verify_batch(payloads) -> List[bool]``, a segment-at-a-time
+    verifier that must accept/reject bit-identically to per-payload
+    ``verify`` calls — ``verify_chain_batched`` uses it to amortize
+    device dispatches across a whole chain."""
     name: str
 
     def prepare(self, ctx: BlockContext) -> PreparedWork: ...
@@ -131,6 +138,62 @@ class Workload(Protocol):
 
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries: ...
+
+
+def is_stateful(wl: object) -> bool:
+    """True for workloads whose ``verify`` advances local state (they
+    expose the ``snapshot``/``restore`` rollback pair).  Stateful
+    verification can be neither reordered, skipped, nor shared across
+    nodes — it doubles as state sync."""
+    return hasattr(wl, "snapshot")
+
+
+def verify_chain_batched(workloads: Dict[str, "Workload"],
+                         payloads: Sequence[BlockPayload],
+                         precleared: Optional[Sequence[bool]] = None
+                         ) -> bool:
+    """Re-verify a chain segment, batching stateless workloads.
+
+    Accept/reject is identical to the per-block loop ``for p in
+    payloads: wl.verify(p)``: stateless payloads are grouped per
+    workload and handed to ``verify_batch`` (one cached jitted
+    dispatch per group instead of one per block), then stateful
+    payloads replay **in chain order** — their verification advances
+    local state, so order is part of the protocol.  A stateless
+    failure is detected before any stateful replay runs; the caller
+    owns snapshot/rollback of stateful workloads exactly as with the
+    per-block loop.
+
+    ``precleared[i]`` marks payload ``i`` as already verified in this
+    trust domain (a ``VerifyCache`` hit) — only honored for stateless
+    workloads, since stateful verification doubles as state sync.
+    Returns True iff every payload verifies (or is legitimately
+    precleared)."""
+    if precleared is not None and len(precleared) != len(payloads):
+        raise ValueError("precleared must align with payloads")
+    stateless: Dict[str, List[int]] = {}
+    stateful_idx: List[int] = []
+    for i, payload in enumerate(payloads):
+        wl = workloads.get(payload.workload)
+        if wl is None:
+            return False
+        if is_stateful(wl):
+            stateful_idx.append(i)
+        elif not (precleared is not None and precleared[i]):
+            stateless.setdefault(payload.workload, []).append(i)
+    for name, idxs in stateless.items():
+        wl = workloads[name]
+        group = [payloads[i] for i in idxs]
+        if hasattr(wl, "verify_batch"):
+            oks = wl.verify_batch(group)
+        else:
+            oks = [wl.verify(p) for p in group]
+        if not all(oks):
+            return False
+    for i in stateful_idx:                  # chain order == replay order
+        if not workloads[payloads[i].workload].verify(payloads[i]):
+            return False
+    return True
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +269,59 @@ class JashFullWorkload:
         return quorum_verify(payload.jash, full,
                              fraction=self.verify_fraction).ok
 
+    def verify_batch(self, payloads: Sequence[BlockPayload]) -> List[bool]:
+        """``verify`` over a whole segment, bit-identical per payload.
+
+        Identical payloads first collapse to one representative:
+        ``verify`` is a pure function of (committed fields, evidence
+        bytes), so byte-identical payloads get byte-identical verdicts
+        — and deterministic mining *produces* byte-identical payloads
+        whenever the same publication is mined repeatedly (the
+        full-mode analogue of the classic/optimal replay memo).  Each
+        distinct payload then pays the two O(N) costs batched across
+        the segment: the independent root recompute runs on the
+        words-major device reducer (one fused leaf-digest dispatch +
+        one forest reduction, with a hashlib spot-check that falls
+        back to the reference on mismatch), and quorum re-execution
+        stacks every block's sampled args into one dispatch per
+        distinct jash function."""
+        oks: List[Optional[bool]] = [None] * len(payloads)
+        rep_of: Dict[tuple, int] = {}      # content key -> first index
+        dup_of: Dict[int, int] = {}        # duplicate index -> rep index
+        live = []
+        for i, p in enumerate(payloads):
+            if (p.full is None or p.jash is None
+                    or p.jash.source_id() != p.jash_id):
+                oks[i] = False
+                continue
+            # the fn object is part of the key: source_id() hashes only
+            # name+meta, so a payload pairing honest evidence with a
+            # different function must run its own quorum re-execution,
+            # never ride the honest payload's verdict
+            key = (p.jash.fn, p.jash_id, p.merkle_root,
+                   hashlib.sha256(p.full.packed_words().tobytes())
+                   .digest())
+            rep = rep_of.setdefault(key, i)
+            if rep != i:
+                dup_of[i] = rep
+            else:
+                oks[i] = True
+                live.append(i)
+        roots = recompute_roots_batched([payloads[i].full for i in live])
+        for i, root in zip(live, roots):
+            if root != payloads[i].merkle_root:
+                oks[i] = False
+        live = [i for i in live if oks[i]]
+        reports = quorum_verify_batched(
+            [(payloads[i].jash, payloads[i].full) for i in live],
+            fraction=self.verify_fraction)
+        for i, report in zip(live, reports):
+            if not report.ok:
+                oks[i] = False
+        for i, rep in dup_of.items():
+            oks[i] = oks[rep]
+        return oks
+
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries:
         """Split the block reward evenly over first submissions
@@ -245,6 +361,27 @@ class JashOptimalWorkload:
 
     name = "optimal"
 
+    # The §3 req. 2 replay is a pure function of (jash.fn, n_args), so a
+    # node re-verifying many blocks over the same arg space — every
+    # classic block of a chain, every optimal block of one publication —
+    # may reuse its *own* earlier replay: the cross-call analogue of
+    # verify_batch's in-segment dedup, and per-instance, so it never
+    # shares results across nodes (trust stays node-local).
+    _REPLAY_MEMO_MAX = 8
+
+    def __init__(self) -> None:
+        self._replay_memo: Dict[tuple, object] = {}
+
+    def _replay(self, jash: Jash):
+        key = (jash.fn, jash.meta.n_args)
+        opt = self._replay_memo.get(key)
+        if opt is None:
+            opt = run_optimal(jash)
+            if len(self._replay_memo) >= self._REPLAY_MEMO_MAX:
+                self._replay_memo.pop(next(iter(self._replay_memo)))
+            self._replay_memo[key] = opt
+        return opt
+
     def prepare(self, ctx: BlockContext) -> PreparedWork:
         """Resolve the published jash against the args-per-block target;
         raises ``ChainError`` without a publication."""
@@ -259,6 +396,10 @@ class JashOptimalWorkload:
         independent of the lane count (contiguous lanes preserve the
         first-occurrence tie-break), which is what peers re-derive."""
         ctx, jash = work.ctx, work.jash
+        # mining always executes for real — a memoized mine would feed
+        # near-zero block times into the DifficultyController and leave
+        # BlockReceipt.block_time_s meaningless.  The verify-side memo
+        # still spares the miner's self-verify the second dispatch.
         opt = run_optimal(jash, mesh=ctx.mesh, lanes=ctx.lanes)
         leaf = (np.uint32(opt.best_arg).tobytes()
                 + opt.best_res.astype("<u4").tobytes())
@@ -288,12 +429,35 @@ class JashOptimalWorkload:
         if (payload.winner is None
                 or payload.winner // MINER_LANE != payload.origin):
             return False
-        opt = run_optimal(payload.jash)      # determinism, §3 req. 2
+        return self._replay_matches(payload, self._replay(payload.jash))
+
+    @staticmethod
+    def _replay_matches(payload: BlockPayload, opt) -> bool:
+        """Does a (deterministic) argmin replay reproduce the payload's
+        committed ``(best_arg, best_res, merkle_root)`` bit-exactly?"""
         leaf = (np.uint32(opt.best_arg).tobytes()
                 + opt.best_res.astype("<u4").tobytes())
         return (opt.best_arg == payload.best_arg
                 and opt.best_res.tobytes().hex() == payload.best_res
                 and merkle_root([leaf]) == payload.merkle_root)
+
+    def verify_batch(self, payloads: Sequence[BlockPayload]) -> List[bool]:
+        """``verify`` over a whole segment, bit-identical per payload.
+
+        The §3 req. 2 replay is a pure function of ``(jash.fn,
+        n_args)``, so a segment re-executes each *distinct* arg space
+        once and compares every payload against the shared replay — a
+        chain of classic blocks over one nonce space costs one device
+        dispatch instead of one per block."""
+        oks = []
+        for p in payloads:
+            if (p.jash is None or p.jash.source_id() != p.jash_id
+                    or p.winner is None
+                    or p.winner // MINER_LANE != p.origin):
+                oks.append(False)
+                continue
+            oks.append(self._replay_matches(p, self._replay(p.jash)))
+        return oks
 
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries:
@@ -328,6 +492,7 @@ class ClassicSha256Workload(JashOptimalWorkload):
     name = "classic"
 
     def __init__(self, *, arg_bits: int = 10) -> None:
+        super().__init__()
         self.arg_bits = arg_bits
         self._base: Optional[Jash] = None
 
@@ -387,6 +552,14 @@ class TrainingWorkload:
         self._trainer = None
         self._self_check = None
 
+    def is_pristine(self) -> bool:
+        """True while the trainer has never been instantiated — a
+        snapshot of this state is just "reset me", which lets fork
+        choice checkpoint a node that has this workload configured but
+        has never mined or verified a training block, without paying a
+        model build."""
+        return self._trainer is None
+
     # -- trainer state is functional (immutable pytrees), so a snapshot
     #    is just the current references; the internal credit book is
     #    included so a rolled-back verify mints nothing ----------------
@@ -398,9 +571,13 @@ class TrainingWorkload:
     def restore(self, snap) -> None:
         t = self.trainer
         t.state, t.key = snap[0], snap[1]
-        t.ledger.blocks = snap[2]
-        t.history = snap[3]
-        t.book.balances = snap[4]
+        # copies, not the snapshot's own containers: ringed fork-choice
+        # checkpoints outlive a restore, and the live trainer mutates
+        # ledger/history/book in place — aliasing would corrupt the
+        # checkpoint the moment training resumes after a restore
+        t.ledger.blocks = list(snap[2])
+        t.history = list(snap[3])
+        t.book.balances = dict(snap[4])
         t.book.total_issued = snap[5]
 
     def prepare(self, ctx: BlockContext) -> PreparedWork:

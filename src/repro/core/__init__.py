@@ -17,7 +17,8 @@ from repro.core.jash import (
 from repro.core.ledger import Block, Ledger, merkle_root
 from repro.core.pow_train import PoUWTrainer
 from repro.core.rewards import CreditBook, reward_full, reward_optimal
-from repro.core.verify import VerifyReport, quorum_verify, verify_inclusion
+from repro.core.verify import (VerifyReport, quorum_verify,
+                               quorum_verify_batched, verify_inclusion)
 
 __all__ = [
     "Block",
@@ -38,6 +39,7 @@ __all__ = [
     "collatz_jash",
     "merkle_root",
     "quorum_verify",
+    "quorum_verify_batched",
     "reward_full",
     "reward_optimal",
     "run_full",

@@ -64,6 +64,22 @@ class FullResult:
     leaf_digests: np.ndarray   # (n, 8) uint32  sha256(leaf bytes)
     _leaves: Optional[Tuple[bytes, ...]] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    _packed: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def packed_words(self) -> np.ndarray:
+        """(n, 1 + res_words) little-endian uint32 message words — each
+        row is the ``arg || res`` Merkle-leaf message.  This is the array
+        the fused executor hashes in-dispatch (after an in-kernel
+        ``bswap32``) and the batched verifier re-hashes independently;
+        ``merkle_leaves`` is its byte view.  Cached: batched
+        verification reads it once for the dedup key and once for the
+        root recompute."""
+        if self._packed is None:
+            object.__setattr__(self, "_packed", np.ascontiguousarray(
+                np.concatenate([self.args[:, None], self.results],
+                               axis=1).astype("<u4")))
+        return self._packed
 
     @property
     def merkle_leaves(self) -> Tuple[bytes, ...]:
@@ -71,8 +87,7 @@ class FullResult:
         lazily from the packed arrays (one buffer slice per leaf, no per-row
         ``tobytes`` loop)."""
         if self._leaves is None:
-            packed = np.ascontiguousarray(np.concatenate(
-                [self.args[:, None], self.results], axis=1).astype("<u4"))
+            packed = self.packed_words()
             buf = packed.tobytes()
             stride = packed.shape[1] * 4
             leaves = tuple(buf[i * stride:(i + 1) * stride]

@@ -57,7 +57,14 @@ def merkle_root(leaves: Sequence[bytes], *, backend: str = "auto") -> str:
 
 def merkle_proof(leaves: Sequence[bytes], index: int, *,
                  backend: str = "hashlib") -> List[Dict]:
-    """Inclusion proof for ``leaves[index]`` -> list of (side, hash)."""
+    """Inclusion proof for ``leaves[index]`` -> list of (side, hash).
+
+    Raises ``IndexError`` outside the leaf set on every backend — a
+    proof over a duplicated odd-level pad node would verify against
+    the root without corresponding to any submitted result."""
+    if not 0 <= index < len(leaves):
+        raise IndexError(
+            f"proof index {index} out of range for {len(leaves)} leaves")
     if backend == "auto":
         backend = "device" if len(leaves) >= _DEVICE_MIN_LEAVES \
             else "hashlib"
@@ -105,8 +112,13 @@ class Block:
     timestamp: float = 0.0
 
     def header_bytes(self) -> bytes:
-        d = dataclasses.asdict(self)
-        d.pop("timestamp")
+        # field-by-field, not dataclasses.asdict: every field is a
+        # scalar, and asdict's recursive deep-copy is measurable on the
+        # gossip hot path (one header hash per delivered block).  The
+        # serialized bytes are unchanged — sort_keys orders the same
+        # key set, so existing chains re-hash identically.
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "timestamp"}
         return json.dumps(d, sort_keys=True).encode()
 
     @functools.cached_property

@@ -240,6 +240,62 @@ def merkle_root_from_digests(digests: np.ndarray | jax.Array) -> str:
     return _hybrid_levels(np.asarray(digests), keep_levels=False)[1]
 
 
+# Bounded like ``_tree_fn``: one executable per per-block leaf count
+# (the batch dimension is specialized inside jax.jit).  Unroll depth —
+# the dominant CPU compile cost, ~tens of seconds per level on the dev
+# container — matches ``_tree_fn`` exactly: levels stop at ``_CUTOVER``
+# per-block width and the narrow tops finish on the host.
+@functools.lru_cache(maxsize=32)
+def _forest_fn(width: int):
+    """Jitted reduction of a *forest*: (8, B, W) words-major digest
+    levels down to per-block width <= ``_CUTOVER``, every wide level of
+    every tree in one dispatch.  Pairing happens within each block's
+    lanes (odd levels duplicate the block's own last node), so each of
+    the B trees is reduced exactly as ``_tree_fn`` would reduce it
+    alone — but the compression runs over B * w/2 lanes at once, which
+    is what keeps the device busy when the segment is long."""
+
+    def reduce(rows8):
+        rows = [rows8[i] for i in range(8)]          # (B, w) each
+        w = width
+        while w > _CUTOVER:
+            if w % 2:
+                rows = [jnp.concatenate([r, r[:, -1:]], axis=1)
+                        for r in rows]
+                w += 1
+            pairs = [r[:, 0::2].reshape(-1) for r in rows] \
+                + [r[:, 1::2].reshape(-1) for r in rows]
+            out = _node_hash(pairs)                  # (B * w/2,) lanes
+            rows = [o.reshape(rows8.shape[1], -1) for o in out]
+            w //= 2
+        return jnp.stack(rows)                       # (8, B, w)
+
+    return jax.jit(reduce)
+
+
+def merkle_roots_from_digests(digests: np.ndarray | jax.Array
+                              ) -> List[str]:
+    """(B, N, 8) uint32 leaf-digest words -> B root hex strings.
+
+    The batched analogue of ``merkle_root_from_digests``: B same-shaped
+    trees reduced together, all wide levels in one jitted dispatch,
+    then B narrow tops (<= ``_CUTOVER`` digests each) finished on the
+    host.  Bit-identical per block to the single-tree reducers."""
+    d = np.asarray(digests, np.uint32)
+    if d.ndim != 3 or d.shape[-1] != 8:
+        raise ValueError(f"expected (B, N, 8) digest words, got {d.shape}")
+    B, n, _ = d.shape
+    if B == 0:
+        return []
+    if n == 0:
+        return [hashlib.sha256(b"").hexdigest()] * B
+    if n > _CUTOVER:
+        rows8 = jnp.asarray(np.ascontiguousarray(d.transpose(2, 0, 1)))
+        d = np.asarray(_forest_fn(n)(rows8)).transpose(1, 2, 0)
+    return [_host_levels(_words_to_digest_list(d[b]))[-1][0].hex()
+            for b in range(B)]
+
+
 def merkle_root_device(leaves: Sequence[bytes]) -> str:
     """Device analogue of ``core.ledger.merkle_root`` — bit-identical."""
     if not leaves:
@@ -253,7 +309,14 @@ def merkle_levels_device(leaves: Sequence[bytes]) -> List[np.ndarray]:
 
 
 def merkle_proof_device(leaves: Sequence[bytes], index: int) -> List[dict]:
-    """Inclusion proof in the ``core.ledger`` format, tree built on device."""
+    """Inclusion proof in the ``core.ledger`` format, tree built on device.
+
+    Raises ``IndexError`` for an index outside the leaf set — a proof
+    over a duplicated odd-level pad node would verify against the root
+    without corresponding to any submitted result."""
+    if not 0 <= index < len(leaves):
+        raise IndexError(
+            f"proof index {index} out of range for {len(leaves)} leaves")
     levels = merkle_levels_device(leaves)
     proof = []
     idx = index

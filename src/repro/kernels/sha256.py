@@ -63,10 +63,16 @@ def _sha256_kernel(k_ref, msg_ref, out_ref, *, nb: int):
     out_ref[:, :] = jnp.stack(state, axis=1)
 
 
-def sha256_pallas(padded: jax.Array, *, interpret: bool = True) -> jax.Array:
+def sha256_pallas(padded: jax.Array, *,
+                  interpret: bool | None = None) -> jax.Array:
     """padded: (N, nb*16) uint32 pre-padded blocks -> (N, 8) digests.
 
-    N must be a multiple of TILE_N (ops.py pads the batch)."""
+    N must be a multiple of TILE_N (ops.py pads the batch).
+    ``interpret=None`` auto-detects the backend (interpreter mode off on
+    real TPU, on everywhere else) — the same policy every ``ops.py``
+    call site applies explicitly."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     N, W = padded.shape
     assert W % 16 == 0
     nb = W // 16

@@ -58,6 +58,63 @@ class TestMerkleParity:
             assert not verify_merkle_proof(leaves[i] + b"x", proof, root)
 
 
+class TestProofEdgeCases:
+    def _leaves(self, n, seed=0):
+        rng = random.Random(seed)
+        return [rng.randbytes(rng.randint(1, 24)) for _ in range(n)]
+
+    def test_single_leaf_empty_proof(self):
+        leaves = self._leaves(1)
+        proof = merkle_proof_device(leaves, 0)
+        assert proof == merkle_proof(leaves, 0) == []
+        assert verify_merkle_proof(leaves[0], proof,
+                                   merkle_root_device(leaves))
+
+    @pytest.mark.parametrize("n", [3, 5, 7, 9])
+    def test_duplicated_last_node_index(self, n):
+        """Odd levels duplicate their last node; the proof for that last
+        leaf must use the duplicate as its sibling and still verify —
+        on device and hashlib identically."""
+        leaves = self._leaves(n, seed=n)
+        root = merkle_root_device(leaves)
+        proof = merkle_proof_device(leaves, n - 1)
+        assert proof == merkle_proof(leaves, n - 1)
+        # level 0 sibling of the duplicated last node is itself
+        assert proof[0]["hash"] == hashlib.sha256(leaves[-1]).hexdigest()
+        assert verify_merkle_proof(leaves[-1], proof, root)
+
+    def test_tampered_sibling_rejected(self):
+        leaves = self._leaves(8, seed=42)
+        root = merkle_root_device(leaves)
+        for step in range(3):                    # every level of the proof
+            proof = merkle_proof_device(leaves, 3)
+            assert verify_merkle_proof(leaves[3], proof, root)
+            tampered = bytes.fromhex(proof[step]["hash"])
+            proof[step]["hash"] = (tampered[:-1]
+                                   + bytes([tampered[-1] ^ 1])).hex()
+            assert not verify_merkle_proof(leaves[3], proof, root)
+
+    @pytest.mark.parametrize("index", [-1, 5, 8])
+    def test_out_of_range_index_raises(self, index):
+        """Both backends must agree: a proof for the duplicated
+        odd-level pad node would verify against the root without
+        corresponding to any submitted result."""
+        leaves = self._leaves(5, seed=7)
+        with pytest.raises(IndexError, match="out of range"):
+            merkle_proof_device(leaves, index)
+        with pytest.raises(IndexError, match="out of range"):
+            merkle_proof(leaves, index)              # hashlib default
+
+    def test_verify_inclusion_out_of_range_raises(self):
+        from repro.core.verify import verify_inclusion
+        fr = run_full(_mix_jash(arg_bits=5))
+        root = merkle_root(fr.merkle_leaves)
+        assert verify_inclusion(fr, 31, root)
+        for bad in (-1, 32, 1000):
+            with pytest.raises(IndexError, match="out of range"):
+                verify_inclusion(fr, bad, root)
+
+
 class TestChunkedExecutor:
     def test_chunked_bit_identical(self):
         j = _mix_jash()

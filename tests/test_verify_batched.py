@@ -1,0 +1,509 @@
+"""Batched verification pipeline (DESIGN §10): consensus identity.
+
+The contract under test everywhere here: the batched/incremental paths
+— ``quorum_verify_batched``, ``recompute_roots_batched``,
+``verify_chain_batched``, fork-point-incremental ``consider_chain``
+and the shared ``VerifyCache`` — make exactly the accept/reject
+decisions of the per-block, genesis-replay reference, on the same
+inputs, including corrupted payloads and stateful (training) rollback.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.chain import Network, Node, verify_chain_batched
+from repro.chain.sim import (adversarial_scenario, partitioned_scenario,
+                             throughput_scenario)
+from repro.chain.workload import (
+    BlockContext, BlockPayload, ClassicSha256Workload, JashFullWorkload,
+    JashOptimalWorkload,
+)
+from repro.core.executor import run_full
+from repro.core.jash import Jash, JashMeta, collatz_jash
+from repro.core.verify import (quorum_verify, quorum_verify_batched,
+                               recompute_roots_batched)
+from repro.core.ledger import merkle_root
+
+
+def small_collatz(arg_bits: int = 6, max_steps: int = 64) -> Jash:
+    base = collatz_jash(max_steps=max_steps)
+    return Jash(base.name, base.fn,
+                JashMeta(arg_bits=arg_bits, res_bits=32, importance=0.9),
+                example_args=base.example_args)
+
+
+def mix_jash(arg_bits: int = 6, salt: int = 0xDEADBEEF) -> Jash:
+    def fn(a):
+        return (a * jnp.uint32(2654435761)) ^ jnp.uint32(salt)
+    return Jash(f"mix{salt:x}", fn,
+                JashMeta(arg_bits=arg_bits, res_bits=32),
+                example_args=(jnp.uint32(0),))
+
+
+def full_payload(jash: Jash) -> BlockPayload:
+    fr = run_full(jash)
+    return BlockPayload(workload="full", jash_id=jash.source_id(),
+                        merkle_root=fr.commit_root(),
+                        n_results=len(fr.args), jash=jash, full=fr)
+
+
+def corrupt_results(payload: BlockPayload) -> BlockPayload:
+    bad = payload.full.results.copy()
+    bad[0, 0] ^= 1
+    return dataclasses.replace(
+        payload, full=dataclasses.replace(payload.full, results=bad))
+
+
+# ---------------------------------------------------------------------------
+# core layer: batched primitives == scalar reference
+# ---------------------------------------------------------------------------
+
+
+class TestQuorumBatched:
+    def test_reports_bit_identical_to_scalar(self):
+        j1, j2 = mix_jash(6, 1), mix_jash(6, 2)
+        f1, f2 = run_full(j1), run_full(j2)
+        pairs = [(j1, f1), (j2, f2), (j1, f1)]
+        assert quorum_verify_batched(pairs, fraction=0.5) == \
+            [quorum_verify(j, f, fraction=0.5) for j, f in pairs]
+
+    def test_corrupted_block_fails_identically(self):
+        j = mix_jash(6, 3)
+        f = run_full(j)
+        bad = dataclasses.replace(f, results=f.results ^ 1)
+        batched = quorum_verify_batched([(j, f), (j, bad)], fraction=1.0)
+        scalar = [quorum_verify(j, f, fraction=1.0),
+                  quorum_verify(j, bad, fraction=1.0)]
+        assert batched == scalar
+        assert batched[0].ok and not batched[1].ok
+        assert batched[1].mismatched_args == scalar[1].mismatched_args
+
+    def test_empty_segment(self):
+        assert quorum_verify_batched([]) == []
+
+
+class TestRootsBatched:
+    def test_roots_match_hashlib_reference(self):
+        fulls = [run_full(mix_jash(b, 4)) for b in (5, 6, 5)]
+        assert recompute_roots_batched(fulls) == \
+            [merkle_root(list(f.merkle_leaves), backend="hashlib")
+             for f in fulls]
+
+    def test_tampered_results_change_root(self):
+        f = run_full(mix_jash(6, 5))
+        bad = dataclasses.replace(f, results=f.results ^ 1)
+        good_root, bad_root = recompute_roots_batched([f, bad])
+        assert good_root != bad_root
+        assert good_root == merkle_root(list(f.merkle_leaves),
+                                        backend="hashlib")
+
+    def test_device_mismatch_falls_back_to_hashlib(self, monkeypatch):
+        """A broken device reducer is caught by the per-shape-group
+        hashlib spot-check, and every root then comes from the
+        reference path — accept/reject never depends on the kernel."""
+        import repro.core.verify as verify_mod
+        fulls = [run_full(mix_jash(5, 6)), run_full(mix_jash(6, 7))]
+        monkeypatch.setattr(
+            verify_mod, "merkle_roots_from_digests",
+            lambda d: ["00" * 32] * d.shape[0])
+        assert verify_mod.recompute_roots_batched(fulls) == \
+            [merkle_root(list(f.merkle_leaves), backend="hashlib")
+             for f in fulls]
+
+
+# ---------------------------------------------------------------------------
+# workload layer: verify_batch / verify_chain_batched == wl.verify loop
+# ---------------------------------------------------------------------------
+
+
+class TestVerifyChainBatched:
+    def _segment(self):
+        j = small_collatz()
+        workloads = {"full": JashFullWorkload(),
+                     "optimal": JashOptimalWorkload(),
+                     "classic": ClassicSha256Workload(arg_bits=6)}
+        fp = full_payload(j)
+        cw = workloads["classic"]
+        cp = cw.mine(cw.prepare(BlockContext(height=0, prev_hash="")))
+        ow = workloads["optimal"]
+        op = ow.mine(ow.prepare(BlockContext(height=0, prev_hash="",
+                                             jash=small_collatz(5))))
+        return workloads, [fp, cp, op, fp, cp]
+
+    def test_clean_segment_matches_loop(self):
+        workloads, payloads = self._segment()
+        assert all(workloads[p.workload].verify(p) for p in payloads)
+        assert verify_chain_batched(workloads, payloads)
+
+    @pytest.mark.parametrize("tamper", [
+        lambda p: corrupt_results(p),                        # bad results
+        lambda p: dataclasses.replace(p, merkle_root="0" * 64),
+        lambda p: dataclasses.replace(p, jash_id="deadbeef" * 2),
+    ])
+    def test_tampered_full_block_rejected_like_loop(self, tamper):
+        workloads, payloads = self._segment()
+        payloads[3] = tamper(payloads[3])
+        assert not workloads["full"].verify(payloads[3])
+        assert not verify_chain_batched(workloads, payloads)
+
+    def test_tampered_optimal_block_rejected_like_loop(self):
+        workloads, payloads = self._segment()
+        payloads[2] = dataclasses.replace(payloads[2], best_arg=1,
+                                          best_res="00" * 4)
+        assert not workloads["optimal"].verify(payloads[2])
+        assert not verify_chain_batched(workloads, payloads)
+
+    def test_unknown_workload_rejected(self):
+        workloads, payloads = self._segment()
+        payloads[1] = dataclasses.replace(payloads[1], workload="espresso")
+        assert not verify_chain_batched(workloads, payloads)
+
+    def test_replay_dedup_is_per_arg_space(self):
+        """Two classic payloads over different nonce spaces must not
+        share a replay (the dedup key includes n_args)."""
+        wl = ClassicSha256Workload(arg_bits=5)
+        p5 = wl.mine(wl.prepare(BlockContext(height=0, prev_hash="")))
+        wl6 = ClassicSha256Workload(arg_bits=6)
+        p6 = wl6.mine(wl6.prepare(BlockContext(height=0, prev_hash="")))
+        assert wl.verify_batch([p5, p6]) == [wl.verify(p5), wl.verify(p6)]
+
+    def test_full_content_dedup_parity(self):
+        """Byte-identical full payloads as *distinct objects* (what
+        deterministic re-mining of one publication produces) collapse
+        to one verification — with verdicts bit-identical to scalar
+        calls; a corrupted twin (distinct bytes) never rides the
+        honest verdict, and duplicated corrupt evidence is rejected
+        everywhere it appears."""
+        j = small_collatz()
+        wl = JashFullWorkload()
+        p1 = full_payload(j)
+        fr = p1.full
+        twin = dataclasses.replace(
+            p1, full=dataclasses.replace(fr, args=fr.args.copy(),
+                                         results=fr.results.copy()))
+        bad = corrupt_results(p1)
+        bad_twin = corrupt_results(twin)
+        seg = [p1, twin, bad, twin, bad_twin]
+        assert wl.verify_batch(seg) == [wl.verify(p) for p in seg] \
+            == [True, True, False, True, False]
+
+    def test_dedup_requires_same_fn(self):
+        """``source_id()`` hashes only name+meta, so a payload pairing
+        honest evidence with a *different function* under the same id
+        must run its own quorum re-execution — never ride the honest
+        payload's verdict through the content dedup."""
+        j = mix_jash(6, 8)
+        wl = JashFullWorkload()
+        honest = full_payload(j)
+
+        def other_fn(a):
+            return a * jnp.uint32(3)
+
+        impostor_jash = Jash(j.name, other_fn, j.meta,
+                             example_args=j.example_args)
+        assert impostor_jash.source_id() == j.source_id()
+        impostor = dataclasses.replace(honest, jash=impostor_jash)
+        assert wl.verify_batch([honest, impostor]) == \
+            [wl.verify(honest), wl.verify(impostor)] == [True, False]
+
+    def test_precleared_must_align(self):
+        workloads, payloads = self._segment()
+        with pytest.raises(ValueError, match="align"):
+            verify_chain_batched(workloads, payloads, precleared=[True])
+
+
+# ---------------------------------------------------------------------------
+# node layer: audit_chain, fork-point snapshots, verify cache
+# ---------------------------------------------------------------------------
+
+
+def mixed_net(**node_kwargs) -> Network:
+    net = Network.create(2, classic_arg_bits=6, **node_kwargs)
+    net.nodes[0].submit(small_collatz())
+    net.nodes[1].submit(small_collatz(max_steps=32))
+    net.run(4, ["full", "optimal", None, None])
+    return net
+
+
+class TestAuditChain:
+    def test_audit_chain_equals_per_block_audits(self):
+        net = mixed_net()
+        for node in net.nodes:
+            assert node.audit_chain() == \
+                all(node.audit(h) for h in range(node.ledger.height))
+            assert node.audit_chain()
+
+    def test_audit_chain_detects_evidence_swap(self):
+        """Tampered full-mode evidence under an untouched header: the
+        committed root still matches the header, so rejection must come
+        from the batched independent root recompute."""
+        net = mixed_net()
+        node = net.nodes[0]
+        assert node._payloads[0].full is not None      # height 0 is full
+        node._payloads[0] = corrupt_results(node._payloads[0])
+        assert not node.audit_chain()
+        assert not node.audit(0)                       # parity with scalar
+
+    def test_audit_chain_out_of_range_raises(self):
+        net = mixed_net()
+        from repro.chain.workload import ChainError
+        with pytest.raises(ChainError, match="no block"):
+            net.nodes[0].audit_chain(heights=[99])
+
+
+class TestForkPointSnapshots:
+    @pytest.mark.parametrize("interval", [0, 1, 2, 8])
+    def test_mixed_fork_replay_identical_across_snapshot_policies(
+            self, interval):
+        """The test_network_edges mixed-workload fork scenario, replayed
+        under every snapshot policy (0 = the genesis-replay reference):
+        same adoption decision, same tips, same credit books."""
+        net = Network.create(
+            2, node_factory=lambda i: Node(node_id=i, classic_arg_bits=6,
+                                           snapshot_interval=interval))
+        n0, n1 = net.nodes
+        n0.submit(small_collatz())
+        n0.mine_block("full")
+        n0.mine_block()
+        n1.mine_block()
+        n1.submit(small_collatz(max_steps=32))
+        n1.mine_block("optimal")
+        tip = n1.mine_block()
+        res = net.broadcast(1, tip.record.to_block(), tip)
+        assert res.accepted_by == [1, 0]
+        assert net.converged()
+        assert [b.mode for b in n0.ledger.blocks] == \
+            ["classic", "optimal", "classic"]
+        books = {tuple(sorted(n.book.balances.items())) for n in net.nodes}
+        assert len(books) == 1
+        assert all(n.audit_chain() for n in net.nodes)
+        # the adopted chain keeps extending and has_block's index is
+        # consistent after the reorg
+        res = net.mine(0)
+        assert not res.rejected_by and net.heights == [4, 4]
+        for node in net.nodes:
+            assert all(node.has_block(b.block_hash)
+                       for b in node.ledger.blocks)
+
+    def test_deep_fork_beyond_ring_falls_back_to_genesis(self):
+        """A reorg whose fork point predates every ringed checkpoint
+        must still adopt correctly (restart from genesis)."""
+        a = Node(node_id=0, classic_arg_bits=6, snapshot_interval=1,
+                 snapshot_ring=2)
+        b = Node(node_id=1, classic_arg_bits=6)
+        for _ in range(6):
+            a.mine_block()
+        for _ in range(7):
+            b.mine_block()
+        # a's newest checkpoints (heights 5, 6) are past the fork point 0
+        assert a.consider_chain(b.ledger.blocks, b.chain_payloads())
+        assert a.ledger.tip_hash == b.ledger.tip_hash
+        assert sorted(a.book.balances.items()) == \
+            sorted(b.book.balances.items())
+        assert a.audit_chain()
+
+    def test_rejected_candidate_leaves_node_untouched(self):
+        net = mixed_net()
+        victim = Node(node_id=9, classic_arg_bits=6)
+        victim.mine_block()
+        pre_tip = victim.ledger.tip_hash
+        pre_book = dict(victim.book.balances)
+        donor = net.nodes[0]
+        payloads = donor.chain_payloads()
+        payloads[2] = dataclasses.replace(payloads[2], best_res="00" * 4)
+        assert not victim.consider_chain(donor.ledger.blocks, payloads)
+        assert victim.ledger.tip_hash == pre_tip
+        assert victim.book.balances == pre_book
+
+    def test_snapshot_params_validated(self):
+        with pytest.raises(ValueError, match="snapshot_interval"):
+            Node(snapshot_interval=-1)
+        with pytest.raises(ValueError, match="snapshot_ring"):
+            Node(snapshot_ring=-1)
+
+
+class TestStatefulSnapshotRing:
+    """Checkpoints taken while adopting a chain that contains training
+    blocks: batched verification replays the trainer to the *tail end*
+    before the commit loop runs, so per-commit checkpoints would pair
+    intermediate heights with end-of-chain trainer state.  Fork choice
+    must ring only tip-consistent checkpoints, or a later reorg through
+    a mid-tail fork point restores a too-advanced trainer and rejects a
+    valid longer chain."""
+
+    @staticmethod
+    def _training_workload(seed: int = 7):
+        from repro.chain import TrainingWorkload
+        from repro.configs import get_config, reduced
+        from repro.configs.base import InputShape
+        from repro.core.pow_train import PoUWTrainer
+        from repro.train.steps import TrainHparams
+        cfg = reduced(get_config("qwen3-0.6b"))
+        shape = InputShape("t", 32, 4, "train")
+        return TrainingWorkload(
+            lambda: PoUWTrainer(cfg, shape,
+                                hp=TrainHparams(peak_lr=1e-3,
+                                                warmup_steps=2,
+                                                total_steps=16),
+                                mode="full", n_miners=2, seed=seed))
+
+    def _node(self, node_id, **kw):
+        return Node(node_id=node_id, classic_arg_bits=6,
+                    workloads={"training": self._training_workload()},
+                    **kw)
+
+    def test_reorg_through_mid_tail_checkpoint_with_training(self):
+        donor1 = self._node(1, snapshot_interval=0)
+        donor1.mine_block()                       # 0 classic
+        donor1.mine_block("training")             # 1 training
+        prefix_blocks = list(donor1.ledger.blocks[:2])
+        prefix_payloads = donor1.chain_payloads()[:2]
+        donor1.mine_block("training")             # 2 training
+        donor1.mine_block()                       # 3 classic
+
+        donor2 = self._node(2, snapshot_interval=0)
+        assert donor2.consider_chain(prefix_blocks, prefix_payloads)
+        donor2.mine_block()                       # 2 classic  (forks)
+        donor2.mine_block("training")             # 3 training
+        donor2.mine_block()                       # 4 classic
+
+        victim = self._node(0, snapshot_interval=1, snapshot_ring=8)
+        reference = self._node(3, snapshot_interval=0)
+        for node in (victim, reference):
+            assert node.consider_chain(donor1.ledger.blocks,
+                                       donor1.chain_payloads())
+            # fork point (height 2) predates the adopted tail's end, so
+            # any checkpoint at heights 1..3 must hold the trainer state
+            # of *that* height, not the tail end's
+            assert node.consider_chain(donor2.ledger.blocks,
+                                       donor2.chain_payloads())
+        assert victim.ledger.tip_hash == reference.ledger.tip_hash \
+            == donor2.ledger.tip_hash
+        assert sorted(victim.book.balances.items()) == \
+            sorted(reference.book.balances.items())
+        # the adopted chain keeps extending and re-audits cleanly
+        victim.mine_block("training")
+        assert victim.audit_chain()
+
+    def test_checkpoint_survives_restore_then_advance(self):
+        """A ringed checkpoint that fork choice restores and then
+        trains past must be restorable *again* unchanged: the live
+        trainer may never alias the checkpoint's stored containers,
+        or the second reorg through the same fork point replays from
+        corrupted state and rejects a valid longer chain."""
+        victim = self._node(0, snapshot_interval=1, snapshot_ring=8)
+        reference = self._node(3, snapshot_interval=0)
+        for node in (victim, reference):
+            node.mine_block()                 # 0 classic
+            node.mine_block("training")       # 1 training
+            node.mine_block()                 # 2 classic
+        prefix_blocks = list(victim.ledger.blocks[:2])
+        prefix_payloads = victim.chain_payloads()[:2]
+
+        donor_a = self._node(1, snapshot_interval=0)
+        assert donor_a.consider_chain(prefix_blocks, prefix_payloads)
+        donor_a.mine_block("training")        # 2 training  (forks)
+        donor_a.mine_block()                  # 3 classic
+        donor_b = self._node(2, snapshot_interval=0)
+        assert donor_b.consider_chain(prefix_blocks, prefix_payloads)
+        donor_b.mine_block()                  # 2 classic   (forks)
+        donor_b.mine_block("training")        # 3 training
+        donor_b.mine_block()                  # 4 classic
+
+        for node in (victim, reference):
+            # first reorg restores the height-2 checkpoint and replays
+            # a training tail on top of it (victim only; reference
+            # replays from genesis)
+            assert node.consider_chain(donor_a.ledger.blocks,
+                                       donor_a.chain_payloads())
+            # second reorg through the SAME fork point restores that
+            # checkpoint again — it must still hold height-2 state
+            assert node.consider_chain(donor_b.ledger.blocks,
+                                       donor_b.chain_payloads())
+        assert victim.ledger.tip_hash == reference.ledger.tip_hash \
+            == donor_b.ledger.tip_hash
+        assert sorted(victim.book.balances.items()) == \
+            sorted(reference.book.balances.items())
+        victim.mine_block("training")
+        assert victim.audit_chain()
+
+
+class TestVerifyCache:
+    def test_network_domain_verifies_each_block_once(self):
+        net = Network.create(3, classic_arg_bits=6)
+        net.run(3)
+        assert net.converged()
+        cache = net.verify_cache
+        assert cache is not None and len(cache) == 3
+        # miner self-verify seeds the cache; the other 2 peers hit it
+        assert cache.hits == 3 * 2
+
+    def test_tampered_copy_misses_cache_and_is_rejected(self):
+        """Identity keying: a payload copy with honest committed fields
+        but tampered evidence must not ride an honest cache entry."""
+        net = Network.create(2, classic_arg_bits=6)
+        res = net.mine(0)
+        blk = res.receipt.record.to_block()
+        evil = dataclasses.replace(res.receipt.payload, best_res="00" * 4)
+        victim = Node(node_id=7, classic_arg_bits=6)
+        victim.verify_cache = net.verify_cache
+        assert not victim.receive(blk, evil, origin=0)
+        assert victim.ledger.height == 0
+        # the honest object (already cached) is accepted via the cache
+        hits_before = net.verify_cache.hits
+        assert victim.receive(blk, res.receipt.payload, origin=0)
+        assert net.verify_cache.hits == hits_before + 1
+
+    def test_opt_out_node_never_enrolled(self):
+        net = Network.create(
+            2, node_factory=lambda i: Node(
+                node_id=i, classic_arg_bits=6,
+                use_verify_cache=(i == 0)))
+        assert net.nodes[0].verify_cache is net.verify_cache
+        assert net.nodes[1].verify_cache is None
+        net.run(2)
+        assert net.converged()
+
+    def test_sim_reports_identical_with_and_without_cache(self):
+        """The cache changes who verifies, never what is decided: the
+        bit-reproducible SimReport is identical either way."""
+        with_cache = throughput_scenario(4, 6, seed=3).run()
+        without = throughput_scenario(4, 6, seed=3,
+                                      shared_verify_cache=False).run()
+        assert with_cache.to_json() == without.to_json()
+        assert with_cache.converged
+
+    def test_canonical_scenarios_unchanged_by_cache(self):
+        """Partition/adversarial scenarios still converge with the
+        shared domain enabled (the default) — the cache must not leak
+        acceptance across partitions or from adversarial payloads."""
+        assert partitioned_scenario(seed=5).verify_cache is not None
+        r_cache = partitioned_scenario(seed=5).run()
+        assert r_cache.converged and r_cache.credit_divergence == 0.0
+        r_adv = adversarial_scenario(seed=1).run()
+        assert r_adv.converged and r_adv.credit_divergence == 0.0
+
+    def test_cache_bounded_fifo(self):
+        """Entries pin whole payloads, so the cache is bounded: oldest
+        out first, and an evicted block just re-verifies on next
+        receipt."""
+        from repro.chain import VerifyCache
+        a, b, c = object(), object(), object()
+        cache = VerifyCache(maxsize=2)
+        cache.add("a", a)
+        cache.add("b", b)
+        assert cache.check("a", a)
+        cache.add("c", c)                  # evicts "a"
+        assert len(cache) == 2
+        assert not cache.check("a", a) and cache.check("c", c)
+        with pytest.raises(ValueError, match="maxsize"):
+            VerifyCache(maxsize=0)
+
+    def test_adversary_nodes_not_enrolled(self):
+        sim = adversarial_scenario(n_honest=2, seed=0)
+        for nid, node in sim._nodes.items():
+            if nid in sim._adversaries:
+                assert node.verify_cache is None
+            else:
+                assert node.verify_cache is sim.verify_cache
