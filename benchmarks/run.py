@@ -23,6 +23,9 @@ of its quantitative *claims* instead:
                   the shared verify cache makes tractable
   verify_pipeline DESIGN §10 ``verify_chain_batched`` over a mixed
                   256-block segment vs the per-block receive-path loop
+  workload_suite  DESIGN §11 application workloads (SAT / GAN inversion /
+                  docking): mine + verify throughput per family, and the
+                  SAT certificate-check vs re-mine asymmetry
 
 Prints ``name,us_per_call,derived`` CSV rows.  The pipeline rows are
 also written machine-readably to BENCH_pipeline.json (repo root): the
@@ -512,6 +515,122 @@ def bench_sim_scale() -> dict:
     return out
 
 
+def bench_workload_suite(*, sat_vars: int = 12, sat_clauses: int = 48,
+                         grid_bits: int = 10, dock: int = 32,
+                         gan_rounds: int = 3, segment: int = 8) -> dict:
+    """DESIGN §11: mine/verify throughput per application workload
+    family, and the SAT certificate-check vs re-mine asymmetry.
+
+    Each family is timed from both chairs: the miner's
+    ``mine(prepare(ctx))`` and a *separate* verifier instance's
+    ``verify`` (what every peer pays on receive).  The headline number
+    is ``sat_cert_verify``: checking a committed satisfiability
+    certificate is O(clauses) host work, orders of magnitude under the
+    full-space re-mine — the first mine-hard/verify-cheap asymmetry in
+    the repo.  GAN rounds re-jit per round (each round's grid is a new
+    closure), so their cost is end-to-end including compile — that is
+    what a real node pays.  Docking also times ``verify_batch`` over a
+    repeated-screening segment (content dedup collapses it to ~one
+    verification)."""
+    from repro.chain.workload import BlockContext
+    from repro.chain.workloads import (DockingWorkload,
+                                       GanInversionWorkload, SatWorkload)
+
+    def ctx(h: int) -> BlockContext:
+        return BlockContext(height=h, prev_hash="")
+
+    out: dict = {}
+
+    # --- SAT: certificate asymmetry ----------------------------------
+    miner = SatWorkload(n_vars=sat_vars, n_clauses=sat_clauses, seed=1)
+    verifier = SatWorkload(n_vars=sat_vars, n_clauses=sat_clauses, seed=1)
+    sat_h = unsat_h = sat_p = unsat_p = None
+    for h in range(64):
+        p = miner.mine(miner.prepare(ctx(h)))
+        if p.certificate is not None and sat_p is None:
+            sat_h, sat_p = h, p
+        if p.certificate is None and unsat_p is None:
+            unsat_h, unsat_p = h, p
+        if sat_p is not None and unsat_p is not None:
+            break
+    if sat_p is None or unsat_p is None:
+        raise RuntimeError("no SAT+UNSAT pair in 64 instances — "
+                           "adjust sat_vars/sat_clauses")
+    ms_mine = _median_ms(lambda: miner.mine(miner.prepare(ctx(sat_h))), 5)
+    for p, name in ((sat_p, "cert"), (unsat_p, "refute")):
+        if not verifier.verify(p):
+            raise RuntimeError(f"sat {name} verification rejected an "
+                               "honest block")
+    ms_cert = _median_ms(lambda: verifier.verify(sat_p), 20)
+    ms_refute = _median_ms(lambda: verifier.verify(unsat_p), 5)
+    n_args = 1 << sat_vars
+    cert_speedup = ms_mine / max(ms_cert, 1e-9)
+    row("workload_suite.sat_mine", ms_mine * 1e3,
+        f"2^{sat_vars} assignments, args_per_s="
+        f"{n_args / (ms_mine * 1e-3):.3g}")
+    row("workload_suite.sat_cert_verify", ms_cert * 1e3,
+        f"O({sat_clauses} clauses) witness check; "
+        f"cert_vs_remine={cert_speedup:.0f}x")
+    row("workload_suite.sat_refute_verify", ms_refute * 1e3,
+        f"hashlib root + quorum over the table; "
+        f"vs_mine={ms_mine / max(ms_refute, 1e-9):.2f}x")
+    out["sat"] = {"n_vars": sat_vars, "us_mine": ms_mine * 1e3,
+                  "us_cert_verify": ms_cert * 1e3,
+                  "us_refute_verify": ms_refute * 1e3,
+                  "cert_vs_remine_speedup": cert_speedup}
+
+    # --- GAN inversion: stateful rounds ------------------------------
+    gm = GanInversionWorkload(seed=0, grid_bits=grid_bits)
+    gv = GanInversionWorkload(seed=0, grid_bits=grid_bits)
+    mine_ms, verify_ms = [], []
+    for r in range(gan_rounds):
+        t0 = time.perf_counter()
+        p = gm.mine(gm.prepare(ctx(r)))
+        mine_ms.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        if not gv.verify(p):
+            raise RuntimeError("gan round verification rejected an "
+                               "honest block")
+        verify_ms.append((time.perf_counter() - t0) * 1e3)
+    ms_gmine = statistics.median(mine_ms)
+    ms_gverify = statistics.median(verify_ms)
+    row("workload_suite.gan_mine", ms_gmine * 1e3,
+        f"2^{grid_bits} latents/round incl. per-round jit, err -> "
+        f"{gm.inversion_error():.4f}")
+    row("workload_suite.gan_verify", ms_gverify * 1e3,
+        "stateful replay + zoom-digest compare (doubles as state sync)")
+    out["gan"] = {"grid_bits": grid_bits, "rounds": gan_rounds,
+                  "us_mine": ms_gmine * 1e3,
+                  "us_verify": ms_gverify * 1e3}
+
+    # --- docking: consensus-bound data bundle ------------------------
+    dm = DockingWorkload(n_r=dock, n_p=dock, seed=0)
+    dv = DockingWorkload(n_r=dock, n_p=dock, seed=0)
+    dm.mine(dm.prepare(ctx(0)))                       # compile
+    ms_dmine = _median_ms(lambda: dm.mine(dm.prepare(ctx(0))), 5)
+    dp = dm.mine(dm.prepare(ctx(0)))
+    if not dv.verify(dp):
+        raise RuntimeError("docking verification rejected an honest block")
+    ms_dverify = _median_ms(lambda: dv.verify(dp), 5)
+    seg = [dm.mine(dm.prepare(ctx(h))) for h in range(segment)]
+    if not all(dv.verify_batch(seg)):
+        raise RuntimeError("docking batched verification rejected the "
+                           "segment")
+    ms_dbatch = _median_ms(lambda: dv.verify_batch(seg), 5)
+    pairs = dock * dock
+    row("workload_suite.dock_mine", ms_dmine * 1e3,
+        f"pairs_per_s={pairs / (ms_dmine * 1e-3):.0f}")
+    row("workload_suite.dock_verify", ms_dverify * 1e3,
+        "bundle-checksum bind + hashlib root + quorum")
+    row(f"workload_suite.dock_verify_batch_{segment}", ms_dbatch * 1e3,
+        f"content dedup: {segment} repeat screenings ~ "
+        f"{ms_dbatch / max(ms_dverify, 1e-9):.2f}x one verify")
+    out["docking"] = {"n_pairs": pairs, "us_mine": ms_dmine * 1e3,
+                      "us_verify": ms_dverify * 1e3, "segment": segment,
+                      "us_verify_batch": ms_dbatch * 1e3}
+    return out
+
+
 def bench_sim_gossip(n_lanes: int = 1):
     """DESIGN §9: the async gossip simulator under partition + adversary
     scenarios.  Each row consumes the deterministic ``SimReport`` — fork
@@ -573,6 +692,8 @@ def bench_roofline():
 SMOKE_LEAVES = 256
 SMOKE_VERIFY_BLOCKS = 64
 SMOKE_VERIFY_ARG_BITS = 8
+SMOKE_SUITE = dict(sat_vars=10, sat_clauses=40, grid_bits=6, dock=16,
+                   gan_rounds=2, segment=4)
 
 
 def _git_sha() -> str:
@@ -624,7 +745,8 @@ def check_smoke_regression(measured: dict) -> int:
               "regression gate skipped (run a full bench to record one)")
         return 0
     failures = 0
-    for key in ("merkle_commit_us_device", "verify_chain_batched_us"):
+    for key in ("merkle_commit_us_device", "verify_chain_batched_us",
+                "workload_suite_dock_verify_us"):
         base, got = baseline.get(key), measured.get(key)
         if base is None or got is None:
             continue
@@ -650,14 +772,17 @@ def _smoke_scale_metrics(train_section: bool = True,
                                        train_section=train_section)
         verify = bench_verify_pipeline(n_blocks=SMOKE_VERIFY_BLOCKS,
                                        full_arg_bits=SMOKE_VERIFY_ARG_BITS)
+        suite = bench_workload_suite(**SMOKE_SUITE)
     finally:
         _QUIET = False
     return {
         "n_leaves": SMOKE_LEAVES,
         "verify_blocks": SMOKE_VERIFY_BLOCKS,
         "verify_arg_bits": SMOKE_VERIFY_ARG_BITS,
+        "suite_scale": SMOKE_SUITE,
         "merkle_commit_us_device": commit["merkle_commit"]["us_device"],
         "verify_chain_batched_us": verify["us_batched"],
+        "workload_suite_dock_verify_us": suite["docking"]["us_verify"],
     }
 
 
@@ -685,6 +810,7 @@ def main(smoke: bool = False) -> None:
     bench_verification()
     payload = bench_commit_pipeline()
     payload["verify_pipeline"] = bench_verify_pipeline()
+    payload["workload_suite"] = bench_workload_suite()
     payload["sim_gossip"] = bench_sim_scale()
     payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
                                                      quiet=True)

@@ -1,85 +1,69 @@
-"""PNPCoin §4 use case: cellular docking brute force.
+"""PNPCoin §4 use case — cellular docking brute force — as a chain
+workload (``repro.chain.workloads.DockingWorkload``):
 
-Reproduces the paper's walkthrough exactly:
-  - pair space b = (n_r mod N_r + n_p * N_r)_2           (eq. 1)
+  - pair space b = (n_r mod N_r + n_p * N_r)_2            (eq. 1)
   - 2-bit output: 01 binds / 00 no-bind / 10 did-not-terminate
-  - bounded matcher (a fori_loop "simulation" with early exit)
-  - data bundle checksum in the meta
-  - RA review -> full-mode execution -> Merkle commit -> even rewards
+  - bounded matcher (a fori_loop "simulation" with early exit, §3.2)
+  - the data-bundle checksum is **bound into consensus**: the jash meta
+    checksums the receptor/peptide tables, the committed ``jash_id``
+    hashes the meta, and every verifier rebuilds the jash from its own
+    local bundle — so a peer holding a tampered bundle rejects the
+    block (demonstrated below), and vice versa.
+
+Mined on a 2-node ``Network``: gossip, bit-exact re-verification on
+receive, even §3.3 reward split on both books.
 
   PYTHONPATH=src python examples/docking.py
 """
-import hashlib
+import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.chain import Network, Node
+from repro.chain.workloads import DockingBundle, DockingWorkload
 
-from repro.core.authority import RuntimeAuthority
-from repro.core.executor import run_full
-from repro.core.jash import Jash, JashMeta, bounded_while
-from repro.core.ledger import Ledger, merkle_root
-from repro.core.rewards import CreditBook, reward_full
-from repro.core.verify import quorum_verify
-
-N_R, N_P = 32, 32                       # receptors x peptides
-MAX_STEPS = 64                          # §3 req. 5: bounded loop
-
-# the "data bundle": per-receptor/peptide feature tables (checksummed)
-rng = np.random.RandomState(0)
-RECEPTORS = jnp.asarray(rng.randint(0, 1 << 16, (N_R,), dtype=np.uint32))
-PEPTIDES = jnp.asarray(rng.randint(0, 1 << 16, (N_P,), dtype=np.uint32))
-checksum = hashlib.sha256(np.asarray(RECEPTORS).tobytes() +
-                          np.asarray(PEPTIDES).tobytes()).hexdigest()
+N_R, N_P, SEED = 32, 32, 0
 
 
-def matcher(b: jax.Array) -> jax.Array:
-    """Simulated docking energy minimization: bounded relaxation loop;
-    binds if the energy drops under threshold before the step bound."""
-    r = RECEPTORS[b % jnp.uint32(N_R)]
-    p = PEPTIDES[b // jnp.uint32(N_R)]
-    e0 = ((r ^ p) * jnp.uint32(2654435761)) >> jnp.uint32(16)
-
-    def cond(s):
-        return s[0] > jnp.uint32(100)
-
-    def body(s):
-        e, t = s
-        return (e - (e >> jnp.uint32(3)) - jnp.uint32(1), t + 1)
-
-    (e, steps), terminated = bounded_while(
-        cond, body, (e0, jnp.uint32(0)), max_steps=MAX_STEPS)
-    # 01 binds (fast convergence), 00 no-bind, 10 did not terminate
-    return jnp.where(~terminated, jnp.uint32(0b10),
-                     jnp.where(steps < jnp.uint32(24), jnp.uint32(0b01),
-                               jnp.uint32(0b00)))
+def make_node(i: int) -> Node:
+    return Node(node_id=i, workloads={
+        "docking": DockingWorkload(n_r=N_R, n_p=N_P, seed=SEED)})
 
 
-jash = Jash("docking-matcher", matcher,
-            JashMeta(arg_bits=10, res_bits=2, max_arg=N_R * N_P,
-                     data_checksum=checksum, data_acquisition="p2p",
-                     importance=0.9,
-                     description="peptide-receptor docking (paper §4)"),
-            example_args=(jnp.uint32(0),))
+net = Network.create(2, node_factory=make_node)
+bundle = net.nodes[0].workloads["docking"].bundle
+print(f"data bundle: {N_R} receptors x {N_P} peptides, "
+      f"sha256={bundle.checksum()[:16]}…")
 
-ra = RuntimeAuthority()
-rep = ra.submit(jash)
-print(f"RA: compiled={rep.compiled} est_runtime={rep.runtime_mean_s*1e3:.2f}ms "
-      f"data_sha256={checksum[:16]}…")
+res = net.mine(0, "docking")
+p = res.receipt.payload
+counts = {code: int((p.full.results[:, 0] == code).sum())
+          for code in (1, 0, 2)}
+print(f"pairs evaluated: {p.n_results}  binds: {counts[1]}  "
+      f"no-bind: {counts[0]}  non-terminated: {counts[2]}")
+print(f"merkle root: {p.merkle_root[:16]}…  accepted_by={res.accepted_by}")
+assert not res.rejected_by
 
-published, _ = ra.publish_next()
-full = run_full(published, block_reward=50.0)
-assert quorum_verify(published, full, fraction=0.05).ok
+# -- the consensus data binding, negatively: a peer whose bundle was
+#    tampered in p2p transit cannot re-derive the committed jash_id and
+#    rejects the (honest) block outright -------------------------------
+tampered = DockingBundle(
+    receptors=bundle.receptors ^ 1, peptides=bundle.peptides)
+bad_peer = Node(node_id=9, workloads={
+    "docking": DockingWorkload(bundle=tampered)})
+accepted = bad_peer.receive(res.receipt.record.to_block(), p, origin=0)
+print(f"peer with tampered bundle accepts the block: {accepted}")
+assert not accepted
 
-ledger = Ledger()
-book = CreditBook()
-root = merkle_root(full.merkle_leaves)
-ledger.append(jash_id=published.source_id(), mode="full", merkle=root,
-              winner=None, best_res=None, n_results=len(full.args))
-reward_full(book, full.miner_of.tolist(), 50.0)
+# -- and a forged evidence table under the honest header fails quorum --
+bad_results = p.full.results.copy()
+bad_results[0, 0] ^= 1
+forged = dataclasses.replace(
+    p, full=dataclasses.replace(p.full, results=bad_results))
+assert not net.nodes[1].workloads["docking"].verify(forged)
+print("forged result table under the honest header: rejected by quorum")
 
-res = full.results[:, 0]
-print(f"pairs evaluated: {len(res)}  binds: {int((res == 1).sum())}  "
-      f"no-bind: {int((res == 0).sum())}  non-terminated: {int((res == 2).sum())}")
-print(f"merkle root: {root[:16]}…  chain ok: {ledger.verify_chain()}")
-print(f"rewards: {book.total_issued} split over {len(book.balances)} miners")
+assert net.converged() and all(n.audit_chain() for n in net.nodes)
+books = {tuple(sorted(n.book.balances.items())) for n in net.nodes}
+assert len(books) == 1
+b0 = net.nodes[0].book
+print(f"rewards: {b0.total_issued:.1f} split over {len(b0.balances)} "
+      "miner lanes, identical on both nodes")

@@ -1,17 +1,23 @@
-"""Optimal-mode mining (§3.3 + §1 "next optimum in hyperdimensional SGD"):
-every block, each miner evaluates one perturbed parameter candidate; the
-lowest loss is "the result with most leading zeros" and wins the block.
+"""Optimal-mode ES mining through the chain API (§3.3 + §1 "next
+optimum in hyperdimensional SGD"): every block, each miner lane
+evaluates one perturbed parameter candidate; the lowest loss is "the
+result with most leading zeros" and wins the block.
 
-Also demonstrates the beyond-hillclimb ES update (core/es.es_update) that
-reuses ALL submitted results — the chain already paid for them.
+Rewired (PR 5) from a standalone ``PoUWTrainer`` script into a thin
+driver over the chain stack: two ``Node``\\ s each carry a
+``TrainingWorkload`` wrapping an identically-seeded optimal-mode
+trainer, mine alternately on a ``Network``, and the peer re-executes
+every ES block on receive (verification doubles as state sync — both
+nodes end at the same weights).  The beyond-paper ES-gradient update
+demo (reusing ALL submitted results) rides at the end.
 
   PYTHONPATH=src python examples/es_search.py
 """
 import dataclasses
 
 import jax
-import numpy as np
 
+from repro.chain import Network, Node, TrainingWorkload
 from repro.configs import get_config, reduced
 from repro.configs.base import InputShape
 from repro.core import es as es_mod
@@ -26,18 +32,36 @@ cfg = dataclasses.replace(reduced(get_config("qwen3-0.6b")),
                           n_layers=2, d_model=64, n_heads=2, n_kv_heads=1,
                           head_dim=32, d_ff=128, vocab_size=256)
 shape = InputShape("es", 32, 8, "train")
+N_BLOCKS = 8
 
-# --- optimal-mode chain: winner-takes-block hillclimb ---------------------
-tr = PoUWTrainer(cfg, shape, mode="optimal", n_miners=8, pop_size=32,
-                 sigma=0.02, seed=0, fixed_batch=True)
-recs = tr.run(40)
-print("optimal-mode chain: loss",
-      f"{recs[0].loss:.4f} -> {recs[-1].loss:.4f};",
-      f"chain ok: {tr.ledger.verify_chain()}")
-winners = [b.winner for b in tr.ledger.blocks]
-print("block winners:", winners)
-print("credit balances:", {k: round(v, 1)
-                           for k, v in sorted(tr.book.balances.items())})
+
+def trainer_factory():
+    # identical seed on every node: re-execution on receive must land on
+    # bit-identical weights (that IS the §3 req. 2 audit)
+    return PoUWTrainer(cfg, shape, mode="optimal", n_miners=8, pop_size=32,
+                       sigma=0.02, seed=0, fixed_batch=True)
+
+
+net = Network.create(2, node_factory=lambda i: Node(
+    node_id=i, workloads={"training": TrainingWorkload(trainer_factory)}))
+
+print("== optimal-mode ES chain (2 nodes, winner-takes-block) ==")
+for b in range(N_BLOCKS):
+    res = net.mine(b % 2, "training")
+    r = res.receipt
+    assert not res.rejected_by, res.rejected_by
+    print(f"  block {r.record.height}: miner=node{r.payload.origin} "
+          f"winner={r.payload.winner} loss={r.payload.loss:.4f}")
+
+losses = [p.loss for p in net.nodes[0].chain_payloads()]
+print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+      f"converged: {net.converged()}")
+assert net.converged()
+books = {tuple(sorted(n.book.balances.items())) for n in net.nodes}
+assert len(books) == 1, "credit books diverged"
+print("credit balances:",
+      {k: round(v, 1)
+       for k, v in sorted(net.nodes[0].book.balances.items())})
 
 # --- beyond-paper: ES-gradient update from the same submissions -----------
 pipe = SyntheticTokenPipeline(cfg, shape, seed=3)
@@ -52,7 +76,7 @@ es_block_j = jax.jit(lambda p, b, k: es_mod.es_block(
 es_update_j = jax.jit(lambda p, k, l: es_mod.es_update(
     p, k, l, sigma=0.02, lr=0.05))
 losses0 = float(eval_step(params, fixed))
-for step in range(40):
+for step in range(20):
     key, sub = jax.random.split(key)
     losses, best = es_block_j(params, fixed, sub)
     params = es_update_j(params, sub, losses)

@@ -1,122 +1,70 @@
-"""The paper's §1 application list, end-to-end:
+"""The paper's §1 application list as *chain workloads* (not scripts):
 
-1. **GAN inversion** — "finding the appropriate input to a Generator to
-   fit a Discriminator": optimal-mode search over a latent grid, with
-   RA-published refinement rounds (each block zooms the grid around the
-   previous winner).
-2. **Brute-force theorem proving** — "running Sledgehammer on randomly
-   generated theorems": the SAT analogue; a full-mode block evaluates a
-   random 3-CNF over all assignments, res = #unsatisfied clauses, so the
-   chain *proves* satisfiability (res 0 exists) or exhaustively refutes.
-3. **Difficulty retargeting** — the §5 "inconvenient limitation on the
-   runtime of each node", fixed with the §3.1 max_arg granularity knob.
+1. **Brute-force theorem proving** — ``SatWorkload``: each block
+   decides one random 3-CNF exhaustively.  A SAT block commits a
+   satisfiability certificate the peer re-checks in O(clauses) — no
+   re-mining — while an UNSAT refutation stays quorum-sampled.
+2. **GAN inversion** — ``GanInversionWorkload``: each block is one
+   optimal-mode refinement round over a latent grid; accepting a block
+   zooms the grid around the winner (stateful — verification doubles
+   as state sync, like training blocks).
+
+Both families mine on a 2-node ``Network``: every block is gossiped,
+re-verified bit-exactly by the peer, and rewarded identically on both
+credit books.
 
   PYTHONPATH=src python examples/np_problems.py
 """
-import time
+from repro.chain import Network, Node
+from repro.chain.workloads import GanInversionWorkload, SatWorkload
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.difficulty import DifficultyController, work_for_runtime
-from repro.core.executor import run_full, run_optimal
-from repro.core.jash import Jash, JashMeta
-
-# ---------------------------------------------------------------------------
-# 1. GAN inversion via optimal mode
-# ---------------------------------------------------------------------------
-print("== GAN inversion (optimal mode, §1) ==")
-D_Z, D_X = 8, 32
-key = jax.random.key(0)
-k1, k2, k3 = jax.random.split(key, 3)
-W1 = jax.random.normal(k1, (D_Z, 64)) / np.sqrt(D_Z)
-W2 = jax.random.normal(k2, (64, D_X)) / 8.0
-
-
-def generator(z):
-    return jnp.tanh(z @ W1) @ W2
-
-
-z_true = jax.random.normal(k3, (D_Z,))
-x_target = generator(z_true)
-
-GRID = 16                       # 16 candidates per latent dim per round
-center = jnp.zeros((D_Z,))
-scale = 3.0
-for block in range(4):          # each refinement round is one block
-    c, s = center, scale
-
-    def invert_jash(arg):
-        # arg indexes one perturbed latent: deterministic pseudo-grid
-        zs = jax.random.normal(jax.random.fold_in(jax.random.key(7), arg),
-                               (D_Z,))
-        z = c + s * zs / 3.0
-        err = jnp.sum(jnp.square(generator(z) - x_target))
-        return (err * 1e4).astype(jnp.uint32)      # lower res wins (§3.3)
-
-    jash = Jash(f"gan-invert-r{block}", invert_jash,
-                JashMeta(arg_bits=10, res_bits=32, importance=1.0),
-                example_args=(jnp.uint32(0),))
-    opt = run_optimal(jash)
-    zs = jax.random.normal(jax.random.fold_in(jax.random.key(7),
-                                              jnp.uint32(opt.best_arg)),
-                           (D_Z,))
-    center = c + s * zs / 3.0
-    scale = s * 0.5
-    err = float(jnp.sum(jnp.square(generator(center) - x_target)))
-    print(f"  block {block}: winner arg={opt.best_arg:4d} "
-          f"err={err:.4f} scale={s:.2f}")
-assert err < 1.0, err
-print(f"  inverted: ||G(z)-x*||^2 = {err:.4f} after 4 blocks")
-
-# ---------------------------------------------------------------------------
-# 2. Brute-force theorem proving (SAT) via full mode
-# ---------------------------------------------------------------------------
-print("== brute-force SAT (full mode, §1 'theorem proving') ==")
 N_VARS, N_CLAUSES = 12, 48
-rng = np.random.RandomState(1)
-cl_vars = jnp.asarray(rng.randint(0, N_VARS, (N_CLAUSES, 3)))
-cl_neg = jnp.asarray(rng.randint(0, 2, (N_CLAUSES, 3)).astype(np.bool_))
 
 
-def sat_jash(arg):
-    bits = (arg[None] >> jnp.arange(N_VARS, dtype=jnp.uint32)) & 1
-    lits = bits[cl_vars].astype(jnp.bool_) ^ cl_neg
-    unsat = jnp.sum(~jnp.any(lits, axis=1))
-    return unsat.astype(jnp.uint32)
+def make_node(i: int) -> Node:
+    # fresh workload instances per node (same seeds, so both nodes hold
+    # the same formula family and inverse problem)
+    return Node(node_id=i, classic_arg_bits=6, workloads={
+        "sat": SatWorkload(n_vars=N_VARS, n_clauses=N_CLAUSES, seed=1),
+        "gan": GanInversionWorkload(seed=0, grid_bits=10),
+    })
 
 
-jash = Jash("sat-3cnf", sat_jash,
-            JashMeta(arg_bits=N_VARS, res_bits=32, importance=0.7,
-                     description="random 3-CNF exhaustive check"),
-            example_args=(jnp.uint32(0),))
-t0 = time.time()
-full = run_full(jash)
-n_sat = int((full.results[:, 0] == 0).sum())
-print(f"  2^{N_VARS} = {len(full.args)} assignments in "
-      f"{time.time() - t0:.2f}s: {n_sat} satisfying "
-      f"({'SATISFIABLE' if n_sat else 'UNSAT — exhaustively refuted'})")
+net = Network.create(2, node_factory=make_node)
 
-# ---------------------------------------------------------------------------
-# 3. Difficulty retargeting (§3.1 / §5)
-# ---------------------------------------------------------------------------
-print("== difficulty retargeting (§3.1 granularity knob) ==")
-ctrl = DifficultyController(target_block_s=0.25, min_work=256)
-work = work_for_runtime(runtime_mean_s=1e-4, target_block_s=0.25,
-                        n_miners=1)
-print(f"  initial work from RA runtime estimate: {work} args/block")
-for blk in range(6):
-    jash_b = Jash("sat-retarget", sat_jash,
-                  JashMeta(arg_bits=N_VARS, res_bits=32,
-                           max_arg=min(work, 1 << N_VARS)),
-                  example_args=(jnp.uint32(0),))
-    t0 = time.time()
-    run_full(jash_b)
-    dt = time.time() - t0
-    ctrl.observe(dt)
-    new_work = ctrl.next_work(work)
-    print(f"  block {blk}: work={work:6d} time={dt * 1e3:7.1f}ms "
-          f"ema={ctrl.ema_block_s * 1e3:7.1f}ms -> next={new_work}")
-    work = new_work
-print("  block time converges toward the 250 ms target.")
+print(f"== brute-force SAT (full mode, §1 'theorem proving') ==")
+for b in range(3):
+    res = net.mine(b % 2, "sat")
+    p = res.receipt.payload
+    verdict = (f"SAT, witness={int.from_bytes(p.certificate, 'little')} "
+               f"(peer checked {N_CLAUSES} clauses, no re-mine)"
+               if p.certificate is not None
+               else "UNSAT — exhaustively refuted (peer quorum-sampled)")
+    print(f"  block {res.receipt.record.height}: 2^{N_VARS} assignments "
+          f"-> {verdict}; accepted_by={res.accepted_by}")
+    assert not res.rejected_by
+
+print("== GAN inversion (optimal mode, §1) ==")
+for b in range(4):                      # each refinement round is a block
+    res = net.mine(b % 2, "gan")
+    gan = net.nodes[0].workloads["gan"]
+    print(f"  round {res.receipt.payload.train_height}: winner "
+          f"arg={res.receipt.payload.best_arg:4d} "
+          f"err={gan.inversion_error():.4f}")
+    assert not res.rejected_by
+
+err = net.nodes[0].workloads["gan"].inversion_error()
+assert err < 1.0, err
+# both nodes replayed every round -> bit-identical search state
+assert (net.nodes[0].workloads["gan"].state_digest()
+        == net.nodes[1].workloads["gan"].state_digest())
+print(f"  inverted: ||G(z)-x*||^2 = {err:.4f} after 4 blocks "
+      "(both nodes hold the same grid state)")
+
+assert net.converged()
+assert all(n.audit_chain() for n in net.nodes)
+books = {tuple(sorted(n.book.balances.items())) for n in net.nodes}
+assert len(books) == 1, "credit books diverged"
+s = net.nodes[0].state()
+print(f"converged: height {s.height}, credits {s.total_issued:.1f} "
+      f"over {len(s.balances)} miners, books bit-identical")

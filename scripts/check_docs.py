@@ -1,15 +1,22 @@
 #!/usr/bin/env python
 """Doc-consistency CI check (wired into the examples-smoke job).
 
-Two invariants keep the docs honest:
+Three invariants keep the docs honest:
 
 1. **API coverage** — every name in the ``__all__`` of ``repro``,
-   ``repro.chain`` and ``repro.core`` has a ``### `module.name` ``
-   heading in ``docs/api.md`` (a new export without a doc entry fails
-   CI; a doc entry for a removed export fails too).
-2. **README executes** — every ```` ```python ```` block in README.md
-   runs, in order, in one shared namespace (a doctest-style session:
-   later blocks may use names defined by earlier ones).
+   ``repro.chain``, ``repro.chain.workloads`` and ``repro.core`` has a
+   ``### `module.name` `` heading in ``docs/api.md`` (a new export
+   without a doc entry fails CI; a doc entry for a removed export
+   fails too).
+2. **Docs execute** — every ```` ```python ```` block in README.md and
+   ``docs/workloads.md`` runs, in order, in one shared namespace per
+   file (a doctest-style session: later blocks may use names defined
+   by earlier ones).  ``docs/api.md`` blocks are executed by the
+   tier-1 suite (``tests/test_docs.py``) — they are numerous and
+   belong with the fast feedback loop.
+3. **No orphan docs** — every ``docs/*.md`` file must be claimed by an
+   entry in ``DOC_CHECKS`` below; a doc nothing executes or
+   cross-checks is a doc that silently rots.
 
 Run it the way CI does::
 
@@ -25,7 +32,16 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
-MODULES = ("repro", "repro.chain", "repro.core")
+MODULES = ("repro", "repro.chain", "repro.chain.workloads", "repro.core")
+
+# every file under docs/ must appear here, mapped to how it is kept
+# honest: "blocks" (its ```python blocks execute in this script),
+# "tier1" (executed/cross-checked by tests/test_docs.py), or a
+# free-form justification string for genuinely static docs.
+DOC_CHECKS = {
+    "api.md": "tier1",      # coverage here + snippets in tests/test_docs.py
+    "workloads.md": "blocks",
+}
 
 
 def check_api_coverage(api_md: Path = REPO / "docs" / "api.md"
@@ -54,22 +70,45 @@ def check_api_coverage(api_md: Path = REPO / "docs" / "api.md"
     return problems
 
 
-def run_readme_blocks(readme: Path = REPO / "README.md") -> list:
-    """Execute every ```python block of the README in one shared
+def run_md_blocks(path: Path) -> list:
+    """Execute every ```python block of ``path`` in one shared
     namespace, in order.  Returns a list of failure descriptions."""
-    text = readme.read_text()
+    text = path.read_text()
     blocks = re.findall(r"```python\n(.*?)```", text, re.S)
     ns: dict = {}
     problems = []
     for i, block in enumerate(blocks):
         try:
-            exec(compile(block, f"<README block {i}>", "exec"), ns)
+            exec(compile(block, f"<{path.name} block {i}>", "exec"), ns)
         except Exception as e:                     # noqa: BLE001
             problems.append(
-                f"README python block {i} failed: {type(e).__name__}: {e}"
-                f"\n---\n{block}---")
+                f"{path.name} python block {i} failed: "
+                f"{type(e).__name__}: {e}\n---\n{block}---")
     if not blocks:
-        problems.append("README.md contains no ```python blocks")
+        problems.append(f"{path.name} contains no ```python blocks")
+    return problems
+
+
+def run_readme_blocks(readme: Path = REPO / "README.md") -> list:
+    """README's executable session (kept as its own entry point — the
+    tier-1 suite calls it too)."""
+    return run_md_blocks(readme)
+
+
+def check_docs_coverage(docs_dir: Path = REPO / "docs") -> list:
+    """Every docs/*.md must be claimed by DOC_CHECKS (and vice versa) —
+    a doc no check executes or cross-references rots silently."""
+    problems = []
+    on_disk = {p.name for p in docs_dir.glob("*.md")}
+    for name in sorted(on_disk - set(DOC_CHECKS)):
+        problems.append(
+            f"docs/{name} is not covered by any doc check — add it to "
+            "DOC_CHECKS in scripts/check_docs.py (execute its blocks, "
+            "or justify why it is static)")
+    for name in sorted(set(DOC_CHECKS) - on_disk):
+        problems.append(
+            f"DOC_CHECKS claims docs/{name} but the file does not exist "
+            "(stale entry in scripts/check_docs.py?)")
     return problems
 
 
@@ -83,6 +122,18 @@ def main() -> int:
     problems += readme_problems
     print(f"README blocks: "
           f"{'OK' if not readme_problems else 'FAILED'}")
+    for name, how in DOC_CHECKS.items():
+        if how != "blocks":
+            continue
+        doc_problems = run_md_blocks(REPO / "docs" / name)
+        problems += doc_problems
+        print(f"docs/{name} blocks: "
+              f"{'OK' if not doc_problems else 'FAILED'}")
+    coverage_problems = check_docs_coverage()
+    problems += coverage_problems
+    print(f"docs coverage: "
+          f"{'OK' if not coverage_problems else 'FAILED'} "
+          f"({len(DOC_CHECKS)} docs claimed)")
     for p in problems:
         print(f"  - {p}", file=sys.stderr)
     return 1 if problems else 0

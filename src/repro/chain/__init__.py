@@ -18,6 +18,11 @@ network simulator (latency, drops, partitions, churn, adversaries) on
 top of Node/Network; its core surface (``Sim``/``SimConfig``/
 ``SimReport``/``LinkModel``) is re-exported here, the adversary classes
 and canonical scenarios live in the module.
+
+``repro.chain.workloads`` is the application workload suite — SAT
+(certificate-asymmetric), GAN inversion (stateful grid refinement),
+and docking (consensus-bound data bundle) as first-class ``Workload``
+families; see ``docs/workloads.md`` for the authoring guide.
 """
 from repro.chain.network import BroadcastResult, Network
 from repro.chain.node import (BlockReceipt, BlockRecord, Node, NodeState,
@@ -26,7 +31,7 @@ from repro.chain.sim import LinkModel, Sim, SimConfig, SimReport
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, TrainingWorkload, Workload,
-    verify_chain_batched,
+    certificate_digest, verify_chain_batched,
 )
 
 __all__ = [
@@ -49,5 +54,6 @@ __all__ = [
     "TrainingWorkload",
     "VerifyCache",
     "Workload",
+    "certificate_digest",
     "verify_chain_batched",
 ]

@@ -245,7 +245,9 @@ class Node:
             "classic": ClassicSha256Workload(arg_bits=classic_arg_bits),
         }
         if workloads:
-            self.workloads.update(workloads)
+            for name, wl in workloads.items():
+                self._check_registration(name, wl)
+                self.workloads[name] = wl
         if target_block_s is not None and work is None:
             raise ValueError(
                 "target_block_s without an initial work target is a no-op "
@@ -262,6 +264,43 @@ class Node:
         self.verify_cache: Optional[VerifyCache] = None
         self._hash_index: set = set()      # block hashes of self.ledger
         self._in_rebuild = False           # fork-choice commit loop
+
+    # -- workload registry --------------------------------------------
+    @staticmethod
+    def _check_registration(name: str, wl: Workload) -> None:
+        """A registered workload's dict key must equal its ``name``
+        attribute — payloads circulate under ``wl.name``, so a mismatch
+        would make every block this node mines under the key
+        unreceivable (``workloads[payload.workload]`` missing on every
+        peer, including this node's own self-verify)."""
+        wl_name = getattr(wl, "name", None)
+        if wl_name != name:
+            raise ValueError(
+                f"workload registered under key {name!r} reports "
+                f"name={wl_name!r} — payloads circulate under the "
+                "workload's own .name, so the registry key must match")
+
+    def register_workload(self, wl: Workload) -> None:
+        """Register an additional workload family after construction
+        (e.g. one of ``repro.chain.workloads``) under its own ``name``.
+        Overwriting an existing family is refused — peers re-verify
+        committed payloads against the registry, so silently swapping a
+        family's semantics mid-chain would strand every block it
+        already mined.  Registering a *stateful* family on a node with
+        committed blocks is fine: ringed fork-choice checkpoints taken
+        before registration simply restore it to pristine, which is
+        exactly its state at those heights."""
+        name = getattr(wl, "name", None)
+        if not isinstance(name, str) or not name:
+            raise ValueError(
+                "workload has no usable .name attribute — the Workload "
+                "protocol requires one (it is the wire name payloads "
+                "circulate under)")
+        if name in self.workloads:
+            raise ValueError(
+                f"workload {wl.name!r} already registered — build the "
+                "node with workloads={...} to replace a default family")
+        self.workloads[wl.name] = wl
 
     # -- researcher side ----------------------------------------------
     def submit(self, jash: Jash, veto: bool = False) -> ReviewReport:

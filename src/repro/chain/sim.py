@@ -60,6 +60,7 @@ __all__ = [
     "StaleSpammer",
     "WithholdingMiner",
     "adversarial_scenario",
+    "heterogeneous_scenario",
     "partitioned_scenario",
     "throughput_scenario",
 ]
@@ -761,12 +762,49 @@ def adversarial_scenario(n_honest: int = 3, seed: int = 0, *,
     return sim
 
 
+def heterogeneous_scenario(n_honest: int = 3, seed: int = 0, *,
+                           suite_seed: int = 7,
+                           classic_arg_bits: int = 6) -> Sim:
+    """The workload-catalogue scenario: every node carries the full
+    application suite (``repro.chain.workloads.default_suite`` — SAT,
+    GAN inversion, docking — fresh instances per node, same
+    ``suite_seed`` so all nodes agree on the formula family, inverse
+    problem, and data bundle), and the mining schedule interleaves all
+    families plus the classic fallback across nodes.  A
+    ``PayloadCorrupter`` node mines too — its blocks are rejected by
+    workload re-verification and orphaned, and its own chain falls
+    behind until fork choice reorgs it onto the honest one, rolling its
+    *stateful* GAN grid back through the same snapshot machinery
+    training blocks use.  Converges with ``credit_divergence == 0``."""
+    from repro.chain.workloads import default_suite
+
+    small = dict(sat={"n_vars": 10, "n_clauses": 40},
+                 gan={"grid_bits": 8},
+                 docking={"n_r": 16, "n_p": 16})
+    cid = n_honest
+    nodes = [Node(node_id=i, classic_arg_bits=classic_arg_bits,
+                  workloads=default_suite(seed=suite_seed, **small))
+             for i in range(n_honest + 1)]
+    sim = Sim(nodes, SimConfig(seed=seed),
+              adversaries={cid: PayloadCorrupter()})
+    schedule = ("sat", "gan", "docking", "classic", "sat", "gan",
+                "docking", "sat")
+    t = 0.5
+    for b, family in enumerate(schedule):
+        sim.mine_at(t, b % n_honest, family)
+        t += 1.0                     # spacing > max latency: serial chain
+    sim.mine_at(2.25, cid, "sat")    # corrupted broadcast — orphaned
+    sim.mine_at(5.25, cid, "gan")    # stateful corrupted block — ditto
+    return sim
+
+
 def _main() -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario",
-                    choices=("partition", "adversarial", "throughput"),
+                    choices=("partition", "adversarial", "throughput",
+                             "heterogeneous"),
                     default="partition")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--nodes", type=int, default=4,
@@ -780,6 +818,9 @@ def _main() -> int:
     elif args.scenario == "throughput":
         sim = throughput_scenario(n_nodes=args.nodes,
                                   n_blocks=args.blocks, seed=args.seed)
+    elif args.scenario == "heterogeneous":
+        sim = heterogeneous_scenario(n_honest=max(args.nodes - 1, 2),
+                                     seed=args.seed)
     else:
         sim = adversarial_scenario(n_honest=max(args.nodes - 2, 1),
                                    seed=args.seed)

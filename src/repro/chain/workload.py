@@ -86,8 +86,21 @@ class BlockPayload:
     ledger header signs; the evidence fields carry enough for a peer to
     re-verify bit-exactly (in-process today, serialized on the wire
     later).
-    """
-    workload: str                      # "full"|"optimal"|"training"|"classic"
+
+    ``certificate`` is the verify-cheap evidence channel: a workload
+    whose block carries a succinct proof (a SAT witness, an inclusion
+    path, …) puts the raw certificate bytes here and commits
+    ``certificate_digest(certificate)`` as the block's
+    ``state_digest`` — the header then signs the certificate, so a
+    tampered certificate under an honest header fails the digest
+    cross-check before the workload even looks at it.  Stateful
+    workloads instead use ``state_digest`` for their chained state
+    commitment; the two uses are exclusive by construction (a workload
+    is one or the other).  ``train_height`` doubles as the generic
+    *stateful sequence index* — the position of this block in the
+    workload's own state chain (train step for training, refinement
+    round for GAN inversion)."""
+    workload: str                      # "full"|"optimal"|"training"|...
     jash_id: str
     merkle_root: str
     n_results: int
@@ -103,6 +116,20 @@ class BlockPayload:
     loss: Optional[float] = None
     train_height: Optional[int] = None
     n_miners: int = 1
+    certificate: Optional[bytes] = None
+
+
+def certificate_digest(cert: Optional[bytes]) -> str:
+    """Consensus binding for verify-cheap certificates: the hex digest a
+    certificate-carrying workload commits as the block's
+    ``state_digest``.  ``None`` (no certificate) maps to the empty
+    string — the same value certificate-free blocks commit — so "this
+    block claims no certificate" is itself header-signed: a relay
+    cannot strip a certificate without breaking the digest
+    cross-check, and cannot graft one on either."""
+    if cert is None:
+        return ""
+    return hashlib.sha256(b"certificate:" + cert).hexdigest()
 
 
 RewardEntries = Tuple[Tuple[int, float], ...]
@@ -196,6 +223,69 @@ def verify_chain_batched(workloads: Dict[str, "Workload"],
     return True
 
 
+def _batched_stateless_verify(payloads: Sequence[BlockPayload],
+                              classify, *, fraction: float
+                              ) -> List[bool]:
+    """The shared engine behind every stateless ``verify_batch``:
+    classify each payload, dedup byte-identical evidence, then batch
+    the two O(N)-per-block costs — one independent root recomputation
+    (``recompute_roots_batched``, hashlib spot-check + full fallback
+    inside) and one stacked quorum dispatch per distinct jash fn
+    (``quorum_verify_batched``).  Keeping the dup-propagation order,
+    live-list filtering, and root/quorum sequencing in ONE place is
+    the point: the PR-4 hardening semantics must not drift apart
+    across workload families.
+
+    ``classify(payload)`` returns one of:
+
+    * ``False``/``None`` — rejected by prechecks;
+    * ``True`` — accepted without batching (e.g. an O(clauses)
+      certificate check already ran);
+    * ``(jash, dedup_key)`` — re-verify via batched roots + quorum,
+      replaying with ``jash`` (the *locally trusted* jash: either the
+      evidence jash after a ``source_id`` cross-check, or one the
+      workload rebuilt itself).  ``dedup_key`` collapses byte-identical
+      payloads to one representative; it must cover the evidence bytes
+      and pin the jash function — by containing the fn object, or
+      because ``classify`` already bound the payload to a single local
+      fn.  ``None`` disables dedup for this payload.
+
+    Verdicts are bit-identical to the scalar ``verify`` each caller
+    defines (the parity suites pin this per family)."""
+    oks: List[Optional[bool]] = [None] * len(payloads)
+    jashes: Dict[int, Jash] = {}
+    rep_of: Dict[object, int] = {}     # dedup key -> first index
+    dup_of: Dict[int, int] = {}        # duplicate index -> rep index
+    live: List[int] = []
+    for i, payload in enumerate(payloads):
+        verdict = classify(payload)
+        if verdict is None or isinstance(verdict, bool):
+            oks[i] = bool(verdict)
+            continue
+        jash, key = verdict
+        if key is not None:
+            rep = rep_of.setdefault(key, i)
+            if rep != i:
+                dup_of[i] = rep
+                continue
+        jashes[i] = jash
+        oks[i] = True
+        live.append(i)
+    roots = recompute_roots_batched([payloads[i].full for i in live])
+    for i, root in zip(live, roots):
+        if root != payloads[i].merkle_root:
+            oks[i] = False
+    live = [i for i in live if oks[i]]
+    reports = quorum_verify_batched(
+        [(jashes[i], payloads[i].full) for i in live], fraction=fraction)
+    for i, report in zip(live, reports):
+        if not report.ok:
+            oks[i] = False
+    for i, rep in dup_of.items():
+        oks[i] = oks[rep]
+    return oks
+
+
 # ---------------------------------------------------------------------------
 # full mode
 # ---------------------------------------------------------------------------
@@ -278,22 +368,13 @@ class JashFullWorkload:
         — and deterministic mining *produces* byte-identical payloads
         whenever the same publication is mined repeatedly (the
         full-mode analogue of the classic/optimal replay memo).  Each
-        distinct payload then pays the two O(N) costs batched across
-        the segment: the independent root recompute runs on the
-        words-major device reducer (one fused leaf-digest dispatch +
-        one forest reduction, with a hashlib spot-check that falls
-        back to the reference on mismatch), and quorum re-execution
-        stacks every block's sampled args into one dispatch per
-        distinct jash function."""
-        oks: List[Optional[bool]] = [None] * len(payloads)
-        rep_of: Dict[tuple, int] = {}      # content key -> first index
-        dup_of: Dict[int, int] = {}        # duplicate index -> rep index
-        live = []
-        for i, p in enumerate(payloads):
+        distinct payload then pays the two O(N) costs batched by the
+        shared ``_batched_stateless_verify`` engine."""
+
+        def classify(p: BlockPayload):
             if (p.full is None or p.jash is None
                     or p.jash.source_id() != p.jash_id):
-                oks[i] = False
-                continue
+                return False
             # the fn object is part of the key: source_id() hashes only
             # name+meta, so a payload pairing honest evidence with a
             # different function must run its own quorum re-execution,
@@ -301,26 +382,10 @@ class JashFullWorkload:
             key = (p.jash.fn, p.jash_id, p.merkle_root,
                    hashlib.sha256(p.full.packed_words().tobytes())
                    .digest())
-            rep = rep_of.setdefault(key, i)
-            if rep != i:
-                dup_of[i] = rep
-            else:
-                oks[i] = True
-                live.append(i)
-        roots = recompute_roots_batched([payloads[i].full for i in live])
-        for i, root in zip(live, roots):
-            if root != payloads[i].merkle_root:
-                oks[i] = False
-        live = [i for i in live if oks[i]]
-        reports = quorum_verify_batched(
-            [(payloads[i].jash, payloads[i].full) for i in live],
-            fraction=self.verify_fraction)
-        for i, report in zip(live, reports):
-            if not report.ok:
-                oks[i] = False
-        for i, rep in dup_of.items():
-            oks[i] = oks[rep]
-        return oks
+            return p.jash, key
+
+        return _batched_stateless_verify(payloads, classify,
+                                         fraction=self.verify_fraction)
 
     def reward(self, book: CreditBook, payload: BlockPayload
                ) -> RewardEntries:

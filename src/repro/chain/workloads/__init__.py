@@ -1,0 +1,67 @@
+"""``repro.chain.workloads`` — the application workload suite.
+
+The paper's §1/§4 application list, turned into first-class chain
+payloads riding the full Node/Network/Sim stack (gossip, bit-exact
+re-verification on receive, batched segment verification, fork-choice
+rollback, rewards):
+
+* ``SatWorkload`` — §1 "brute-force theorem proving": exhaustive 3-CNF
+  decision, with a committed satisfiability certificate that verifiers
+  re-check in O(clauses) instead of re-mining (the first asymmetric
+  mine-hard/verify-cheap workload; exhaustive refutations stay
+  quorum-sampled).
+* ``GanInversionWorkload`` — §1 "finding the appropriate input to a
+  Generator": stateful optimal-mode latent search; each accepted block
+  zooms the grid around the previous winner, exercising the same
+  snapshot/rollback machinery as the training workload.
+* ``DockingWorkload`` — the §4 walkthrough, with the data-bundle
+  checksum bound into consensus: a peer holding tampered tables
+  rejects honest blocks and vice versa.
+
+``default_suite`` builds one fresh instance of each family (every node
+needs its own objects — sharing an instance across nodes voids
+independent re-verification, same rule as ``Network.create``);
+``WORKLOAD_FAMILIES`` maps family names to classes for registry-style
+construction.  See ``docs/workloads.md`` for the authoring guide and
+DESIGN.md §11 for the architecture + trust argument.
+"""
+from typing import Dict
+
+from repro.chain.workload import Workload
+from repro.chain.workloads.docking import DockingBundle, DockingWorkload
+from repro.chain.workloads.gan import GanInversionWorkload
+from repro.chain.workloads.sat import Cnf3, SatWorkload, random_cnf3
+
+__all__ = [
+    "Cnf3",
+    "DockingBundle",
+    "DockingWorkload",
+    "GanInversionWorkload",
+    "SatWorkload",
+    "WORKLOAD_FAMILIES",
+    "default_suite",
+    "random_cnf3",
+]
+
+# family name -> class; the registry sim scenarios and examples build
+# node workload dicts from.  Keys equal each class's ``name`` attribute
+# (``Node`` validates that invariant for every registered workload).
+WORKLOAD_FAMILIES = {
+    SatWorkload.name: SatWorkload,
+    GanInversionWorkload.name: GanInversionWorkload,
+    DockingWorkload.name: DockingWorkload,
+}
+
+
+def default_suite(seed: int = 0, **overrides) -> Dict[str, Workload]:
+    """Fresh instances of every family, keyed by family name — pass the
+    result as ``Node(workloads=...)``.  Call once **per node**: each
+    node must own its instances.  ``overrides`` maps a family name to a
+    kwargs dict for that family's constructor, e.g.
+    ``default_suite(sat={"n_vars": 10})``."""
+    suite: Dict[str, Workload] = {}
+    for name, cls in WORKLOAD_FAMILIES.items():
+        kwargs = dict(overrides.get(name, ()))
+        kwargs.setdefault("seed", seed)
+        suite[name] = cls(**kwargs)
+    return suite

@@ -1,0 +1,272 @@
+"""``GanInversionWorkload`` — §1 "finding the appropriate input to a
+Generator": stateful optimal-mode latent search as a chain payload.
+
+The inverse problem: given a fixed generator ``G`` and a target ``x*``,
+find ``z`` minimizing ``||G(z) - x*||²``.  Each block is one refinement
+round — an optimal-mode argmin over a pseudo-random latent grid
+centered on the previous winner — and accepting a block **zooms** the
+grid (center moves to the winning latent, scale halves), so the search
+state is chained exactly like the training workload's model state:
+
+* the post-zoom ``(round, center, scale)`` digest is the committed
+  ``state_digest``; a peer re-verifies by replaying the round on its
+  *own* state and comparing digests bit-exactly (§3 req. 2) — the
+  audit doubles as state sync;
+* verification is therefore **stateful**: it advances local state on
+  success, restores the pre-verify snapshot on mismatch, and exposes
+  the ``snapshot``/``restore``/``reset`` rollback trio so fork choice
+  can unwind discarded rounds (a reorg that drops round *r* rewinds
+  the grid to round *r*'s starting state, or the node's future blocks
+  would be unverifiable by peers);
+* ``BlockPayload.train_height`` carries the round index — the generic
+  stateful sequence position, as for training blocks.
+
+The generator weights and target are derived deterministically from
+``seed``, so every node constructing ``GanInversionWorkload(seed=s)``
+holds the same inverse problem without exchanging data.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chain.workload import (BlockContext, BlockPayload, MINER_LANE,
+                                  PreparedWork, RewardEntries,
+                                  _apply_rewards, global_miner)
+from repro.core.executor import run_optimal
+from repro.core.jash import Jash, JashMeta
+from repro.core.ledger import merkle_root
+from repro.core.rewards import CreditBook, reward_optimal
+
+
+class GanInversionWorkload:
+    """§1 GAN inversion: one grid-refinement round per block.
+
+    Stateful (``snapshot``/``restore``/``reset``); winner-takes-block
+    rewards like optimal mode.  ``verify_batch`` exists for protocol
+    completeness but is a chain-order loop — stateful verification can
+    be neither reordered nor deduplicated, and ``verify_chain_batched``
+    replays stateful workloads per block by design.
+    """
+
+    name = "gan"
+
+    def __init__(self, *, seed: int = 0, d_z: int = 8, d_x: int = 32,
+                 grid_bits: int = 10, zoom: float = 0.5,
+                 init_scale: float = 3.0) -> None:
+        if not 0.0 < zoom < 1.0:
+            raise ValueError(f"zoom must be in (0, 1), got {zoom}")
+        self.seed = seed
+        self.d_z, self.d_x = d_z, d_x
+        self.grid_bits = grid_bits
+        self.zoom = zoom
+        self.init_scale = init_scale
+        k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+        self._w1 = jax.random.normal(k1, (d_z, 64)) / np.sqrt(d_z)
+        self._w2 = jax.random.normal(k2, (64, d_x)) / 8.0
+        self._z_true = jax.random.normal(k3, (d_z,))
+        self._x_target = self._generate(self._z_true)
+        # -- chained search state -------------------------------------
+        self._round = 0
+        self._center = np.zeros(d_z, np.float32)
+        self._scale = float(init_scale)
+        # committed fields of every round this instance applied, round
+        # order: (jash_id, best_arg, best_res, merkle_root, state_digest)
+        self._history: List[Tuple[str, int, str, str, str]] = []
+        self._jash_cache: Optional[Tuple[int, Jash]] = None
+
+    # -- the fixed inverse problem ------------------------------------
+    def _generate(self, z: jax.Array) -> jax.Array:
+        return jnp.tanh(z @ self._w1) @ self._w2
+
+    def _latent(self, arg) -> jax.Array:
+        """The grid is pseudo-random, not lattice: arg -> a deterministic
+        Gaussian perturbation of the current center (the §1 'input to a
+        Generator' candidates)."""
+        zs = jax.random.normal(
+            jax.random.fold_in(jax.random.key(self.seed), arg), (self.d_z,))
+        return jnp.asarray(self._center) + self._scale * zs / 3.0
+
+    def inversion_error(self) -> float:
+        """``||G(center) - x*||²`` of the current search state — the
+        quantity the chain is collectively minimizing (monotone
+        non-increasing is *not* guaranteed per round, but the zoom
+        schedule contracts the grid around ever-better winners)."""
+        c = jnp.asarray(self._center)
+        return float(jnp.sum(jnp.square(self._generate(c) - self._x_target)))
+
+    # -- chained state --------------------------------------------------
+    @property
+    def round(self) -> int:
+        return self._round
+
+    def state_digest(self) -> str:
+        """Bit-exact commitment of ``(round, center, scale)`` — what the
+        block header signs and peers compare after replaying a round."""
+        h = hashlib.sha256()
+        h.update(np.int64(self._round).tobytes())
+        h.update(np.ascontiguousarray(self._center, np.float32).tobytes())
+        h.update(np.float64(self._scale).tobytes())
+        return h.hexdigest()
+
+    def snapshot(self):
+        return (self._round, self._center.copy(), self._scale,
+                list(self._history))
+
+    def restore(self, snap) -> None:
+        # copies, not the snapshot's own containers — ringed fork-choice
+        # checkpoints outlive a restore (same aliasing rule as the
+        # training workload)
+        self._round = snap[0]
+        self._center = snap[1].copy()
+        self._scale = snap[2]
+        self._history = list(snap[3])
+        self._jash_cache = None
+
+    def reset(self) -> None:
+        """Back to round 0 — fork choice calls this when an adopted
+        chain must be replayed from genesis."""
+        self._round = 0
+        self._center = np.zeros(self.d_z, np.float32)
+        self._scale = float(self.init_scale)
+        self._history = []
+        self._jash_cache = None
+
+    def is_pristine(self) -> bool:
+        return self._round == 0 and not self._history
+
+    def _round_jash(self) -> Jash:
+        """The current round's jash: argmin of the inversion error over
+        the latent grid defined by ``(center, scale)``.  The state
+        digest is checksummed into the meta, so ``jash_id`` commits the
+        exact grid this round searched.  Cached per round — stable fn
+        identity keeps the optimal executor's compile cache warm across
+        a round's mine + N verifies."""
+        if self._jash_cache is not None and \
+                self._jash_cache[0] == self._round:
+            return self._jash_cache[1]
+        center = jnp.asarray(self._center)
+        scale = self._scale
+        seed, d_z = self.seed, self.d_z
+        w1, w2, x_target = self._w1, self._w2, self._x_target
+
+        def fn(arg):
+            zs = jax.random.normal(
+                jax.random.fold_in(jax.random.key(seed), arg), (d_z,))
+            z = center + scale * zs / 3.0
+            err = jnp.sum(jnp.square(jnp.tanh(z @ w1) @ w2 - x_target))
+            return (err * 1e4).astype(jnp.uint32)   # lower res wins (§3.3)
+
+        jash = Jash(f"gan-inv-{self.seed}-r{self._round}", fn,
+                    JashMeta(arg_bits=self.grid_bits, res_bits=32,
+                             data_checksum=self.state_digest(),
+                             description="GAN-inversion latent grid "
+                                         "refinement (paper §1)"),
+                    example_args=(jnp.uint32(0),))
+        self._jash_cache = (self._round, jash)
+        return jash
+
+    def _zoom(self, best_arg: int) -> None:
+        """Advance the search state: re-center on the winning latent and
+        contract the grid.  Pure function of (state, best_arg), so every
+        node replaying the same round lands on a bit-identical state."""
+        z = self._latent(jnp.uint32(best_arg))
+        self._center = np.asarray(z, np.float32)
+        self._scale *= self.zoom
+        self._round += 1
+
+    # -- Workload protocol --------------------------------------------
+    def prepare(self, ctx: BlockContext) -> PreparedWork:
+        """Self-publishing: the round's jash is derived from local
+        state (``ctx.work`` sizing is ignored — the grid *is* the
+        arg space)."""
+        return PreparedWork(ctx, self._round_jash())
+
+    def mine(self, work: PreparedWork) -> BlockPayload:
+        """Argmin over the grid, then zoom.  Mining mutates search
+        state, exactly like a training block advances the trainer — if
+        the block later loses fork choice, ``consider_chain`` unwinds
+        it via snapshot/``reset`` + replay."""
+        ctx = work.ctx
+        r = self._round
+        jash = work.jash
+        opt = run_optimal(jash, mesh=ctx.mesh, lanes=ctx.lanes)
+        leaf = (np.uint32(opt.best_arg).tobytes()
+                + opt.best_res.astype("<u4").tobytes())
+        root = merkle_root([leaf])
+        self._zoom(opt.best_arg)
+        digest = self.state_digest()
+        best_res = opt.best_res.tobytes().hex()
+        self._history.append((jash.source_id(), opt.best_arg, best_res,
+                              root, digest))
+        return BlockPayload(
+            workload=self.name, jash_id=jash.source_id(),
+            merkle_root=root, n_results=opt.n_evaluated,
+            winner=global_miner(ctx.node_id, opt.winner),
+            best_res=best_res, state_digest=digest,
+            origin=ctx.node_id, block_reward=ctx.block_reward,
+            jash=jash, best_arg=opt.best_arg, train_height=r)
+
+    def verify(self, payload: BlockPayload) -> bool:
+        """Stateful re-execution audit (§3 req. 2): a payload at the
+        local round replays the argmin on this node's own grid state —
+        never the evidence closure — compares ``(best_arg, best_res,
+        root)`` bit-exactly, then zooms and compares the post-zoom
+        state digest.  Success advances local state (state sync);
+        any mismatch leaves state untouched.  Rounds already applied
+        re-verify against the committed history; future rounds are
+        unverifiable (``False``) until the gap is filled."""
+        r = payload.train_height
+        if r is None or r > self._round:
+            return False
+        if (payload.winner is None
+                or payload.winner // MINER_LANE != payload.origin):
+            return False
+        if r < self._round:
+            hist = self._history[r]
+            return (hist[0] == payload.jash_id
+                    and hist[1] == payload.best_arg
+                    and hist[2] == payload.best_res
+                    and hist[3] == payload.merkle_root
+                    and hist[4] == payload.state_digest)
+        jash = self._round_jash()
+        if jash.source_id() != payload.jash_id:
+            return False
+        opt = run_optimal(jash)        # replay on OUR state, lanes=1
+        leaf = (np.uint32(opt.best_arg).tobytes()
+                + opt.best_res.astype("<u4").tobytes())
+        best_res = opt.best_res.tobytes().hex()
+        if (opt.best_arg != payload.best_arg
+                or best_res != payload.best_res
+                or merkle_root([leaf]) != payload.merkle_root):
+            return False
+        snap = self.snapshot()
+        self._zoom(opt.best_arg)
+        if self.state_digest() != payload.state_digest:
+            self.restore(snap)
+            return False
+        self._history.append((payload.jash_id, opt.best_arg, best_res,
+                              payload.merkle_root, payload.state_digest))
+        return True
+
+    def verify_batch(self, payloads: Sequence[BlockPayload]) -> List[bool]:
+        """Chain-order loop: stateful verification cannot be reordered,
+        deduplicated, or shared — each round's replay *is* the state
+        advance the next round builds on.  Provided so direct callers
+        get the same contract surface as the stateless families;
+        ``verify_chain_batched`` already replays stateful workloads
+        per block in chain order."""
+        return [self.verify(p) for p in payloads]
+
+    def reward(self, book: CreditBook, payload: BlockPayload
+               ) -> RewardEntries:
+        """Winner takes the block — the lane that found the round's best
+        latent (already lane-checked against ``origin`` by
+        ``verify``)."""
+        staged = CreditBook()
+        reward_optimal(staged, payload.winner, payload.block_reward)
+        return _apply_rewards(book, staged)

@@ -45,6 +45,23 @@ def test_api_md_snippets_execute():
                 f"({type(e).__name__}: {e}):\n{block}") from e
 
 
+def test_workloads_md_snippets_execute():
+    """The authoring guide's blocks — including the minimal-workload
+    implementation mined on a 2-node network — run in order in one
+    shared namespace, exactly as ``scripts/check_docs.py`` runs them in
+    CI."""
+    mod = _load_checker()
+    problems = mod.run_md_blocks(REPO / "docs" / "workloads.md")
+    assert not problems, "\n".join(problems)
+
+
+def test_every_doc_is_claimed_by_a_check():
+    """docs/*.md files must be claimed by DOC_CHECKS — a doc nothing
+    executes or cross-checks rots silently."""
+    problems = _load_checker().check_docs_coverage()
+    assert not problems, "\n".join(problems)
+
+
 def test_readme_documents_classic_fallback():
     """The §3.4 classic fallback must stay documented in the README
     workload table (it is the default-policy behavior users hit first)."""
