@@ -663,6 +663,54 @@ def bench_sim_gossip(n_lanes: int = 1):
             f"ttf_max_s={rep.ttf_max:.2f}")
 
 
+def bench_recovery(n_blocks: int = 512, arg_bits: int = 6) -> dict:
+    """DESIGN §12: journal replay throughput — what a restart costs.
+    Mines a classic chain into an in-memory journal, then times
+    ``Node.recover`` replaying it through the batched verify path."""
+    from repro.chain import ChainStore, Node
+
+    donor = Node(node_id=0, classic_arg_bits=arg_bits, store=ChainStore())
+    for _ in range(n_blocks):
+        donor.mine_block()
+    data = donor.store.to_bytes()
+    t0 = time.perf_counter()
+    node = Node.recover(ChainStore.from_bytes(data),
+                        node=Node(node_id=0, classic_arg_bits=arg_bits))
+    dt = time.perf_counter() - t0
+    if node.ledger.tip_hash != donor.ledger.tip_hash:
+        raise RuntimeError("recovery replay diverged from the donor tip")
+    row(f"recovery.replay_{n_blocks}", dt * 1e6,
+        f"blocks_per_s={n_blocks / dt:.0f} journal_bytes={len(data)}")
+    return {"n_blocks": n_blocks, "wall_s": dt,
+            "blocks_per_s": n_blocks / dt, "journal_bytes": len(data)}
+
+
+def bench_chaos(n_nodes: int = 16, n_blocks: int = 24) -> dict:
+    """DESIGN §12: the crash/corrupt/long-range-rewrite chaos scenario —
+    wallclock for the full fault gauntlet plus its recovery/finality
+    counters (any divergence is a hard failure, not a slow row)."""
+    from repro.chain.sim import chaos_scenario
+
+    sim = chaos_scenario(n_nodes=n_nodes, n_blocks=n_blocks)
+    t0 = time.perf_counter()
+    rep = sim.run()
+    dt = time.perf_counter() - t0
+    if (not rep.converged or rep.credit_divergence != 0.0
+            or rep.finalized_divergence != 0):
+        raise RuntimeError(
+            f"chaos_scenario diverged (converged={rep.converged}, "
+            f"finalized_divergence={rep.finalized_divergence})")
+    row(f"sim_chaos.{n_nodes}x{n_blocks}", dt * 1e6,
+        f"events={rep.n_events} events_per_s={rep.n_events / dt:.0f} "
+        f"recoveries={rep.recoveries} truncated={rep.truncated_records} "
+        f"finality_rejects={rep.finality_rejects} "
+        f"converged={rep.converged}")
+    return {"n_nodes": n_nodes, "blocks": n_blocks, "wall_s": dt,
+            "events": rep.n_events, "recoveries": rep.recoveries,
+            "truncated_records": rep.truncated_records,
+            "finality_rejects": rep.finality_rejects}
+
+
 def bench_roofline():
     """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
     files = sorted(glob.glob("experiments/dryrun/*__single.json"))
@@ -795,6 +843,8 @@ def main(smoke: bool = False) -> None:
         # scenarios, then the regression gate against smoke_baseline
         measured = _smoke_scale_metrics()
         bench_sim_gossip()
+        bench_recovery(n_blocks=64)
+        bench_chaos(n_nodes=8, n_blocks=12)
         failures = check_smoke_regression(measured)
         print(f"# {len(ROWS)} rows (smoke)")
         if failures:
@@ -812,6 +862,8 @@ def main(smoke: bool = False) -> None:
     payload["verify_pipeline"] = bench_verify_pipeline()
     payload["workload_suite"] = bench_workload_suite()
     payload["sim_gossip"] = bench_sim_scale()
+    payload["recovery"] = bench_recovery()
+    payload["sim_chaos"] = bench_chaos()
     payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
                                                      quiet=True)
     bench_sim_gossip()

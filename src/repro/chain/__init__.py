@@ -19,6 +19,14 @@ top of Node/Network; its core surface (``Sim``/``SimConfig``/
 ``SimReport``/``LinkModel``) is re-exported here, the adversary classes
 and canonical scenarios live in the module.
 
+``repro.chain.store`` is the crash-fault layer: ``ChainStore`` is a
+durable append-only journal of everything a ``Node(store=...)``
+commits, and ``Node.recover`` rebuilds a node from it after a crash
+(truncating torn/corrupted tails instead of failing).  Finality
+(``Node(confirmation_depth=k)``) checkpoints blocks with ``k``
+successors, fences fork choice against long-range rewrites, and prunes
+retained state so long-running memory stays bounded.
+
 ``repro.chain.workloads`` is the application workload suite — SAT
 (certificate-asymmetric), GAN inversion (stateful grid refinement),
 and docking (consensus-bound data bundle) as first-class ``Workload``
@@ -26,8 +34,9 @@ families; see ``docs/workloads.md`` for the authoring guide.
 """
 from repro.chain.network import BroadcastResult, Network
 from repro.chain.node import (BlockReceipt, BlockRecord, Node, NodeState,
-                              VerifyCache)
+                              RecoveryReport, VerifyCache)
 from repro.chain.sim import LinkModel, Sim, SimConfig, SimReport
+from repro.chain.store import ChainStore
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, TrainingWorkload, Workload,
@@ -41,6 +50,7 @@ __all__ = [
     "BlockRecord",
     "BroadcastResult",
     "ChainError",
+    "ChainStore",
     "ClassicSha256Workload",
     "JashFullWorkload",
     "JashOptimalWorkload",
@@ -48,6 +58,7 @@ __all__ = [
     "Network",
     "Node",
     "NodeState",
+    "RecoveryReport",
     "Sim",
     "SimConfig",
     "SimReport",

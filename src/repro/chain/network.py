@@ -132,6 +132,10 @@ class Network:
         if peer.has_block(block.block_hash):
             return False
         src = self.nodes[origin]
+        if not src.ledger.blocks:
+            # nothing to pull (consider_chain treats an empty candidate
+            # as a caller bug and raises)
+            return False
         return peer.consider_chain(src.ledger.blocks, src.chain_payloads())
 
     def run(self, n_blocks: int,

@@ -32,6 +32,7 @@ from repro.core.difficulty import DifficultyController
 from repro.core.jash import Jash
 from repro.core.ledger import Block, Ledger
 from repro.core.rewards import CreditBook
+from repro.chain.store import ChainStore
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, RewardEntries, Workload,
@@ -63,9 +64,15 @@ class VerifyCache:
 
     ``maxsize`` bounds the cache (entries pin whole payloads — full
     evidence arrays included — and a long-running domain would
-    otherwise retain every orphaned and reorged-away block forever);
-    the oldest entries are evicted first, and an evicted block simply
-    costs its next receiver one ordinary re-verification.
+    otherwise retain every orphaned and reorged-away block forever).
+    Eviction is **finality-aware**: once a member node reports a
+    finalized height (``note_finalized``), entries at or below it are
+    evicted first — a finalized block is never re-verified again (every
+    member already holds it, and fork choice substitutes local evidence
+    below the fork point), so they are pure dead weight.  With no
+    finality information the policy degrades to plain FIFO.  An evicted
+    block simply costs its next receiver one ordinary re-verification.
+    ``hits``/``misses``/``evictions`` count the domain's traffic.
     """
 
     def __init__(self, maxsize: int = 4096) -> None:
@@ -73,8 +80,11 @@ class VerifyCache:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
         self._verified: Dict[str, BlockPayload] = {}
+        self._heights: Dict[str, int] = {}
+        self._finalized = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._verified)
@@ -88,12 +98,36 @@ class VerifyCache:
         self.misses += 1
         return False
 
-    def add(self, block_hash: str, payload: BlockPayload) -> None:
-        """Record a payload that just passed workload verification."""
+    def note_finalized(self, height: int) -> None:
+        """A member node finalized up to ``height`` — entries at or
+        below it become preferred eviction victims."""
+        if height > self._finalized:
+            self._finalized = height
+
+    def add(self, block_hash: str, payload: BlockPayload,
+            height: Optional[int] = None) -> None:
+        """Record a payload that just passed workload verification
+        (``height`` is the block's chain height, fed to the
+        finality-aware eviction policy when known)."""
         if block_hash not in self._verified:
-            while len(self._verified) >= self.maxsize:   # FIFO evict
-                self._verified.pop(next(iter(self._verified)))
+            while len(self._verified) >= self.maxsize:
+                self._evict_one()
             self._verified[block_hash] = payload
+            if height is not None:
+                self._heights[block_hash] = height
+
+    def _evict_one(self) -> None:
+        victim = None
+        if self._finalized:
+            for key, h in self._heights.items():
+                if h <= self._finalized:           # finalized-behind first
+                    victim = key
+                    break
+        if victim is None:
+            victim = next(iter(self._verified))    # then plain FIFO
+        self._verified.pop(victim)
+        self._heights.pop(victim, None)
+        self.evictions += 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +203,19 @@ class BlockReceipt:
 
 
 @dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What ``Node.recover`` did: how many journal blocks it replayed,
+    the height it adopted after truncating damage (``truncated_records``
+    counts journal records discarded — torn/corrupted tail plus blocks
+    that failed re-verification), and the height after resyncing the
+    lost tail from peers."""
+    replayed: int
+    adopted_height: int
+    truncated_records: int
+    resynced_height: int
+
+
+@dataclasses.dataclass(frozen=True)
 class NodeState:
     node_id: int
     height: int
@@ -194,6 +241,8 @@ class Node:
                  snapshot_interval: int = 8,
                  snapshot_ring: int = 4,
                  use_verify_cache: bool = True,
+                 confirmation_depth: Optional[int] = None,
+                 store: Optional[ChainStore] = None,
                  ra: Optional[RuntimeAuthority] = None) -> None:
         """``n_lanes`` is multi-lane mining: partition full/optimal
         execution over ``n_lanes`` single-device miner lanes, all run in
@@ -214,7 +263,26 @@ class Node:
         ``use_verify_cache=False`` keeps this node out of any shared
         ``VerifyCache`` a ``Network``/``Sim`` would attach — it then
         re-verifies every payload itself (what adversarial scenarios
-        and nodes with non-default verification policy want)."""
+        and nodes with non-default verification policy want).
+
+        ``confirmation_depth=k`` turns on **finality**: a block with
+        ``k`` committed successors is checkpointed — ``consider_chain``
+        rejects any reorg whose fork point crosses it, and finalization
+        prunes old checkpoint-ring entries and retained payload
+        evidence so long-running memory stays bounded (block *headers*
+        are kept forever; they are what hash-links the chain).  With
+        checkpoints enabled the ring must cover the non-final tail
+        (``confirmation_depth <= (snapshot_ring - 1) *
+        snapshot_interval``) or every allowed reorg could outrun its
+        own rebuild base — that interaction is validated here, at
+        construction.  ``None`` (the default) keeps the pure
+        longest-valid-chain behavior.
+
+        ``store`` attaches a durable ``ChainStore`` journal: every
+        commit and fork-choice rebuild is appended to it, and after a
+        crash ``Node.recover(store, ...)`` rebuilds an equivalent node
+        from the journal.  The store must be empty — recovery, not
+        construction, is how a journal with history is adopted."""
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         if snapshot_interval < 0:
@@ -223,6 +291,21 @@ class Node:
         if snapshot_ring < 0:
             raise ValueError(
                 f"snapshot_ring must be >= 0, got {snapshot_ring}")
+        if confirmation_depth is not None:
+            if confirmation_depth < 1:
+                raise ValueError(f"confirmation_depth must be >= 1, "
+                                 f"got {confirmation_depth}")
+            ring_span = (snapshot_ring - 1) * snapshot_interval
+            if snapshot_interval > 0 and snapshot_ring > 0 \
+                    and confirmation_depth > ring_span:
+                raise ValueError(
+                    f"confirmation_depth={confirmation_depth} exceeds the "
+                    f"checkpoint ring's span of {ring_span} blocks "
+                    f"((snapshot_ring - 1) * snapshot_interval = "
+                    f"({snapshot_ring} - 1) * {snapshot_interval}) — an "
+                    "allowed reorg inside the non-final tail could then "
+                    "find no checkpoint at or below its fork point after "
+                    "finality pruning; deepen the ring or lower the depth")
         if n_lanes > 1 and any(
                 a in getattr(mesh, "axis_names", ())
                 for a in ("pod", "data")):
@@ -264,6 +347,18 @@ class Node:
         self.verify_cache: Optional[VerifyCache] = None
         self._hash_index: set = set()      # block hashes of self.ledger
         self._in_rebuild = False           # fork-choice commit loop
+        self.confirmation_depth = confirmation_depth
+        self._finalized = 0                # monotone finalized height
+        self._evidence_floor = 0           # heights below: payload pruned
+        self.finality_rejects = 0          # reorgs rejected at the fence
+        if store is not None and not store.is_empty():
+            raise ValueError(
+                "store already holds journal records — a fresh node may "
+                "not silently shadow an existing chain; use "
+                "Node.recover(store, ...) to adopt it")
+        self.store = store
+        self._journal_mute = False         # recovery replay: don't re-log
+        self.last_recovery: Optional[RecoveryReport] = None
 
     # -- workload registry --------------------------------------------
     @staticmethod
@@ -357,7 +452,8 @@ class Node:
         record, rewards = self._commit(payload)
         if self.verify_cache is not None and not is_stateful(wl):
             # the self-verification above counts for the trust domain
-            self.verify_cache.add(record.block_hash, payload)
+            self.verify_cache.add(record.block_hash, payload,
+                                  height=record.height)
 
         dt = time.perf_counter() - t0
         if self.difficulty is not None:
@@ -376,6 +472,8 @@ class Node:
             state_digest=payload.state_digest)
         self._hash_index.add(blk.block_hash)
         self._payloads[blk.height] = payload
+        if self.store is not None and not self._journal_mute:
+            self.store.append_commit(blk, payload)
         rewards = self.workloads[payload.workload].reward(self.book, payload)
         # during a fork-choice rebuild the stateful workloads already
         # sit at the *tail end* state (batched verification replayed
@@ -386,7 +484,48 @@ class Node:
         if (self.snapshot_interval > 0 and not self._in_rebuild
                 and self.ledger.height % self.snapshot_interval == 0):
             self._push_snapshot()
+        self._advance_finality()
         return BlockRecord.from_block(blk), rewards
+
+    # -- finality ------------------------------------------------------
+    @property
+    def finalized_height(self) -> int:
+        """Heights below this are final: ``consider_chain`` refuses any
+        reorg whose fork point crosses it (always 0 with
+        ``confirmation_depth=None``)."""
+        return self._finalized
+
+    def _advance_finality(self) -> None:
+        if self.confirmation_depth is None:
+            return
+        new_final = self.ledger.height - self.confirmation_depth
+        if new_final > self._finalized:
+            self._finalized = new_final
+            if self.verify_cache is not None:
+                self.verify_cache.note_finalized(self._finalized)
+            self._prune_finalized()
+
+    def _prune_finalized(self) -> None:
+        """Finalization drives pruning: drop checkpoint-ring entries and
+        payload evidence below the newest checkpoint at or below the
+        finalized height (the *anchor* — the deepest rebuild base any
+        still-allowed reorg can need).  Headers stay forever; a chain
+        of pruned heights remains hash-verifiable, its evidence is just
+        no longer servable to joiners (weak subjectivity — see DESIGN.md
+        §12)."""
+        anchor = 0
+        for snap in self._snapshots:
+            if anchor < snap.height <= self._finalized:
+                anchor = snap.height
+        if anchor == 0:
+            return
+        if any(s.height < anchor for s in self._snapshots):
+            keep = [s for s in self._snapshots if s.height >= anchor]
+            self._snapshots = collections.deque(
+                keep, maxlen=self._snapshots.maxlen)
+        while self._evidence_floor < anchor:
+            self._payloads.pop(self._evidence_floor, None)
+            self._evidence_floor += 1
 
     # -- fork-choice checkpoints --------------------------------------
     def _push_snapshot(self) -> None:
@@ -428,9 +567,11 @@ class Node:
         single dispatches.  Accept/reject equals ``all(self.audit(h)
         for h in heights)``; like ``audit``, this never consults the
         shared ``VerifyCache`` — an audit is this node proving the
-        chain to itself."""
-        hs = list(range(self.ledger.height)) if heights is None \
-            else list(heights)
+        chain to itself.  The default range starts at the evidence
+        floor: payloads below it were pruned at finalization, and a
+        finalized block's evidence is by definition no longer held."""
+        hs = list(range(self._evidence_floor, self.ledger.height)) \
+            if heights is None else list(heights)
         payloads = []
         for h in hs:
             if not 0 <= h < self.ledger.height:
@@ -493,7 +634,8 @@ class Node:
             if not wl.verify(payload):
                 return False
             if shareable:
-                self.verify_cache.add(block.block_hash, payload)
+                self.verify_cache.add(block.block_hash, payload,
+                                      height=block.height)
         self._commit(payload)
         return True
 
@@ -514,18 +656,29 @@ class Node:
         ``VerifyCache`` hits); stateful ones replay in chain order from
         the checkpoint.  Accept/reject, adopted tips, and rebuilt books
         are bit-identical to a genesis replay (``snapshot_interval=0``
-        forces that reference behavior)."""
-        if len(blocks) <= self.ledger.height or len(blocks) != len(payloads):
-            return False
-        # the block reward is a consensus parameter; origin attribution
-        # inside a relayed chain is a signature problem (out of scope for
-        # the in-process network) and is NOT re-checked here
-        if any(p.block_reward != self.block_reward for p in payloads):
+        forces that reference behavior).
+
+        Malformed *calls* — an empty candidate or mismatched
+        blocks/payloads lengths — raise ``ChainError`` (they are caller
+        bugs, not losing forks); an invalid candidate *chain* returns
+        False.  With finality on (``confirmation_depth``), a candidate
+        whose fork point lies below our finalized height is refused
+        however long it is (counted in ``finality_rejects`` — the fence
+        that defeats long-range rewrites).  Below the fork point the
+        sender's evidence is ignored in favor of our own retained
+        payloads (bit-identical blocks ⇒ the evidence we committed), so
+        a peer that pruned finalized evidence may serve ``None`` there;
+        at or beyond the fork point every payload must be present and
+        cross-check its header."""
+        if len(blocks) == 0 or len(blocks) != len(payloads):
+            raise ChainError(
+                f"consider_chain needs aligned non-empty sequences — got "
+                f"{len(blocks)} blocks and {len(payloads)} payloads")
+        if len(blocks) <= self.ledger.height:
             return False
         prev = Ledger.GENESIS_HASH
-        for i, (blk, payload) in enumerate(zip(blocks, payloads)):
-            if (blk.height != i or blk.prev_hash != prev
-                    or not self._payload_matches(blk, payload)):
+        for i, blk in enumerate(blocks):
+            if blk.height != i or blk.prev_hash != prev:
                 return False
             prev = blk.block_hash
         # fork point: longest common block-hash prefix with our chain
@@ -534,6 +687,20 @@ class Node:
             if ours.block_hash != theirs.block_hash:
                 break
             common += 1
+        if self.confirmation_depth is not None and common < self._finalized:
+            self.finality_rejects += 1
+            return False
+        use = list(payloads)
+        for i in range(common):
+            use[i] = self._payloads.get(i, use[i])
+        # the block reward is a consensus parameter; origin attribution
+        # inside a relayed chain is a signature problem (out of scope for
+        # the in-process network) and is NOT re-checked here
+        for i in range(common, len(blocks)):
+            p = use[i]
+            if (p is None or p.block_reward != self.block_reward
+                    or not self._payload_matches(blocks[i], p)):
+                return False
         snap = self._snapshot_at(common)
         start = snap.height if snap is not None else 0
         ring_snaps = dict(snap.wl_snaps) if snap is not None else {}
@@ -548,25 +715,30 @@ class Node:
         rollback = [(wl, _stateful_snapshot(wl)) for _, wl in stateful]
         for name, wl in stateful:
             _stateful_restore(wl, ring_snaps.get(name))
-        precleared = [False] * (len(payloads) - start)
+        precleared = [False] * (len(use) - start)
         if self.verify_cache is not None:
-            for i in range(start, len(payloads)):
-                wl = self.workloads.get(payloads[i].workload)
+            for i in range(start, len(use)):
+                wl = self.workloads.get(use[i].workload)
                 if (wl is not None and not is_stateful(wl)
                         and self.verify_cache.check(blocks[i].block_hash,
-                                                    payloads[i])):
+                                                    use[i])):
                     precleared[i - start] = True
-        if not verify_chain_batched(self.workloads, payloads[start:],
+        if not verify_chain_batched(self.workloads, use[start:],
                                     precleared=precleared):
             for wl, pre_fork in rollback:
                 _stateful_restore(wl, pre_fork)
             return False
         # adopt: truncate to the checkpoint and rebuild from there (the
-        # kept prefix is bit-identical between the two chains)
+        # kept prefix is bit-identical between the two chains).  The
+        # journal stays append-only across reorgs: one TRUNCATE record,
+        # then the adopted tail as ordinary commits.
+        if self.store is not None and start < self.ledger.height:
+            self.store.append_truncate(start)
         del self.ledger.blocks[start:]
         self.book.balances = dict(snap.balances) if snap else {}
         self.book.total_issued = snap.total_issued if snap else 0.0
-        self._payloads = {h: self._payloads[h] for h in range(start)}
+        self._payloads = {h: self._payloads[h]
+                          for h in range(self._evidence_floor, start)}
         self._hash_index = {b.block_hash for b in self.ledger.blocks}
         # checkpoints past the fork point describe the abandoned branch
         keep = [s for s in self._snapshots if s.height <= common]
@@ -574,11 +746,12 @@ class Node:
                                             maxlen=self._snapshots.maxlen)
         self._in_rebuild = True
         try:
-            for blk, payload in zip(blocks[start:], payloads[start:]):
+            for blk, payload in zip(blocks[start:], use[start:]):
                 self._commit(payload)
                 if self.verify_cache is not None and not is_stateful(
                         self.workloads[payload.workload]):
-                    self.verify_cache.add(blk.block_hash, payload)
+                    self.verify_cache.add(blk.block_hash, payload,
+                                          height=blk.height)
         finally:
             self._in_rebuild = False
         # one checkpoint at the adopted tip, where ledger, book, and
@@ -606,7 +779,116 @@ class Node:
         the *current* fork choice — a reorg replaces earlier entries."""
         return [BlockRecord.from_block(b) for b in self.ledger.blocks]
 
-    def chain_payloads(self) -> List[BlockPayload]:
+    def chain_payloads(self) -> List[Optional[BlockPayload]]:
         """Payload evidence for every committed block, chain order (what
-        a peer pulls to run fork choice)."""
-        return [self._payloads[h] for h in range(self.ledger.height)]
+        a peer pulls to run fork choice).  Heights whose evidence was
+        pruned at finalization yield ``None`` — a puller substitutes its
+        own retained evidence below the fork point (``consider_chain``),
+        and a fresh joiner must bootstrap from a peer that still holds
+        the full evidence (weak subjectivity; DESIGN.md §12)."""
+        return [self._payloads.get(h) for h in range(self.ledger.height)]
+
+    # -- crash recovery (the ChainStore journal) ----------------------
+    @classmethod
+    def recover(cls, store: ChainStore, *,
+                peers: Sequence["Node"] = (),
+                jash_fns: Optional[Dict[str, object]] = None,
+                node: Optional["Node"] = None,
+                **node_kwargs) -> "Node":
+        """Rebuild a node from its durable journal after a crash.
+
+        Reads the journal (damaged tails already truncated by
+        ``ChainStore.read_chain``), replays the surviving chain through
+        the **ordinary verify path** — a block that fails re-verification
+        truncates the replay there instead of crashing — commits the
+        adopted prefix, compacts the journal to it, and finally pulls
+        each node in ``peers`` through ``consider_chain`` to resync the
+        lost tail.  What happened is recorded in ``last_recovery``.
+
+        The recovered node is built from ``node_kwargs`` (same
+        constructor arguments as the crashed node — workload parameters
+        are consensus policy, they are not journaled), or pass a
+        pre-built fresh ``node=`` shell.  ``jash_fns`` maps jash names
+        to their functions for payload families whose evidence must be
+        re-*executed* (full/optimal researcher jashes); the classic
+        fallback and the application workloads resolve themselves."""
+        if node is None:
+            node = cls(**node_kwargs)
+        if node.ledger.height != 0 or node.store is not None:
+            raise ChainError(
+                "Node.recover needs a fresh node shell (no committed "
+                "blocks, no attached store)")
+        fns: Dict[str, object] = {}
+        for wl in node.workloads.values():
+            hook = getattr(wl, "journal_jash_fns", None)
+            if hook is not None:
+                fns.update(hook())
+        if jash_fns:
+            fns.update(jash_fns)
+        read = store.read_chain(jash_fns=fns)
+        adopted = node._replay_journal(read.blocks, read.payloads)
+        truncated = read.truncated_records + (len(read.blocks) - adopted)
+        if not read.clean or adopted < len(read.blocks):
+            store.rewrite(read.blocks[:adopted], read.payloads[:adopted])
+        node.store = store
+        for peer in peers:
+            if peer.ledger.height > node.ledger.height:
+                node.consider_chain(list(peer.ledger.blocks),
+                                    peer.chain_payloads())
+        node.last_recovery = RecoveryReport(
+            replayed=len(read.blocks), adopted_height=adopted,
+            truncated_records=truncated,
+            resynced_height=node.ledger.height)
+        return node
+
+    def _replay_journal(self, blocks: Sequence[Block],
+                        payloads: Sequence[Optional[BlockPayload]]) -> int:
+        """Commit the longest valid prefix of a journal chain; returns
+        how many blocks were adopted.  Validity is exactly what
+        ``consider_chain`` demands: genesis-rooted hash links,
+        header/payload cross-checks, consensus reward, and bit-exact
+        workload re-verification."""
+        n = 0
+        prev = Ledger.GENESIS_HASH
+        for blk, payload in zip(blocks, payloads):
+            if (blk.height != n or blk.prev_hash != prev
+                    or payload is None
+                    or payload.block_reward != self.block_reward
+                    or not self._payload_matches(blk, payload)):
+                break
+            prev = blk.block_hash
+            n += 1
+        ok = 0
+        try:
+            if n and verify_chain_batched(self.workloads, payloads[:n]):
+                ok = n
+        except Exception:
+            ok = 0
+        if ok == 0 and n:
+            # the batched pass failed somewhere — scan block by block
+            # for the longest verifying prefix (stateful workloads
+            # advance exactly as far as verification succeeds, which is
+            # the adopted tail state); reset them first, the failed
+            # batch may have advanced them partway
+            for _, wl in [(m, w) for m, w in self.workloads.items()
+                          if is_stateful(w)]:
+                wl.reset()
+            for i in range(n):
+                try:
+                    if not verify_chain_batched(self.workloads,
+                                                payloads[i:i + 1]):
+                        break
+                except Exception:
+                    break
+                ok = i + 1
+        self._in_rebuild = True
+        self._journal_mute = True      # replay must not re-journal
+        try:
+            for payload in payloads[:ok]:
+                self._commit(payload)
+        finally:
+            self._in_rebuild = False
+            self._journal_mute = False
+        if ok and self.snapshot_interval > 0 and self._snapshots.maxlen:
+            self._push_snapshot()
+        return ok

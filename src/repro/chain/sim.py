@@ -17,9 +17,19 @@ under asynchrony — can be measured:
   peer;
 * **adversaries** — ``WithholdingMiner`` (selfish mining: private chain
   released later), ``StaleSpammer`` (rebroadcasts old blocks),
-  ``PayloadCorrupter`` (tampers every outgoing block/payload pair) — all
-  exercising the receive-side re-verification and fork-choice rollback
-  paths.
+  ``PayloadCorrupter`` (tampers every outgoing block/payload pair),
+  ``LongRangeRewriter`` (re-mines history from behind the finality
+  horizon) — all exercising the receive-side re-verification,
+  fork-choice rollback, and finality-fence paths;
+* **crash faults** — ``crash_at`` discards a node's entire in-memory
+  state (its durable ``ChainStore`` journal survives as the "disk"),
+  ``restart_at`` rebuilds it mid-simulation via ``Node.recover``, and
+  ``corrupt_store_at`` bit-flips or tears the journal tail first —
+  recovery must truncate gracefully and resync from peers, never raise;
+* **retry-with-backoff** — a randomly dropped delivery is retransmitted
+  up to ``LinkModel.max_retries`` times with exponential backoff before
+  it counts as lost (``drops_final``), so gossip is no longer silently
+  lossy between periodic announces.
 
 **Determinism invariant**: given the same nodes, scenario, and
 ``SimConfig.seed``, a run is *bit-reproducible* — the event order, every
@@ -39,6 +49,7 @@ Run the canonical scenarios from the CLI::
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import json
@@ -47,12 +58,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.chain.network import Network
 from repro.chain.node import Node, VerifyCache
+from repro.chain.store import ChainStore
 from repro.chain.workload import BlockPayload, ChainError
 from repro.core.ledger import Block
 
 __all__ = [
     "Adversary",
     "LinkModel",
+    "LongRangeRewriter",
     "PayloadCorrupter",
     "Sim",
     "SimConfig",
@@ -60,6 +73,7 @@ __all__ = [
     "StaleSpammer",
     "WithholdingMiner",
     "adversarial_scenario",
+    "chaos_scenario",
     "heterogeneous_scenario",
     "partitioned_scenario",
     "throughput_scenario",
@@ -71,11 +85,20 @@ class LinkModel:
     """Per-link delivery model: uniform latency in ``[min_latency,
     max_latency]`` seconds of *simulated* time, i.i.d. drop probability,
     and the extra round-trip a failed direct delivery pays before the
-    receiver pulls the sender's whole chain (``sync_latency``)."""
+    receiver pulls the sender's whole chain (``sync_latency``).
+
+    A randomly dropped send is retransmitted up to ``max_retries``
+    times, waiting ``retry_backoff * 2**attempt`` before each retry;
+    only a message whose every attempt dropped counts as lost
+    (``SimReport.drops_final``).  Partition drops are not retried — the
+    heal announces tips instead.  ``max_retries=0`` restores the old
+    fire-and-forget gossip."""
     min_latency: float = 0.01
     max_latency: float = 0.05
     drop_prob: float = 0.0
     sync_latency: float = 0.1
+    max_retries: int = 2
+    retry_backoff: float = 0.05
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +190,33 @@ class PayloadCorrupter(Adversary):
                 dataclasses.replace(payload, merkle_root=self.BAD_ROOT))
 
 
+class LongRangeRewriter(Adversary):
+    """Long-range attack: at ``rewrite_at`` the adversary throws away
+    its own chain back to ``fork_height`` — a point it expects to lie
+    *behind* the honest finality horizon — privately re-mines ``length``
+    alternate blocks on top of the kept prefix (one every ``every``
+    simulated seconds), then announces the result.  The rewritten chain
+    is strictly longer than the honest one, so a pure
+    longest-valid-chain node would adopt it and rewrite settled
+    history; nodes with ``confirmation_depth`` set refuse it at the
+    finality fence instead (counted in ``SimReport.finality_rejects``,
+    which the chaos scenario pins to every honest node)."""
+
+    def __init__(self, rewrite_at: float, fork_height: int,
+                 length: int, *, every: float = 0.02) -> None:
+        self.rewrite_at = rewrite_at
+        self.fork_height = fork_height
+        self.length = length
+        self.every = every
+        self.withholding = False
+
+    def install(self, sim: "Sim", node_id: int) -> None:
+        sim.at(self.rewrite_at, sim._long_range_rewrite, node_id, self)
+
+    def withholds(self) -> bool:
+        return self.withholding
+
+
 @dataclasses.dataclass(frozen=True)
 class _MinedBlock:
     block_hash: str
@@ -206,12 +256,25 @@ class SimReport:
     drops_random: int
     drops_partition: int
     spam_sent: int
+    retries: int
+    drops_final: int
+    drops_crash: int
     # fork choice
     syncs: int
     reorgs: int
     sync_rejects: int
     joins: int
     fork_depth_hist: Dict[int, int]
+    # crash faults & recovery
+    crashes: int
+    recoveries: int
+    truncated_records: int
+    corruptions: int
+    # finality (confirmation_depth nodes; divergence must be 0 for
+    # honest nodes once converged)
+    finality_rejects: int
+    finalized_heights: List[int]
+    finalized_divergence: int
     # chain health
     canonical_height: int
     orphans: int
@@ -292,8 +355,12 @@ class Sim:
             "blocks_mined", "blocks_withheld", "mine_failures",
             "deliveries_sent", "accepts", "duplicates", "rejects",
             "drops_random", "drops_partition", "spam_sent",
-            "syncs", "reorgs", "sync_rejects", "joins")}
+            "retries", "drops_final", "drops_crash",
+            "syncs", "reorgs", "sync_rejects", "joins",
+            "crashes", "recoveries", "truncated_records", "corruptions")}
         self._n_events = 0
+        # crashed node id -> its surviving ChainStore (None if diskless)
+        self._crashed: Dict[int, Optional[ChainStore]] = {}
 
         for nid, adv in sorted(self._adversaries.items()):
             adv.install(self, nid)
@@ -392,6 +459,33 @@ class Sim:
         chain."""
         self._schedule(t, self._announce, node_id)
 
+    def crash_at(self, t: float, node_id: int) -> None:
+        """Crash fault: at ``t`` the node loses its entire in-memory
+        state (ledger, credit book, caches, workload state).  Its
+        durable ``ChainStore`` journal — if it has one — survives as
+        the "disk" a later ``restart_at`` recovers from.  Messages
+        delivered to a crashed node are dropped (``drops_crash``)."""
+        self._schedule(t, self._crash, node_id)
+
+    def restart_at(self, t: float, node_id: int,
+                   factory: Callable[[], Node]) -> None:
+        """Restart a crashed node at ``t``: ``factory()`` builds a fresh
+        shell (same constructor parameters as the crashed node, **no**
+        store attached), ``Node.recover`` replays the surviving journal
+        into it — truncating any damage instead of raising — and the
+        node then pulls a connected peer to resync the lost tail,
+        exactly like a joiner."""
+        self._schedule(t, self._restart, node_id, factory)
+
+    def corrupt_store_at(self, t: float, node_id: int,
+                         mode: str = "bitflip") -> None:
+        """Disk fault: damage the node's journal tail at ``t`` —
+        ``"bitflip"`` flips one seeded-random bit in the last record,
+        ``"torn"`` truncates the journal mid-record (an interrupted
+        write).  Works on live and crashed nodes alike; the damage
+        surfaces at the next recovery as a graceful truncation."""
+        self._schedule(t, self._corrupt_store, node_id, mode)
+
     # -- event handlers -----------------------------------------------
     def _connected(self, a: int, b: int) -> bool:
         return self._group.get(a) == self._group.get(b)
@@ -435,25 +529,42 @@ class Sim:
         adv = self._adversaries.get(origin)
         if adv is not None:
             block, payload = adv.transform(block, payload)
-        link = self.config.link
         for dest in sorted(self._nodes):
             if dest == origin:
                 continue
-            if not self._connected(origin, dest):
-                self._counters["drops_partition"] += 1
-                continue
-            if self._rng.random() < link.drop_prob:
-                self._counters["drops_random"] += 1
-                continue
-            lat = self._rng.uniform(link.min_latency, link.max_latency)
-            self._counters["deliveries_sent"] += 1
-            self._schedule(self.now + lat, self._deliver, origin, dest,
-                           block, payload)
+            self._send(origin, dest, block, payload, 0)
+
+    def _send(self, origin: int, dest: int, block: Block,
+              payload: BlockPayload, attempt: int) -> None:
+        """One transmission attempt.  A random drop schedules a
+        retransmission with exponential backoff (up to
+        ``LinkModel.max_retries``) before the message counts as lost;
+        partition drops are never retried (healing re-announces)."""
+        link = self.config.link
+        if not self._connected(origin, dest):
+            self._counters["drops_partition"] += 1
+            return
+        if self._rng.random() < link.drop_prob:
+            self._counters["drops_random"] += 1
+            if attempt < link.max_retries:
+                self._counters["retries"] += 1
+                backoff = link.retry_backoff * (2 ** attempt)
+                self._schedule(self.now + backoff, self._send, origin,
+                               dest, block, payload, attempt + 1)
+            else:
+                self._counters["drops_final"] += 1
+            return
+        lat = self._rng.uniform(link.min_latency, link.max_latency)
+        self._counters["deliveries_sent"] += 1
+        self._schedule(self.now + lat, self._deliver, origin, dest,
+                       block, payload)
 
     def _deliver(self, origin: int, dest: int, block: Block,
                  payload: BlockPayload) -> None:
         node = self._nodes.get(dest)
         if node is None:
+            if dest in self._crashed:
+                self._counters["drops_crash"] += 1
             return
         if not self._connected(origin, dest):
             # the link went down while the message was in flight
@@ -482,6 +593,11 @@ class Sim:
             return
         self._counters["syncs"] += 1
         blocks: List[Block] = list(src.ledger.blocks)
+        if not blocks:
+            # nothing to pull (an empty candidate is a caller bug to
+            # consider_chain, not a losing fork)
+            self._counters["sync_rejects"] += 1
+            return
         payloads = src.chain_payloads()
         adv = self._adversaries.get(origin)
         if adv is not None:
@@ -565,9 +681,86 @@ class Sim:
 
     def _release(self, nid: int) -> None:
         adv = self._adversaries.get(nid)
-        if isinstance(adv, WithholdingMiner):
+        if adv is not None and hasattr(adv, "withholding"):
             adv.withholding = False
         self._announce(nid)
+
+    # -- crash-fault handlers -----------------------------------------
+    def _crash(self, nid: int) -> None:
+        node = self._nodes.pop(nid, None)
+        if node is None:
+            return
+        self._counters["crashes"] += 1
+        # the in-memory node object is gone; only the journal survives
+        self._crashed[nid] = node.store
+
+    def _restart(self, nid: int, factory: Callable[[], Node]) -> None:
+        if nid not in self._crashed:
+            return
+        store = self._crashed.pop(nid)
+        shell = factory()
+        if shell.node_id != nid:
+            raise ValueError(
+                f"restart factory built node_id={shell.node_id}, "
+                f"expected {nid}")
+        seen_wl: Dict[int, int] = {}
+        for other in self._nodes.values():
+            for wl in other.workloads.values():
+                seen_wl[id(wl)] = other.node_id
+        self._check_node(shell, seen_wl)
+        if store is None:
+            node = shell           # diskless node: restarts empty
+        else:
+            node = Node.recover(store, node=shell)
+        self._nodes[nid] = node
+        self._enroll(node)
+        self._group.setdefault(nid, 0)
+        self._counters["recoveries"] += 1
+        rec = node.last_recovery
+        if rec is not None:
+            self._counters["truncated_records"] += rec.truncated_records
+        # pull a connected peer to resync the tail lost while down (the
+        # same bootstrap path a joiner uses)
+        peers = [p for p in sorted(self._nodes)
+                 if p != nid and self._connected(nid, p)]
+        if peers:
+            src = self._rng.choice(peers)
+            self._schedule(self.now + self.config.link.sync_latency,
+                           self._sync, src, nid)
+
+    def _corrupt_store(self, nid: int, mode: str) -> None:
+        store = self._crashed.get(nid)
+        if store is None:
+            node = self._nodes.get(nid)
+            store = node.store if node is not None else None
+        if store is None:
+            return
+        if store.corrupt_tail(self._rng, mode=mode):
+            self._counters["corruptions"] += 1
+
+    def _long_range_rewrite(self, nid: int, adv: LongRangeRewriter) -> None:
+        """Rewrite the adversary's own chain from ``fork_height`` and
+        schedule the private re-mining run.  This is surgery on the
+        adversary's internals, not fork choice — it is *making* an
+        alternate history, and its credit book is garbage afterwards
+        (nothing honest ever reads an adversary's book)."""
+        node = self._nodes.get(nid)
+        if node is None:
+            return
+        fork = min(adv.fork_height, node.ledger.height)
+        del node.ledger.blocks[fork:]
+        node._payloads = {h: p for h, p in node._payloads.items()
+                          if h < fork}
+        node._hash_index = {b.block_hash for b in node.ledger.blocks}
+        keep = [s for s in node._snapshots if s.height <= fork]
+        node._snapshots = collections.deque(
+            keep, maxlen=node._snapshots.maxlen)
+        adv.withholding = True
+        t = self.now
+        for _ in range(adv.length):
+            t += adv.every
+            self._schedule(t, self._mine, nid, "classic")
+        self._schedule(t + adv.every, self._release, nid)
 
     # -- run + report -------------------------------------------------
     def run(self, until: Optional[float] = None) -> SimReport:
@@ -644,6 +837,9 @@ class Sim:
                         for k in keys)
                 divergence = max(divergence, d)
 
+        fin_heights = [n.finalized_height for n in honest]
+        fin_div = (max(fin_heights) - min(fin_heights)
+                   if len(fin_heights) > 1 else 0)
         c = self._counters
         return SimReport(
             seed=self.config.seed,
@@ -660,11 +856,21 @@ class Sim:
             drops_random=c["drops_random"],
             drops_partition=c["drops_partition"],
             spam_sent=c["spam_sent"],
+            retries=c["retries"],
+            drops_final=c["drops_final"],
+            drops_crash=c["drops_crash"],
             syncs=c["syncs"],
             reorgs=c["reorgs"],
             sync_rejects=c["sync_rejects"],
             joins=c["joins"],
             fork_depth_hist=dict(sorted(self._fork_depths.items())),
+            crashes=c["crashes"],
+            recoveries=c["recoveries"],
+            truncated_records=c["truncated_records"],
+            corruptions=c["corruptions"],
+            finality_rejects=sum(n.finality_rejects for n in honest),
+            finalized_heights=fin_heights,
+            finalized_divergence=fin_div,
             canonical_height=len(canon_hashes),
             orphans=orphans,
             orphan_rate=orphans / max(len(self._mined), 1),
@@ -798,13 +1004,72 @@ def heterogeneous_scenario(n_honest: int = 3, seed: int = 0, *,
     return sim
 
 
+def chaos_scenario(n_nodes: int = 16, seed: int = 0, *,
+                   n_blocks: int = 24,
+                   classic_arg_bits: int = 6,
+                   confirmation_depth: int = 6,
+                   snapshot_interval: int = 4,
+                   snapshot_ring: int = 4) -> Sim:
+    """The crash-fault acceptance scenario: ``n_nodes`` honest nodes,
+    each with a durable journal (``ChainStore``) and finality
+    (``confirmation_depth``), round-robin mine ``n_blocks`` classic
+    blocks while the sim injects every fault class at once:
+
+    * node 3 crashes mid-run and restarts — ``Node.recover`` replays
+      its journal and a peer sync supplies the lost tail;
+    * node 5 crashes, its journal tail is **bit-flipped**, and it
+      restarts — recovery truncates the damage gracefully (counted in
+      ``truncated_records``) and resyncs, never raising;
+    * a ``LongRangeRewriter`` (node ``n_nodes``) re-mines a longer
+      alternate history from behind the finality horizon and announces
+      it — every honest node refuses it at the finality fence.
+
+    Honest nodes must converge with ``finalized_divergence == 0`` and a
+    bit-identical ``SimReport`` across repeated seeded runs."""
+    def shell(i: int) -> Node:
+        # a restart factory must NOT attach a store — Node.recover
+        # adopts the crashed node's surviving journal into the shell
+        return Node(node_id=i, classic_arg_bits=classic_arg_bits,
+                    confirmation_depth=confirmation_depth,
+                    snapshot_interval=snapshot_interval,
+                    snapshot_ring=snapshot_ring)
+
+    def fresh(i: int) -> Node:
+        return Node(node_id=i, classic_arg_bits=classic_arg_bits,
+                    confirmation_depth=confirmation_depth,
+                    snapshot_interval=snapshot_interval,
+                    snapshot_ring=snapshot_ring, store=ChainStore())
+
+    rid = n_nodes
+    rewriter = Node(node_id=rid, classic_arg_bits=classic_arg_bits)
+    nodes = [fresh(i) for i in range(n_nodes)] + [rewriter]
+    t_last = 0.5 + 0.4 * (n_blocks - 1)
+    adv = LongRangeRewriter(rewrite_at=t_last + 1.0, fork_height=1,
+                            length=n_blocks + 4)
+    sim = Sim(nodes, SimConfig(seed=seed, max_events=400_000),
+              adversaries={rid: adv})
+    t = 0.5
+    for b in range(n_blocks):
+        sim.mine_at(t, b % n_nodes)
+        t += 0.4
+    sim.crash_at(2.05, 3 % n_nodes)
+    sim.restart_at(4.05, 3 % n_nodes, lambda: shell(3 % n_nodes))
+    sim.crash_at(5.05, 5 % n_nodes)
+    sim.corrupt_store_at(5.15, 5 % n_nodes, mode="bitflip")
+    sim.restart_at(6.55, 5 % n_nodes, lambda: shell(5 % n_nodes))
+    # final announce wave: any straggler pulls the canonical chain
+    for i in range(n_nodes):
+        sim.announce_at(t_last + 4.0, i)
+    return sim
+
+
 def _main() -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario",
                     choices=("partition", "adversarial", "throughput",
-                             "heterogeneous"),
+                             "heterogeneous", "chaos"),
                     default="partition")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--nodes", type=int, default=4,
@@ -821,6 +1086,8 @@ def _main() -> int:
     elif args.scenario == "heterogeneous":
         sim = heterogeneous_scenario(n_honest=max(args.nodes - 1, 2),
                                      seed=args.seed)
+    elif args.scenario == "chaos":
+        sim = chaos_scenario(n_nodes=max(args.nodes, 8), seed=args.seed)
     else:
         sim = adversarial_scenario(n_honest=max(args.nodes - 2, 1),
                                    seed=args.seed)
@@ -828,6 +1095,11 @@ def _main() -> int:
     print(json.dumps(dataclasses.asdict(report), indent=2, sort_keys=True))
     assert report.converged, "honest nodes failed to converge"
     assert report.credit_divergence == 0.0, "credit books diverged"
+    assert report.finalized_divergence == 0, "finalized heights diverged"
+    if args.scenario == "chaos":
+        assert report.recoveries >= 2, "expected two crash recoveries"
+        assert report.finality_rejects > 0, \
+            "long-range rewrite was not rejected at the finality fence"
     return 0
 
 
