@@ -711,6 +711,54 @@ def bench_chaos(n_nodes: int = 16, n_blocks: int = 24) -> dict:
             "finality_rejects": rep.finality_rejects}
 
 
+def bench_wire_relay(n_peers: int = 4, n_blocks: int = 6) -> dict:
+    """DESIGN §13: compact vs full-body relay over the deterministic
+    loopback wire.  Same peers, same seed, same chain — the only
+    difference is whether announces inline the payload body or carry
+    its 16-byte content checksum (bodies fetched on demand, re-gossip
+    deduplicated).  Bytes-on-wire and blocks/s for both; divergence
+    between the two chains, or compact failing to save bytes, is a
+    hard failure rather than a slow row."""
+    from repro.chain.net import loopback_scenario
+
+    schedule = ("classic",) * n_blocks
+    # first-touch warmup (suite construction, jit) so neither timed
+    # variant pays it
+    loopback_scenario(n_peers=2, seed=0, schedule=("classic",),
+                      oracle=False)
+    results = {}
+    for label, compact in (("compact", True), ("full_body", False)):
+        t0 = time.perf_counter()
+        rep = loopback_scenario(n_peers=n_peers, seed=0, compact=compact,
+                                schedule=schedule, oracle=False)
+        dt = time.perf_counter() - t0
+        if not rep["converged"]:
+            raise RuntimeError(f"wire_relay {label}: peers diverged")
+        results[label] = (rep, dt)
+        row(f"wire_relay.{label}", dt * 1e6,
+            f"bytes_on_wire={rep['bytes_on_wire']} "
+            f"blocks_per_s={n_blocks / dt:.1f} "
+            f"frames={rep['frames_delivered']}")
+    (c, dt_c), (f, dt_f) = results["compact"], results["full_body"]
+    if c["chain_digest"] != f["chain_digest"]:
+        raise RuntimeError("wire_relay: compact and full-body runs "
+                           "committed different chains")
+    if c["bytes_on_wire"] >= f["bytes_on_wire"]:
+        raise RuntimeError(
+            f"wire_relay: compact relay saved no bytes "
+            f"({c['bytes_on_wire']} vs {f['bytes_on_wire']})")
+    saving = 1.0 - c["bytes_on_wire"] / f["bytes_on_wire"]
+    row("wire_relay.saving", 0.0,
+        f"compact saves {saving:.0%} of wire bytes "
+        f"({c['bytes_on_wire']} vs {f['bytes_on_wire']})")
+    return {"n_peers": n_peers, "n_blocks": n_blocks,
+            "wire_relay_us": dt_c * 1e6,
+            "wire_relay_blocks_per_s": n_blocks / dt_c,
+            "wire_relay_compact_bytes": c["bytes_on_wire"],
+            "wire_relay_full_bytes": f["bytes_on_wire"],
+            "wire_relay_saving_frac": saving}
+
+
 def bench_roofline():
     """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
     files = sorted(glob.glob("experiments/dryrun/*__single.json"))
@@ -794,7 +842,7 @@ def check_smoke_regression(measured: dict) -> int:
         return 0
     failures = 0
     for key in ("merkle_commit_us_device", "verify_chain_batched_us",
-                "workload_suite_dock_verify_us"):
+                "workload_suite_dock_verify_us", "wire_relay_us"):
         base, got = baseline.get(key), measured.get(key)
         if base is None or got is None:
             continue
@@ -821,6 +869,7 @@ def _smoke_scale_metrics(train_section: bool = True,
         verify = bench_verify_pipeline(n_blocks=SMOKE_VERIFY_BLOCKS,
                                        full_arg_bits=SMOKE_VERIFY_ARG_BITS)
         suite = bench_workload_suite(**SMOKE_SUITE)
+        wire = bench_wire_relay()
     finally:
         _QUIET = False
     return {
@@ -831,6 +880,9 @@ def _smoke_scale_metrics(train_section: bool = True,
         "merkle_commit_us_device": commit["merkle_commit"]["us_device"],
         "verify_chain_batched_us": verify["us_batched"],
         "workload_suite_dock_verify_us": suite["docking"]["us_verify"],
+        "wire_relay_us": wire["wire_relay_us"],
+        "wire_relay_compact_bytes": wire["wire_relay_compact_bytes"],
+        "wire_relay_full_bytes": wire["wire_relay_full_bytes"],
     }
 
 
@@ -864,6 +916,7 @@ def main(smoke: bool = False) -> None:
     payload["sim_gossip"] = bench_sim_scale()
     payload["recovery"] = bench_recovery()
     payload["sim_chaos"] = bench_chaos()
+    payload["wire_relay"] = bench_wire_relay()
     payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
                                                      quiet=True)
     bench_sim_gossip()

@@ -4,10 +4,10 @@
 Three invariants keep the docs honest:
 
 1. **API coverage** — every name in the ``__all__`` of ``repro``,
-   ``repro.chain``, ``repro.chain.workloads`` and ``repro.core`` has a
-   ``### `module.name` `` heading in ``docs/api.md`` (a new export
-   without a doc entry fails CI; a doc entry for a removed export
-   fails too).
+   ``repro.chain``, ``repro.chain.net``, ``repro.chain.workloads`` and
+   ``repro.core`` has a ``### `module.name` `` heading in
+   ``docs/api.md`` (a new export without a doc entry fails CI; a doc
+   entry for a removed export fails too).
 2. **Docs execute** — every ```` ```python ```` block in README.md and
    ``docs/workloads.md`` runs, in order, in one shared namespace per
    file (a doctest-style session: later blocks may use names defined
@@ -32,7 +32,8 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
-MODULES = ("repro", "repro.chain", "repro.chain.workloads", "repro.core")
+MODULES = ("repro", "repro.chain", "repro.chain.net",
+           "repro.chain.workloads", "repro.core")
 
 # every file under docs/ must appear here, mapped to how it is kept
 # honest: "blocks" (its ```python blocks execute in this script),

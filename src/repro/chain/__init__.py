@@ -31,12 +31,18 @@ retained state so long-running memory stays bounded.
 (certificate-asymmetric), GAN inversion (stateful grid refinement),
 and docking (consensus-bound data bundle) as first-class ``Workload``
 families; see ``docs/workloads.md`` for the authoring guide.
+
+``repro.chain.net`` takes nodes out-of-process: a signed typed wire
+protocol over the same canonical encoding as the journal, compact
+block relay, loopback and TCP transports, and a convergence oracle
+requiring wire-connected peers to reconverge bit-identically with the
+in-process ``Network`` (DESIGN.md §13).
 """
 from repro.chain.network import BroadcastResult, Network
 from repro.chain.node import (BlockReceipt, BlockRecord, Node, NodeState,
                               RecoveryReport, VerifyCache)
 from repro.chain.sim import LinkModel, Sim, SimConfig, SimReport
-from repro.chain.store import ChainStore
+from repro.chain.store import ChainStore, collect_jash_fns, payload_checksum
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, TrainingWorkload, Workload,
@@ -66,5 +72,7 @@ __all__ = [
     "VerifyCache",
     "Workload",
     "certificate_digest",
+    "collect_jash_fns",
+    "payload_checksum",
     "verify_chain_batched",
 ]

@@ -1,0 +1,78 @@
+"""``repro.chain.net`` — cross-process peer networking for PNPCoin
+nodes (DESIGN.md §13).
+
+Everything below ``repro.chain`` so far ran N ``Node`` objects in one
+interpreter (``Network``, ``Sim``).  This package takes them out of
+process without touching consensus:
+
+* ``messages`` — the typed, versioned wire catalogue (HELLO, ANNOUNCE,
+  GET_HEADERS, TIP, GET_BODIES, BODIES), framed with the journal's
+  ``type | length | body | sha256[:16]`` discipline and carrying the
+  canonical ``encode_block`` / ``encode_payload`` bytes as the body
+  format — the disk format *is* the wire format.
+* ``identity`` — Ed25519 peer identities (pure-Python RFC 8032; no
+  third-party crypto dependency): every ANNOUNCE is origin-signed, so
+  ``BlockPayload.origin`` is cryptographically bound to the sender.
+* ``transport`` — a deterministic seeded loopback hub (tests, sim,
+  benches) and real asyncio TCP, both with retry/backoff and
+  malformed-frame quarantine behind a never-raising decoder.
+* ``peer`` — ``PeerNode``: sans-IO protocol logic driving one
+  unmodified ``Node`` with BIP-152-style compact relay (header +
+  content checksum announces; bodies fetched by checksum on demand;
+  already-seen payloads never cross the wire twice).
+
+The correctness contract is the **convergence oracle**: peers mining
+over the wire — two OS processes over TCP (``python -m
+repro.chain.net --demo``) or N loopback peers
+(``loopback_scenario``) — must reconverge **bit-identically** with the
+in-process ``Network`` on the same seeds: tips, ledgers, and credit
+books byte-for-byte.
+
+Run the two-process TCP convergence demo (used by CI)::
+
+    PYTHONPATH=src python -m repro.chain.net --demo
+"""
+from repro.chain.net.identity import (KeyRing, PeerIdentity,
+                                      SignedAnnounce, ed25519_public_key,
+                                      ed25519_sign, ed25519_verify,
+                                      make_announce, make_identities)
+from repro.chain.net.messages import (MAX_BODY, PROTOCOL_VERSION, WIRE_MAGIC,
+                                      Announce, Bodies, FrameBuffer,
+                                      GetBodies, GetHeaders, Hello, Message,
+                                      Tip, decode_message, encode_message)
+from repro.chain.net.peer import (PeerNode, PeerStats, chain_digest,
+                                  loopback_scenario)
+from repro.chain.net.transport import (LoopbackHub, LoopbackPort,
+                                       TcpTransport, WireStats)
+
+__all__ = [
+    "Announce",
+    "Bodies",
+    "FrameBuffer",
+    "GetBodies",
+    "GetHeaders",
+    "Hello",
+    "KeyRing",
+    "LoopbackHub",
+    "LoopbackPort",
+    "MAX_BODY",
+    "Message",
+    "PROTOCOL_VERSION",
+    "PeerIdentity",
+    "PeerNode",
+    "PeerStats",
+    "SignedAnnounce",
+    "TcpTransport",
+    "Tip",
+    "WIRE_MAGIC",
+    "WireStats",
+    "chain_digest",
+    "decode_message",
+    "ed25519_public_key",
+    "ed25519_sign",
+    "ed25519_verify",
+    "encode_message",
+    "loopback_scenario",
+    "make_announce",
+    "make_identities",
+]

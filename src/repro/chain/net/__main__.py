@@ -1,0 +1,221 @@
+"""``python -m repro.chain.net --demo`` — the two-OS-process TCP
+convergence oracle (DESIGN.md §13, run by CI's examples-smoke).
+
+The parent process listens on an ephemeral TCP port, spawns a child
+interpreter (``--role child``), and the two mine the heterogeneous
+workload suite round-robin over real TCP with signed compact relay
+(parent mines even heights, child odd).  When both reach the target
+height the child prints its canonical chain digest and credit book;
+the parent then mines the *same* schedule on an in-process ``Network``
+with the same seeds and requires all three — parent, child, oracle —
+to be bit-identical.  Wall-clock is bounded by ``--timeout``.
+
+Exit status 0 iff the chains converged AND matched the in-process
+oracle.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.chain.net.identity import make_identities
+from repro.chain.net.peer import (_SUITE_SCHEDULE, PeerNode, _suite_node,
+                                  chain_digest)
+from repro.chain.net.transport import TcpTransport
+
+_RESULT_PREFIX = "RESULT "
+
+
+def _build_peer(idx: int, *, suite_seed: int) -> PeerNode:
+    identities, ring = make_identities(2)
+    node = _suite_node(idx, suite_seed=suite_seed, keyring=ring)
+    return PeerNode(node, identities[idx], ring, compact=True)
+
+
+async def _mine_loop(peer: PeerNode, transport: TcpTransport, idx: int,
+                     schedule, deadline: float) -> None:
+    """Round-robin over TCP: mine when the tip height is ours, else let
+    the reader tasks advance the chain.  After reaching the target,
+    keep serving body fetches until the other side reports the target
+    height too (its last block may still need our bodies)."""
+    loop = asyncio.get_running_loop()
+    target = len(schedule)
+    last_hello = 0.0
+    last_height = -1
+    while True:
+        if loop.time() > deadline:
+            raise TimeoutError(
+                f"peer {idx} stuck at height {peer.node.ledger.height}")
+        h = peer.node.ledger.height
+        if h != last_height:
+            # announce every height change at once: a chain pull can
+            # jump several heights in one event, and the peer must see
+            # the final height before we are allowed to exit — a timer
+            # alone races with shutdown
+            last_height = h
+            last_hello = loop.time()
+            peer.broadcast_hello()
+            await transport.drain()
+        if h >= target and max(peer.peer_heights.values(),
+                               default=0) >= target:
+            peer.broadcast_hello()       # parting beacon: peer exits too
+            await transport.drain()
+            return
+        now = loop.time()
+        if now - last_hello > 0.2:
+            last_hello = now
+            peer.broadcast_hello()       # height beacon + resync trigger
+            await transport.drain()
+        if h < target and h % 2 == idx:
+            peer.mine_and_announce(schedule[h])
+            await transport.drain()
+        else:
+            await asyncio.sleep(0.02)
+
+
+async def _run_child(port: int, *, suite_seed: int, timeout: float,
+                     schedule) -> dict:
+    peer = _build_peer(1, suite_seed=suite_seed)
+    transport = TcpTransport()
+    peer.attach(transport)
+    await transport.connect("127.0.0.1", port)
+    deadline = asyncio.get_running_loop().time() + timeout
+    await _mine_loop(peer, transport, 1, schedule, deadline)
+    await transport.drain()
+    report = {
+        "role": "child",
+        "height": peer.node.ledger.height,
+        "chain_digest": chain_digest(peer.node),
+        "book": sorted(peer.node.book.balances.items()),
+        "chain_valid": peer.node.ledger.verify_chain(),
+        "stats": peer.stats.to_dict(),
+        "wire": transport.stats.to_dict(),
+    }
+    # linger a moment so late body fetches from the parent still land
+    await asyncio.sleep(0.3)
+    await transport.close()
+    return report
+
+
+async def _run_parent(*, suite_seed: int, timeout: float,
+                      verbose: bool, schedule) -> int:
+    t0 = time.perf_counter()
+    peer = _build_peer(0, suite_seed=suite_seed)
+    transport = TcpTransport()
+    peer.attach(transport)
+    port = await transport.listen()
+    child = subprocess.Popen(
+        [sys.executable, "-m", "repro.chain.net", "--role", "child",
+         "--port", str(port), "--suite-seed", str(suite_seed),
+         "--timeout", str(timeout), "--schedule", ",".join(schedule)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env=dict(os.environ))
+    try:
+        deadline = asyncio.get_running_loop().time() + timeout
+        await _mine_loop(peer, transport, 0, schedule, deadline)
+        await transport.drain()
+        out, _ = await asyncio.get_running_loop().run_in_executor(
+            None, lambda: child.communicate(timeout=timeout))
+    except BaseException:
+        if child.poll() is None:
+            child.kill()
+        try:
+            dump, _ = child.communicate(timeout=10)
+            print(f"--- child output ---\n{dump}", file=sys.stderr)
+        except Exception:
+            pass
+        raise
+    finally:
+        if child.poll() is None:
+            child.kill()
+        await transport.close()
+    child_report = None
+    for line in (out or "").splitlines():
+        if line.startswith(_RESULT_PREFIX):
+            child_report = json.loads(line[len(_RESULT_PREFIX):])
+    if child_report is None:
+        print(out or "", file=sys.stderr)
+        print("FAIL: child produced no RESULT line", file=sys.stderr)
+        return 1
+
+    # the in-process oracle: same seeds, same schedule, one interpreter
+    from repro.chain.network import Network
+    identities, ring = make_identities(2)
+    net = Network.create(
+        2, node_factory=lambda i: _suite_node(
+            i, suite_seed=suite_seed, keyring=ring),
+        identities=identities)
+    net.run(len(schedule), list(schedule))
+    oracle_digest = chain_digest(net.nodes[0])
+    oracle_book = sorted(net.nodes[0].book.balances.items())
+
+    parent_digest = chain_digest(peer.node)
+    parent_book = sorted(peer.node.book.balances.items())
+    ok = (parent_digest == child_report["chain_digest"] == oracle_digest
+          and parent_book == [tuple(e) for e in child_report["book"]]
+          == oracle_book
+          and peer.node.ledger.verify_chain()
+          and child_report["chain_valid"])
+    report = {
+        "demo": "two-process TCP convergence",
+        "n_blocks": len(schedule),
+        "height": peer.node.ledger.height,
+        "converged": parent_digest == child_report["chain_digest"],
+        "oracle_match": ok,
+        "chain_digest": parent_digest,
+        "oracle_digest": oracle_digest,
+        "elapsed_s": round(time.perf_counter() - t0, 3),
+        "parent_stats": peer.stats.to_dict(),
+        "child_stats": child_report["stats"],
+        "parent_wire": transport.stats.to_dict(),
+        "child_wire": child_report["wire"],
+    }
+    if verbose:
+        print(json.dumps(report, indent=2))
+    else:
+        print(json.dumps({k: report[k] for k in
+                          ("converged", "oracle_match", "height",
+                           "elapsed_s")}))
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--demo", action="store_true",
+                    help="run the two-process TCP convergence demo")
+    ap.add_argument("--role", choices=("parent", "child"),
+                    default="parent")
+    ap.add_argument("--port", type=int, default=0,
+                    help="(child) parent's listen port")
+    ap.add_argument("--suite-seed", type=int, default=7)
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="overall wall-clock bound (generous: first-run "
+                         "XLA compilation of the workload kernels can "
+                         "dominate)")
+    ap.add_argument("--schedule", default=",".join(_SUITE_SCHEDULE),
+                    help="comma-separated workload families to mine, "
+                         "round-robin (default: the full heterogeneous "
+                         "suite)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    schedule = tuple(f for f in args.schedule.split(",") if f)
+    if args.role == "child":
+        report = asyncio.run(
+            _run_child(args.port, suite_seed=args.suite_seed,
+                       timeout=args.timeout, schedule=schedule))
+        print(_RESULT_PREFIX + json.dumps(report), flush=True)
+        return 0
+    if not args.demo:
+        ap.error("nothing to do: pass --demo (or --role child)")
+    return asyncio.run(
+        _run_parent(suite_seed=args.suite_seed, timeout=args.timeout,
+                    verbose=args.verbose, schedule=schedule))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

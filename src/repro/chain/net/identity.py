@@ -1,0 +1,333 @@
+"""``repro.chain.net.identity`` — signed peer identities.
+
+A peer is its keypair: the peer id is the SHA-256 hash of the Ed25519
+public key, and every block ANNOUNCE carries an origin signature so
+``BlockPayload.origin`` is *cryptographically bound* to the key that
+mined the block instead of trusted from the transport (the in-process
+``Network`` passed the sender index as a stand-in — DESIGN.md §13).
+
+Ed25519 is implemented here from RFC 8032 directly on ``hashlib`` —
+the container has no third-party crypto package, and the reference
+scalar arithmetic is ~80 lines of bigint math.  It is the *slow*
+textbook implementation (no constant-time guarantees, ~ms per
+operation); that is fine for a research chain signing one announce per
+block, and it is bit-compatible with any standard Ed25519 verifier.
+
+Trust model: the ``KeyRing`` (node id -> public key) is distributed
+out of band, like the genesis block — consensus membership is not
+negotiated over the wire.  ``Hello`` introduces a peer's key but never
+*registers* it; a signature only counts if it verifies under the key
+the ring already holds for the claimed origin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import struct
+from typing import Dict, Iterable, Optional, Tuple
+
+from repro.chain.store import encode_block, encode_payload, payload_checksum
+from repro.chain.workload import BlockPayload
+from repro.core.ledger import Block
+
+__all__ = [
+    "KeyRing",
+    "PeerIdentity",
+    "SignedAnnounce",
+    "ed25519_public_key",
+    "ed25519_sign",
+    "ed25519_verify",
+    "make_announce",
+    "make_identities",
+]
+
+# ---------------------------------------------------------------------------
+# RFC 8032 Ed25519 on stdlib hashlib (reference/slow implementation)
+# ---------------------------------------------------------------------------
+
+_P = 2 ** 255 - 19
+_L = 2 ** 252 + 27742317777372353535851937790883648493
+_D = (-121665 * pow(121666, _P - 2, _P)) % _P
+_SQRT_M1 = pow(2, (_P - 1) // 4, _P)
+
+# extended homogeneous coordinates (X, Y, Z, T), T = XY/Z
+_Pt = Tuple[int, int, int, int]
+_NEUTRAL: _Pt = (0, 1, 1, 0)
+
+
+def _pt_add(p: _Pt, q: _Pt) -> _Pt:
+    # add-2008-hwcd-3: complete (works for doubling too)
+    x1, y1, z1, t1 = p
+    x2, y2, z2, t2 = q
+    a = (y1 - x1) * (y2 - x2) % _P
+    b = (y1 + x1) * (y2 + x2) % _P
+    c = 2 * t1 * t2 * _D % _P
+    d = 2 * z1 * z2 % _P
+    e, f, g, h = b - a, d - c, d + c, b + a
+    return (e * f % _P, g * h % _P, f * g % _P, e * h % _P)
+
+
+def _pt_mul(s: int, p: _Pt) -> _Pt:
+    q = _NEUTRAL
+    while s:
+        if s & 1:
+            q = _pt_add(q, p)
+        p = _pt_add(p, p)
+        s >>= 1
+    return q
+
+
+def _pt_eq(p: _Pt, q: _Pt) -> bool:
+    # cross-multiply out the projective denominators
+    return ((p[0] * q[2] - q[0] * p[2]) % _P == 0
+            and (p[1] * q[2] - q[1] * p[2]) % _P == 0)
+
+
+def _x_from_y(y: int, sign: int) -> Optional[int]:
+    xx = (y * y - 1) * pow(_D * y * y + 1, _P - 2, _P) % _P
+    x = pow(xx, (_P + 3) // 8, _P)
+    if (x * x - xx) % _P != 0:
+        x = x * _SQRT_M1 % _P
+    if (x * x - xx) % _P != 0:
+        return None
+    if x == 0 and sign:
+        return None
+    if x % 2 != sign:
+        x = _P - x
+    return x
+
+
+_BY = 4 * pow(5, _P - 2, _P) % _P
+_BX = _x_from_y(_BY, 0)
+_B: _Pt = (_BX, _BY, 1, _BX * _BY % _P)
+
+
+def _pt_compress(p: _Pt) -> bytes:
+    zi = pow(p[2], _P - 2, _P)
+    x = p[0] * zi % _P
+    y = p[1] * zi % _P
+    return int.to_bytes(y | ((x & 1) << 255), 32, "little")
+
+
+def _pt_decompress(s: bytes) -> Optional[_Pt]:
+    if len(s) != 32:
+        return None
+    n = int.from_bytes(s, "little")
+    sign = n >> 255
+    y = n & ((1 << 255) - 1)
+    if y >= _P:
+        return None
+    x = _x_from_y(y, sign)
+    if x is None:
+        return None
+    return (x, y, 1, x * y % _P)
+
+
+def _sha512(*parts: bytes) -> bytes:
+    h = hashlib.sha512()
+    for part in parts:
+        h.update(part)
+    return h.digest()
+
+
+def _clamp(b: bytes) -> int:
+    a = int.from_bytes(b, "little")
+    a &= (1 << 254) - 8
+    a |= 1 << 254
+    return a
+
+
+def ed25519_public_key(seed: bytes) -> bytes:
+    """The 32-byte public key of a 32-byte private seed (RFC 8032)."""
+    if len(seed) != 32:
+        raise ValueError(f"Ed25519 seed must be 32 bytes, got {len(seed)}")
+    a = _clamp(_sha512(seed)[:32])
+    return _pt_compress(_pt_mul(a, _B))
+
+
+def ed25519_sign(seed: bytes, message: bytes) -> bytes:
+    """Sign ``message`` with the key derived from ``seed`` -> 64 bytes."""
+    h = _sha512(seed)
+    a = _clamp(h[:32])
+    pub = _pt_compress(_pt_mul(a, _B))
+    r = int.from_bytes(_sha512(h[32:], message), "little") % _L
+    big_r = _pt_compress(_pt_mul(r, _B))
+    k = int.from_bytes(_sha512(big_r, pub, message), "little") % _L
+    s = (r + k * a) % _L
+    return big_r + s.to_bytes(32, "little")
+
+
+def ed25519_verify(pubkey: bytes, message: bytes, signature: bytes) -> bool:
+    """True iff ``signature`` is a valid Ed25519 signature of
+    ``message`` under ``pubkey``.  Never raises — malformed keys,
+    non-canonical scalars, and off-curve points all return False."""
+    if len(signature) != 64 or len(pubkey) != 32:
+        return False
+    a = _pt_decompress(pubkey)
+    big_r = _pt_decompress(signature[:32])
+    if a is None or big_r is None:
+        return False
+    s = int.from_bytes(signature[32:], "little")
+    if s >= _L:
+        return False
+    k = int.from_bytes(_sha512(signature[:32], pubkey, message),
+                       "little") % _L
+    return _pt_eq(_pt_mul(s, _B), _pt_add(big_r, _pt_mul(k, a)))
+
+
+# ---------------------------------------------------------------------------
+# identities and the key ring
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerIdentity:
+    """One peer's keypair.  ``peer_id`` (the wire-level name) is the
+    hex SHA-256 hash of the public key — knowing an id proves nothing,
+    producing a signature that verifies under its preimage does."""
+    node_id: int
+    seed: bytes
+    pubkey: bytes
+
+    @classmethod
+    def generate(cls, node_id: int) -> "PeerIdentity":
+        seed = os.urandom(32)
+        return cls(node_id=node_id, seed=seed,
+                   pubkey=ed25519_public_key(seed))
+
+    @classmethod
+    def from_seed(cls, node_id: int, seed) -> "PeerIdentity":
+        """Deterministic identity for tests, sims, and the two-process
+        demo (both processes derive the same ring without exchanging
+        keys).  ``seed`` is 32 bytes or an int expanded through
+        SHA-256.  Deterministic seeds are a *fixture*, not security."""
+        if isinstance(seed, int):
+            seed = hashlib.sha256(
+                b"pnpcoin-peer-seed|" + struct.pack("<q", seed)).digest()
+        if len(seed) != 32:
+            raise ValueError(f"seed must be 32 bytes, got {len(seed)}")
+        return cls(node_id=node_id, seed=seed,
+                   pubkey=ed25519_public_key(seed))
+
+    @property
+    def peer_id(self) -> str:
+        return hashlib.sha256(self.pubkey).hexdigest()
+
+    def sign(self, message: bytes) -> bytes:
+        return ed25519_sign(self.seed, message)
+
+
+class KeyRing:
+    """Out-of-band registry: node id -> Ed25519 public key.  A
+    signature binds an origin only if it verifies under the key the
+    ring holds for that origin — an unknown origin never verifies."""
+
+    def __init__(self, keys: Optional[Dict[int, bytes]] = None) -> None:
+        self._keys: Dict[int, bytes] = dict(keys or {})
+
+    @classmethod
+    def of(cls, identities: Iterable[PeerIdentity]) -> "KeyRing":
+        return cls({i.node_id: i.pubkey for i in identities})
+
+    def register(self, node_id: int, pubkey: bytes) -> None:
+        have = self._keys.get(node_id)
+        if have is not None and have != pubkey:
+            raise ValueError(
+                f"node {node_id} already registered with a different key")
+        self._keys[node_id] = pubkey
+
+    def pubkey_of(self, node_id: int) -> Optional[bytes]:
+        return self._keys.get(node_id)
+
+    def __contains__(self, node_id: int) -> bool:
+        return node_id in self._keys
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+
+def make_identities(n: int, *, seed: int = 0
+                    ) -> Tuple[Dict[int, PeerIdentity], KeyRing]:
+    """``n`` deterministic identities (node ids ``0..n-1``) plus the
+    ring holding all their public keys — the test/demo fixture for a
+    closed consensus group."""
+    ids = {i: PeerIdentity.from_seed(i, seed * 1_000_003 + i)
+           for i in range(n)}
+    return ids, KeyRing.of(ids.values())
+
+
+# ---------------------------------------------------------------------------
+# origin-signed block announces
+# ---------------------------------------------------------------------------
+
+_ANN_DOMAIN = b"PNPANN1"
+
+
+def _announce_message(origin: int, header: bytes, checksum: bytes) -> bytes:
+    # domain-separated; the header is hashed so the signed message stays
+    # fixed-size however large the block header grows
+    return (_ANN_DOMAIN + struct.pack("<q", origin)
+            + hashlib.sha256(header).digest() + checksum)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignedAnnounce:
+    """The authenticated core of a block announce: the canonical header
+    bytes, the payload body checksum (its content address), the claimed
+    origin, and the origin's signature over all three.  ``verify`` is
+    the one origin-binding rule both the in-process ``Network`` and
+    ``PeerNode`` enforce (``Node.receive`` calls it when the node holds
+    a ``keyring``)."""
+    header: bytes            # encode_block(block)
+    checksum: bytes          # payload_checksum(payload), 16 bytes
+    origin: int
+    pubkey: bytes
+    signature: bytes
+
+    def verify_origin(self, keyring: KeyRing) -> bool:
+        """Signature + ring check only (no body needed): the announce
+        is signed by the key the ring holds for its claimed origin."""
+        expected = keyring.pubkey_of(self.origin)
+        if expected is None or expected != self.pubkey:
+            return False
+        return ed25519_verify(
+            self.pubkey,
+            _announce_message(self.origin, self.header, self.checksum),
+            self.signature)
+
+    def verify(self, keyring: KeyRing, block: Block,
+               payload: BlockPayload) -> bool:
+        """Full origin binding for a concrete (block, payload) pair:
+        the signed header is *this* block, the signed checksum is
+        *this* payload's canonical encoding, the payload claims the
+        signing origin, and the signature verifies under the ring's
+        key for that origin."""
+        if payload.origin != self.origin:
+            return False
+        if self.header != encode_block(block):
+            return False
+        if self.checksum != payload_checksum(payload):
+            return False
+        return self.verify_origin(keyring)
+
+
+def make_announce(identity: PeerIdentity, block: Block,
+                  payload: BlockPayload) -> SignedAnnounce:
+    """Sign a freshly mined block: binds (header, payload checksum,
+    origin) under the miner's key.  Relayers pass the announce along
+    unchanged — re-signing would break the origin binding."""
+    header = encode_block(block)
+    checksum = payload_checksum(payload)
+    return SignedAnnounce(
+        header=header, checksum=checksum, origin=identity.node_id,
+        pubkey=identity.pubkey,
+        signature=identity.sign(
+            _announce_message(identity.node_id, header, checksum)))
+
+
+def _encode_payload_body(payload: BlockPayload) -> bytes:
+    """Canonical wire body of a payload (alias kept next to
+    ``payload_checksum`` so the pair reads as one content-address
+    scheme)."""
+    return encode_payload(payload)

@@ -1,0 +1,396 @@
+"""``repro.chain.net.messages`` — the typed, versioned wire catalogue.
+
+Six message types carry the whole peer protocol (DESIGN.md §13):
+
+    HELLO        version, node id, pubkey, chain height (introduction
+                 + liveness beacon)
+    ANNOUNCE     compact block relay: canonical header bytes + payload
+                 body checksum + the origin's signature; ``body`` is
+                 optionally inlined (full-body relay, the baseline the
+                 ``wire_relay`` bench compares against)
+    GET_HEADERS  chain pull: give me your headers from a height
+    TIP          the reply: (header bytes, body checksum) per height
+    GET_BODIES   fetch payload bodies by content checksum
+    BODIES       the bodies (canonical ``encode_payload`` bytes)
+
+Framing reuses the journal's discipline (``chain/store.py``)::
+
+    magic "PNPW" | u8 msgtype | u32 body_len (LE) | body | sha256[:16]
+
+with two wire-specific hardenings: the checksum covers ``msgtype`` as
+well as the body (a flipped type byte must not re-frame one message as
+another), and a per-frame magic gives the stream decoder a resync
+point after damage.  Bodies are encoded with the same ``_W``/``_R``
+canonical primitives the journal uses; block headers and payloads
+travel as ``encode_block``/``encode_payload`` bytes verbatim.
+
+Decoding **never raises** — ``decode_message`` returns ``None`` for
+anything damaged, and ``FrameBuffer`` (the stream reassembler behind
+the TCP transport) quarantines malformed frames and rescans for the
+next magic instead of dying, exactly the ``read_chain`` truncate-not-
+crash contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+# the journal's canonical encoding primitives ARE the wire body format
+# (one encoding discipline across disk and wire, by design)
+from repro.chain.store import _Corrupt, _R, _W
+from repro.chain.workload import ChainError
+
+__all__ = [
+    "Announce",
+    "Bodies",
+    "FrameBuffer",
+    "GetBodies",
+    "GetHeaders",
+    "Hello",
+    "MAX_BODY",
+    "PROTOCOL_VERSION",
+    "Tip",
+    "WIRE_MAGIC",
+    "decode_message",
+    "encode_message",
+]
+
+PROTOCOL_VERSION = 1
+WIRE_MAGIC = b"PNPW"
+MAX_BODY = 1 << 27            # 128 MiB: anything larger is damage/abuse
+CHECKSUM_LEN = 16
+
+MSG_HELLO = 1
+MSG_ANNOUNCE = 2
+MSG_GET_HEADERS = 3
+MSG_TIP = 4
+MSG_GET_BODIES = 5
+MSG_BODIES = 6
+
+_U8 = struct.Struct("<B")
+_U32 = struct.Struct("<I")
+_HEAD_LEN = len(WIRE_MAGIC) + 1 + 4      # magic | msgtype | body_len
+
+
+@dataclasses.dataclass(frozen=True)
+class Hello:
+    """Introduction + liveness beacon: who I am (claimed — only a
+    signature proves it), which protocol I speak, how tall my chain
+    is.  A peer at a greater height is a sync trigger."""
+    version: int
+    node_id: int
+    pubkey: bytes
+    height: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Announce:
+    """Compact relay of one block: canonical header bytes, the payload
+    body's content checksum, and the origin's signature binding both
+    to ``origin`` (see ``identity.SignedAnnounce``).  ``body`` is
+    ``None`` in compact mode — receivers fetch it by checksum only if
+    they don't already hold it — or inlined for full-body relay."""
+    header: bytes
+    checksum: bytes
+    origin: int
+    pubkey: bytes
+    signature: bytes
+    body: Optional[bytes] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GetHeaders:
+    from_height: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Tip:
+    """Chain-pull reply: ``entries[i]`` is (canonical header bytes,
+    payload body checksum) for height ``start + i`` up to the sender's
+    tip.  A zero checksum means the sender pruned that body at
+    finalization (the puller substitutes its own retained evidence
+    below the fork point — ``Node.consider_chain``)."""
+    start: int
+    entries: Tuple[Tuple[bytes, bytes], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GetBodies:
+    checksums: Tuple[bytes, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bodies:
+    bodies: Tuple[bytes, ...]
+
+
+Message = Union[Hello, Announce, GetHeaders, Tip, GetBodies, Bodies]
+
+
+# -- per-type body codecs ---------------------------------------------------
+
+
+def _enc_hello(w: _W, m: Hello) -> None:
+    w.u32(m.version)
+    w.i64(m.node_id)
+    w.bstr(m.pubkey)
+    w.u64(m.height)
+
+
+def _dec_hello(r: _R) -> Hello:
+    return Hello(version=r.u32(), node_id=r.i64(), pubkey=r.bstr(),
+                 height=r.u64())
+
+
+def _enc_announce(w: _W, m: Announce) -> None:
+    w.bstr(m.header)
+    w.bstr(m.checksum)
+    w.i64(m.origin)
+    w.bstr(m.pubkey)
+    w.bstr(m.signature)
+    w.opt(m.body, w.bstr)
+
+
+def _dec_announce(r: _R) -> Announce:
+    m = Announce(header=r.bstr(), checksum=r.bstr(), origin=r.i64(),
+                 pubkey=r.bstr(), signature=r.bstr(),
+                 body=r.opt(r.bstr))
+    if len(m.checksum) != CHECKSUM_LEN:
+        raise _Corrupt(f"announce checksum is {len(m.checksum)} bytes")
+    return m
+
+
+def _enc_get_headers(w: _W, m: GetHeaders) -> None:
+    w.u64(m.from_height)
+
+
+def _dec_get_headers(r: _R) -> GetHeaders:
+    return GetHeaders(from_height=r.u64())
+
+
+def _enc_tip(w: _W, m: Tip) -> None:
+    w.u64(m.start)
+    w.u32(len(m.entries))
+    for header, checksum in m.entries:
+        w.bstr(header)
+        w.bstr(checksum)
+
+
+def _dec_tip(r: _R) -> Tip:
+    start = r.u64()
+    n = r.u32()
+    entries = []
+    for _ in range(n):
+        header = r.bstr()
+        checksum = r.bstr()
+        if len(checksum) != CHECKSUM_LEN:
+            raise _Corrupt(f"tip checksum is {len(checksum)} bytes")
+        entries.append((header, checksum))
+    return Tip(start=start, entries=tuple(entries))
+
+
+def _enc_get_bodies(w: _W, m: GetBodies) -> None:
+    w.u32(len(m.checksums))
+    for ck in m.checksums:
+        w.bstr(ck)
+
+
+def _dec_get_bodies(r: _R) -> GetBodies:
+    n = r.u32()
+    cks = []
+    for _ in range(n):
+        ck = r.bstr()
+        if len(ck) != CHECKSUM_LEN:
+            raise _Corrupt(f"get_bodies checksum is {len(ck)} bytes")
+        cks.append(ck)
+    return GetBodies(checksums=tuple(cks))
+
+
+def _enc_bodies(w: _W, m: Bodies) -> None:
+    w.u32(len(m.bodies))
+    for body in m.bodies:
+        w.bstr(body)
+
+
+def _dec_bodies(r: _R) -> Bodies:
+    n = r.u32()
+    return Bodies(bodies=tuple(r.bstr() for _ in range(n)))
+
+
+_CODECS: Dict[type, Tuple[int, Callable]] = {
+    Hello: (MSG_HELLO, _enc_hello),
+    Announce: (MSG_ANNOUNCE, _enc_announce),
+    GetHeaders: (MSG_GET_HEADERS, _enc_get_headers),
+    Tip: (MSG_TIP, _enc_tip),
+    GetBodies: (MSG_GET_BODIES, _enc_get_bodies),
+    Bodies: (MSG_BODIES, _enc_bodies),
+}
+
+_DECODERS: Dict[int, Callable[[_R], Message]] = {
+    MSG_HELLO: _dec_hello,
+    MSG_ANNOUNCE: _dec_announce,
+    MSG_GET_HEADERS: _dec_get_headers,
+    MSG_TIP: _dec_tip,
+    MSG_GET_BODIES: _dec_get_bodies,
+    MSG_BODIES: _dec_bodies,
+}
+
+
+def _frame_checksum(msgtype: int, body: bytes) -> bytes:
+    # covers the type byte too: a bit-flip in msgtype must fail the
+    # frame, not re-parse the body as a different message
+    return hashlib.sha256(_U8.pack(msgtype) + body).digest()[:CHECKSUM_LEN]
+
+
+def encode_message(msg: Message) -> bytes:
+    """One complete wire frame:
+    ``magic | u8 type | u32 len | body | sha256(type|body)[:16]``."""
+    try:
+        msgtype, enc = _CODECS[type(msg)]
+    except KeyError:
+        raise ChainError(f"not a wire message: {type(msg).__name__}")
+    w = _W()
+    enc(w, msg)
+    body = bytes(w.buf)
+    return (WIRE_MAGIC + _U8.pack(msgtype) + _U32.pack(len(body))
+            + body + _frame_checksum(msgtype, body))
+
+
+def _decode_body(msgtype: int, body: bytes) -> Optional[Message]:
+    dec = _DECODERS.get(msgtype)
+    if dec is None:
+        return None
+    r = _R(body)
+    try:
+        msg = dec(r)
+        r.done()
+    except (_Corrupt, ChainError, struct.error, ValueError,
+            OverflowError):
+        return None
+    return msg
+
+
+def decode_message(frame: bytes) -> Optional[Message]:
+    """Decode exactly one frame.  Returns ``None`` — never raises — on
+    any damage: wrong magic, truncation, trailing bytes, oversized
+    length, checksum mismatch, unknown type, or an undecodable body."""
+    if len(frame) < _HEAD_LEN + CHECKSUM_LEN:
+        return None
+    if frame[:len(WIRE_MAGIC)] != WIRE_MAGIC:
+        return None
+    msgtype = frame[len(WIRE_MAGIC)]
+    (body_len,) = _U32.unpack_from(frame, len(WIRE_MAGIC) + 1)
+    if body_len > MAX_BODY:
+        return None
+    if len(frame) != _HEAD_LEN + body_len + CHECKSUM_LEN:
+        return None
+    body = frame[_HEAD_LEN:_HEAD_LEN + body_len]
+    if _frame_checksum(msgtype, body) != frame[_HEAD_LEN + body_len:]:
+        return None
+    return _decode_body(msgtype, body)
+
+
+class FrameBuffer:
+    """Stream reassembler with malformed-frame quarantine (what the
+    TCP transport reads through).  ``feed`` returns every complete,
+    valid message and never raises: a frame that fails its checksum,
+    declares an absurd length, or won't decode is *quarantined*
+    (counted, dropped) and the buffer rescans from the next per-frame
+    magic — so a corrupted byte costs one frame, not the connection.
+
+    ``feed(..., eof=True)`` (connection closed) additionally treats
+    any incomplete pending frame as damage and rescans the remainder,
+    recovering valid frames that a lying length prefix had swallowed.
+    """
+
+    def __init__(self, *, max_body: int = MAX_BODY) -> None:
+        self._buf = bytearray()
+        self.max_body = max_body
+        self.quarantined = 0          # damaged frames / garbage runs
+        self.decoded = 0
+
+    def pending(self) -> int:
+        """Bytes buffered but not yet framed."""
+        return len(self._buf)
+
+    def _resync(self) -> bool:
+        """Drop one damaged byte run: skip past the current (bad) magic
+        and cut to the next one.  Returns False when no further magic
+        exists (the tail keeps only a possible magic *prefix*)."""
+        i = self._buf.find(WIRE_MAGIC, 1)
+        if i >= 0:
+            del self._buf[:i]
+            return True
+        self._keep_magic_tail()
+        return False
+
+    def _keep_magic_tail(self) -> None:
+        # keep the longest buffer suffix that could begin a magic
+        for k in range(min(len(WIRE_MAGIC) - 1, len(self._buf)), 0, -1):
+            if self._buf[-k:] == WIRE_MAGIC[:k]:
+                del self._buf[:-k]
+                return
+        self._buf.clear()
+
+    def feed(self, data: bytes = b"", *, eof: bool = False
+             ) -> List[Message]:
+        self._buf += data
+        out: List[Message] = []
+        self._drain(out)
+        if eof:
+            # connection closed: whatever is left is damage, but a
+            # lying length prefix may have swallowed complete valid
+            # frames — force past the head magic and re-drain until
+            # nothing remains (each resync drops >= 1 byte, so this
+            # terminates)
+            while self._buf:
+                self.quarantined += 1
+                if not self._resync():
+                    self._buf.clear()
+                    break
+                self._drain(out)
+        return out
+
+    def _drain(self, out: List[Message]) -> None:
+        """Consume every complete frame at the buffer head; stop at the
+        first incomplete one (or a magic-prefix tail) to wait for more
+        bytes."""
+        while True:
+            buf = self._buf
+            if not buf:
+                return
+            head = bytes(buf[:len(WIRE_MAGIC)])
+            if not WIRE_MAGIC.startswith(head):
+                # garbage at the head: one quarantine event per run
+                self.quarantined += 1
+                if not self._resync():
+                    return
+                continue
+            if len(buf) < _HEAD_LEN:
+                return                      # plausible prefix: wait
+            msgtype = buf[len(WIRE_MAGIC)]
+            (body_len,) = _U32.unpack_from(buf, len(WIRE_MAGIC) + 1)
+            if body_len > self.max_body:
+                self.quarantined += 1
+                if not self._resync():
+                    return
+                continue
+            total = _HEAD_LEN + body_len + CHECKSUM_LEN
+            if len(buf) < total:
+                return                      # wait for the rest
+            body = bytes(buf[_HEAD_LEN:_HEAD_LEN + body_len])
+            check = bytes(buf[_HEAD_LEN + body_len:total])
+            if _frame_checksum(msgtype, body) != check:
+                self.quarantined += 1
+                if not self._resync():
+                    return
+                continue
+            msg = _decode_body(msgtype, body)
+            del self._buf[:total]           # frame consumed either way
+            if msg is None:
+                self.quarantined += 1       # well-framed, undecodable
+            else:
+                self.decoded += 1
+                out.append(msg)

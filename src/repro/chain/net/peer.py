@@ -1,0 +1,528 @@
+"""``repro.chain.net.peer`` — ``PeerNode``: an unmodified ``Node``
+driven over a wire.
+
+``PeerNode`` is sans-IO protocol logic: it consumes typed messages
+from any transport port (loopback or TCP — ``attach`` wires the
+callback) and sends replies through the same port.  The consensus
+object underneath is a stock ``Node`` — nothing about mining,
+verification, fork choice, finality, or the journal changes when a
+node goes out-of-process; that is the whole point of the oracle test
+(wire-connected peers must reconverge bit-identically with the
+in-process ``Network``).
+
+Compact relay (BIP-152 shaped, DESIGN.md §13): a freshly mined block
+is announced as *header + payload content checksum + origin
+signature*.  A receiver that already holds the body (from an earlier
+announce, a sync, or its own chain evidence) commits without fetching
+— already-seen payloads never cross the wire twice; otherwise it
+fetches the body by checksum (``GET_BODIES``/``BODIES``, served from
+the announcer's body store with a fallback scan over its journal/
+evidence payloads).  An announce that does not extend the local tip
+triggers a chain pull (``GET_HEADERS``/``TIP``) and ``Node.
+consider_chain`` fork choice, substituting locally held bodies per
+checksum so only the genuinely missing ones are transferred.
+
+``loopback_scenario`` is the N-peer deterministic convergence harness
+(the sim CLI's ``--scenario wire`` and the ``wire_relay`` bench run
+it); the two-OS-process TCP flavor lives in ``__main__``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.chain.net.identity import (KeyRing, PeerIdentity, SignedAnnounce,
+                                      make_announce, make_identities)
+from repro.chain.net.messages import (PROTOCOL_VERSION, Announce, Bodies,
+                                      GetBodies, GetHeaders, Hello, Message,
+                                      Tip)
+from repro.chain.net.transport import LoopbackHub
+from repro.chain.node import BlockReceipt, Node
+from repro.chain.store import (collect_jash_fns, decode_block, decode_payload,
+                               encode_block, encode_payload,
+                               payload_checksum)
+from repro.chain.workload import BlockPayload, ChainError
+from repro.core.ledger import Block
+
+__all__ = [
+    "PeerNode",
+    "PeerStats",
+    "chain_digest",
+    "loopback_scenario",
+]
+
+_ZERO_CK = b"\x00" * 16          # "body pruned at finalization" sentinel
+
+
+def chain_digest(node: Node) -> str:
+    """Canonical digest of a node's whole chain: SHA-256 over the
+    concatenated ``encode_block`` bytes, genesis -> tip.  Two nodes
+    share a digest iff their ledgers are bit-identical under the
+    canonical (timestamp-free) encoding — the oracle-parity
+    comparison."""
+    h = hashlib.sha256()
+    for blk in node.ledger.blocks:
+        h.update(encode_block(blk))
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class PeerStats:
+    """Protocol-level counters for one ``PeerNode`` (the transport's
+    ``WireStats`` counts bytes; this counts decisions)."""
+    announces_sent: int = 0
+    announces_recv: int = 0
+    dup_announces: int = 0
+    sig_rejects: int = 0          # forged/unsigned origin, bad binding
+    malformed: int = 0            # undecodable header/body content
+    compact_hits: int = 0         # body already held — nothing fetched
+    body_requests: int = 0
+    bodies_served: int = 0
+    bodies_recv: int = 0
+    sync_pulls: int = 0
+    reorgs: int = 0
+    blocks_committed: int = 0
+    version_rejects: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _SyncState:
+    blocks: List[Block]
+    entries: Tuple[Tuple[bytes, bytes], ...]
+    missing: set
+
+
+class PeerNode:
+    """Drives one unmodified ``Node`` over a transport port.
+
+    ``identity`` signs this peer's own announces; ``keyring`` (shared
+    out of band) verifies everyone's.  When the underlying node has no
+    keyring of its own it adopts this one, so ``Node.receive`` applies
+    the identical signature rule the in-process ``Network`` uses —
+    origin binding is enforced once, in the node, not per transport.
+    ``keyring=None`` runs unsigned (announces still carry the origin's
+    key, receivers just don't require a registered one).
+
+    ``compact=True`` announces header+checksum and serves bodies on
+    demand; ``compact=False`` inlines every body (the bandwidth
+    baseline the ``wire_relay`` bench compares against)."""
+
+    def __init__(self, node: Node, identity: PeerIdentity,
+                 keyring: Optional[KeyRing] = None, *,
+                 compact: bool = True,
+                 jash_fns: Optional[Dict[str, object]] = None,
+                 max_bodies: int = 4096) -> None:
+        if keyring is None:
+            keyring = getattr(node, "keyring", None)
+        elif node.keyring is None:
+            node.keyring = keyring      # one rule: the node enforces it
+        self.node = node
+        self.identity = identity
+        self.keyring = keyring
+        self.compact = compact
+        self.stats = PeerStats()
+        self.port = None
+        self._fns = collect_jash_fns(node.workloads, jash_fns)
+        # checksum -> canonical body bytes: own mined payloads, fetched
+        # bodies, and lazily indexed journal/evidence payloads.  LRU-
+        # bounded; the node's own evidence store remains the fallback.
+        self._bodies: "collections.OrderedDict[bytes, bytes]" = \
+            collections.OrderedDict()
+        self.max_bodies = max_bodies
+        # block hash -> original signed announce (re-gossip relays the
+        # miner's signature; re-signing would break origin binding)
+        self._anns: Dict[str, Announce] = {}
+        # checksum -> (block, announce, src) awaiting its body
+        self._pending: Dict[bytes, Tuple[Block, Announce, str]] = {}
+        self._sync: Dict[str, _SyncState] = {}
+        self.peer_heights: Dict[str, int] = {}
+
+    # -- wiring -------------------------------------------------------
+    def attach(self, port) -> None:
+        """Connect to a transport port (``LoopbackPort``/
+        ``TcpTransport``): its messages flow into ``on_message``."""
+        self.port = port
+        port.on_message = self.on_message
+
+    def _peers(self) -> List[str]:
+        return self.port.peer_names() if self.port is not None else []
+
+    def _send(self, dst: str, msg: Message) -> None:
+        if self.port is not None:
+            self.port.send(dst, msg)
+
+    # -- body store ---------------------------------------------------
+    def _remember_body(self, ck: bytes, body: bytes) -> None:
+        self._bodies[ck] = body
+        self._bodies.move_to_end(ck)
+        while len(self._bodies) > self.max_bodies:
+            self._bodies.popitem(last=False)
+
+    def _lookup_body(self, ck: bytes) -> Optional[bytes]:
+        """Serve a body by content checksum: the hot store first, then
+        a scan over the node's retained journal/evidence payloads
+        (indexing them as it goes)."""
+        body = self._bodies.get(ck)
+        if body is not None:
+            return body
+        found = None
+        for payload in self.node.chain_payloads():
+            if payload is None:
+                continue
+            b = encode_payload(payload)
+            c = hashlib.sha256(b).digest()[:16]
+            self._remember_body(c, b)
+            if c == ck:
+                found = b
+        return found
+
+    def _ck_of_height(self, height: int) -> bytes:
+        payload = self.node._payloads.get(height)
+        if payload is None:
+            return _ZERO_CK                # pruned at finalization
+        body = encode_payload(payload)
+        ck = hashlib.sha256(body).digest()[:16]
+        self._remember_body(ck, body)
+        return ck
+
+    # -- outbound -----------------------------------------------------
+    def hello(self) -> Hello:
+        return Hello(version=PROTOCOL_VERSION,
+                     node_id=self.identity.node_id,
+                     pubkey=self.identity.pubkey,
+                     height=self.node.ledger.height)
+
+    def broadcast_hello(self) -> None:
+        m = self.hello()
+        for dst in self._peers():
+            self._send(dst, m)
+
+    def mine_and_announce(self, workload: Optional[str] = None
+                          ) -> BlockReceipt:
+        """Mine one block on the wrapped node and announce it to every
+        peer — compact (header + checksum) or full-body per config."""
+        receipt = self.node.mine_block(workload)
+        block = receipt.record.to_block()
+        body = encode_payload(receipt.payload)
+        sa = make_announce(self.identity, block, receipt.payload)
+        self._remember_body(sa.checksum, body)
+        ann = Announce(header=sa.header, checksum=sa.checksum,
+                       origin=sa.origin, pubkey=sa.pubkey,
+                       signature=sa.signature,
+                       body=None if self.compact else body)
+        self._anns[block.block_hash] = dataclasses.replace(ann, body=None)
+        for dst in self._peers():
+            self._send(dst, ann)
+            self.stats.announces_sent += 1
+        return receipt
+
+    def _regossip(self, block: Block, ann: Announce,
+                  exclude: str) -> None:
+        out = ann if not self.compact else dataclasses.replace(
+            ann, body=None)
+        if not self.compact and out.body is None:
+            body = self._bodies.get(ann.checksum)
+            if body is not None:
+                out = dataclasses.replace(out, body=body)
+        for dst in self._peers():
+            if dst != exclude:
+                self._send(dst, out)
+                self.stats.announces_sent += 1
+
+    def _request_sync(self, src: str) -> None:
+        if src in self._sync:
+            return                         # one pull in flight per peer
+        self.stats.sync_pulls += 1
+        self._send(src, GetHeaders(from_height=0))
+
+    # -- inbound dispatch ---------------------------------------------
+    def on_message(self, src: str, msg: Message) -> None:
+        if isinstance(msg, Hello):
+            self._on_hello(src, msg)
+        elif isinstance(msg, Announce):
+            self._on_announce(src, msg)
+        elif isinstance(msg, GetHeaders):
+            self._on_get_headers(src, msg)
+        elif isinstance(msg, Tip):
+            self._on_tip(src, msg)
+        elif isinstance(msg, GetBodies):
+            self._on_get_bodies(src, msg)
+        elif isinstance(msg, Bodies):
+            self._on_bodies(src, msg)
+
+    def _on_hello(self, src: str, m: Hello) -> None:
+        if m.version != PROTOCOL_VERSION:
+            self.stats.version_rejects += 1
+            return
+        self.peer_heights[src] = m.height
+        if m.height > self.node.ledger.height:
+            self._request_sync(src)
+
+    def _on_announce(self, src: str, a: Announce) -> None:
+        self.stats.announces_recv += 1
+        try:
+            block = decode_block(a.header)
+        except Exception:
+            self.stats.malformed += 1
+            return
+        if self.node.has_block(block.block_hash):
+            self.stats.dup_announces += 1
+            return
+        sa = SignedAnnounce(header=a.header, checksum=a.checksum,
+                            origin=a.origin, pubkey=a.pubkey,
+                            signature=a.signature)
+        if self.keyring is not None and not sa.verify_origin(self.keyring):
+            # forged or unsigned origin: dropped before any body fetch
+            self.stats.sig_rejects += 1
+            return
+        body = a.body
+        if body is not None:
+            if hashlib.sha256(body).digest()[:16] != a.checksum:
+                self.stats.malformed += 1
+                return
+        else:
+            body = self._lookup_body(a.checksum)
+            if body is not None:
+                self.stats.compact_hits += 1    # nothing crosses the wire
+        if body is None:
+            self._pending[a.checksum] = (block, a, src)
+            self.stats.body_requests += 1
+            self._send(src, GetBodies(checksums=(a.checksum,)))
+            return
+        self._process(src, block, a, body)
+
+    def _process(self, src: str, block: Block, ann: Announce,
+                 body: bytes) -> None:
+        """Body in hand: decode, hand to the node's ordinary receive
+        path (which re-checks the signature binding against this exact
+        payload), fall back to a chain pull on tip mismatch."""
+        try:
+            payload = decode_payload(body, jash_fns=self._fns)
+        except Exception:
+            self.stats.malformed += 1
+            return
+        self._remember_body(ann.checksum, body)
+        sa = SignedAnnounce(header=ann.header, checksum=ann.checksum,
+                            origin=ann.origin, pubkey=ann.pubkey,
+                            signature=ann.signature)
+        ok = self.node.receive(block, payload, announce=sa)
+        self._anns[block.block_hash] = dataclasses.replace(ann, body=None)
+        if ok:
+            self.stats.blocks_committed += 1
+            self._regossip(block, ann, exclude=src)
+        elif not self.node.has_block(block.block_hash):
+            self._request_sync(src)
+
+    def _on_get_headers(self, src: str, g: GetHeaders) -> None:
+        entries = tuple(
+            (encode_block(blk), self._ck_of_height(h))
+            for h, blk in enumerate(self.node.ledger.blocks)
+            if h >= g.from_height)
+        self._send(src, Tip(start=g.from_height, entries=entries))
+
+    def _on_tip(self, src: str, t: Tip) -> None:
+        self._sync.pop(src, None)
+        if t.start != 0:
+            return                         # we only ever pull from 0
+        if len(t.entries) <= self.node.ledger.height:
+            return                         # not longer: no fork choice
+        try:
+            blocks = [decode_block(header) for header, _ in t.entries]
+        except Exception:
+            self.stats.malformed += 1
+            return
+        missing = set()
+        for i, (_, ck) in enumerate(t.entries):
+            if self._have_payload_for(i, blocks[i], ck):
+                continue
+            if ck == _ZERO_CK:
+                return    # sender pruned a body we'd need: can't adopt
+            missing.add(ck)
+        state = _SyncState(blocks=blocks, entries=t.entries,
+                           missing=missing)
+        if missing:
+            self._sync[src] = state
+            self.stats.body_requests += len(missing)
+            self._send(src, GetBodies(checksums=tuple(sorted(missing))))
+            return
+        self._finish_sync(src, state)
+
+    def _have_payload_for(self, height: int, block: Block,
+                          ck: bytes) -> bool:
+        """True iff fork choice at this height needs no wire transfer:
+        our own chain holds the identical block (its retained evidence
+        substitutes below the fork point) or the body store already
+        has the checksum."""
+        ours = (self.node.ledger.blocks[height]
+                if height < self.node.ledger.height else None)
+        if ours is not None and ours.block_hash == block.block_hash:
+            return True
+        return self._bodies.get(ck) is not None
+
+    def _resolve_payload(self, height: int, block: Block,
+                         ck: bytes) -> Optional[BlockPayload]:
+        ours = (self.node.ledger.blocks[height]
+                if height < self.node.ledger.height else None)
+        if ours is not None and ours.block_hash == block.block_hash:
+            # common prefix: consider_chain substitutes our evidence
+            # anyway; pass it directly (may be None below the floor)
+            return self.node._payloads.get(height)
+        body = self._bodies.get(ck)
+        if body is None:
+            return None
+        try:
+            return decode_payload(body, jash_fns=self._fns)
+        except Exception:
+            self.stats.malformed += 1
+            return None
+
+    def _finish_sync(self, src: str, state: _SyncState) -> None:
+        payloads = [self._resolve_payload(i, blk, ck)
+                    for i, (blk, (_, ck))
+                    in enumerate(zip(state.blocks, state.entries))]
+        try:
+            ok = self.node.consider_chain(state.blocks, payloads)
+        except ChainError:
+            self.stats.malformed += 1
+            return
+        if ok:
+            self.stats.reorgs += 1
+            self.stats.blocks_committed += 1
+
+    def _on_get_bodies(self, src: str, g: GetBodies) -> None:
+        bodies = []
+        for ck in g.checksums:
+            body = self._lookup_body(ck)
+            if body is not None:
+                bodies.append(body)
+        if bodies:
+            self.stats.bodies_served += len(bodies)
+            self._send(src, Bodies(bodies=tuple(bodies)))
+
+    def _on_bodies(self, src: str, b: Bodies) -> None:
+        got = set()
+        for body in b.bodies:
+            ck = hashlib.sha256(body).digest()[:16]
+            self._remember_body(ck, body)
+            got.add(ck)
+            self.stats.bodies_recv += 1
+            pend = self._pending.pop(ck, None)
+            if pend is not None:
+                block, ann, _ = pend
+                self._process(src, block, ann, body)
+        state = self._sync.get(src)
+        if state is not None:
+            state.missing -= got
+            if not state.missing:
+                del self._sync[src]
+                self._finish_sync(src, state)
+
+
+# ---------------------------------------------------------------------------
+# the N-peer loopback convergence scenario (sim CLI + bench + tests)
+# ---------------------------------------------------------------------------
+
+_SUITE_DIMS = dict(sat={"n_vars": 10, "n_clauses": 40},
+                   gan={"grid_bits": 8},
+                   docking={"n_r": 16, "n_p": 16})
+_SUITE_SCHEDULE = ("sat", "gan", "docking", "classic",
+                   "sat", "gan", "docking", "sat")
+
+
+def _suite_node(i: int, *, suite_seed: int = 7,
+                classic_arg_bits: int = 6,
+                keyring: Optional[KeyRing] = None) -> Node:
+    """One heterogeneous-suite node (same dims as the sim's
+    ``heterogeneous_scenario`` — small enough for CI, every family
+    represented)."""
+    from repro.chain.workloads import default_suite
+    return Node(node_id=i, classic_arg_bits=classic_arg_bits,
+                workloads=default_suite(seed=suite_seed, **_SUITE_DIMS),
+                keyring=keyring)
+
+
+def loopback_scenario(n_peers: int = 4, seed: int = 0, *,
+                      compact: bool = True,
+                      signed: bool = True,
+                      drop_prob: float = 0.0,
+                      suite_seed: int = 7,
+                      schedule: Sequence[str] = _SUITE_SCHEDULE,
+                      oracle: bool = True) -> Dict[str, object]:
+    """N wire-connected peers mine the heterogeneous workload suite
+    round-robin over a deterministic loopback transport, then the
+    result is compared bit-for-bit against the in-process ``Network``
+    mining the same schedule on the same seeds — tips, ledgers
+    (canonical chain digest), and credit books must all be equal.
+
+    Returns a JSON-able report: convergence, oracle parity, bytes on
+    wire, and per-peer protocol counters.  ``compact=False`` runs the
+    full-body relay baseline the ``wire_relay`` bench compares
+    against; ``drop_prob`` exercises retry + pull-based resync."""
+    identities, ring = make_identities(n_peers)
+    used_ring = ring if signed else None
+    hub = LoopbackHub(seed=seed, drop_prob=drop_prob)
+    peers: List[PeerNode] = []
+    t0 = time.perf_counter()
+    for i in range(n_peers):
+        node = _suite_node(i, suite_seed=suite_seed, keyring=used_ring)
+        pn = PeerNode(node, identities[i], used_ring, compact=compact)
+        pn.attach(hub.register(f"peer{i}"))
+        peers.append(pn)
+    for pn in peers:
+        pn.broadcast_hello()
+    hub.pump()
+    for b, family in enumerate(schedule):
+        peers[b % n_peers].mine_and_announce(family)
+        hub.pump()
+    # lossy links can strand a peer: height beacons trigger pull resync
+    for _ in range(8):
+        heights = {pn.node.ledger.height for pn in peers}
+        if len(heights) == 1:
+            break
+        for pn in peers:
+            pn.broadcast_hello()
+        hub.pump()
+    elapsed = time.perf_counter() - t0
+    digests = [chain_digest(pn.node) for pn in peers]
+    books = [tuple(sorted(pn.node.book.balances.items())) for pn in peers]
+    converged = (len(set(digests)) == 1 and len(set(books)) == 1
+                 and all(pn.node.ledger.verify_chain() for pn in peers))
+    report: Dict[str, object] = {
+        "n_peers": n_peers,
+        "n_blocks": len(schedule),
+        "compact": compact,
+        "signed": signed,
+        "drop_prob": drop_prob,
+        "converged": converged,
+        "height": peers[0].node.ledger.height,
+        "chain_digest": digests[0],
+        "bytes_on_wire": hub.total_bytes(),
+        "frames_delivered": sum(p.stats.frames_recv
+                                for p in hub.ports.values()),
+        "quarantined": sum(p.stats.quarantined
+                           for p in hub.ports.values()),
+        "elapsed_s": round(elapsed, 3),
+        "blocks_per_s": round(len(schedule) / elapsed, 3) if elapsed else 0.0,
+        "peer_stats": [pn.stats.to_dict() for pn in peers],
+    }
+    if oracle:
+        from repro.chain.network import Network
+        net = Network.create(
+            n_peers,
+            node_factory=lambda i: _suite_node(
+                i, suite_seed=suite_seed, keyring=used_ring),
+            identities=identities if signed else None)
+        net.run(len(schedule), list(schedule))
+        oracle_digest = chain_digest(net.nodes[0])
+        oracle_books = tuple(sorted(net.nodes[0].book.balances.items()))
+        report["oracle_digest"] = oracle_digest
+        report["oracle_match"] = bool(
+            converged and digests[0] == oracle_digest
+            and books[0] == oracle_books)
+    return report

@@ -1,0 +1,313 @@
+"""``repro.chain.net.transport`` — how frames move between peers.
+
+Two implementations of one small port interface (``send(dst, msg)``,
+``peer_names()``, an ``on_message(src, msg)`` callback, a ``WireStats``
+counter):
+
+* ``LoopbackHub`` — deterministic in-memory transport: every message
+  is genuinely encoded to frame bytes and decoded on delivery (so
+  bytes-on-wire numbers are real and malformed frames are really
+  quarantined), delivery order is a seeded (latency, seq) heap like
+  the ``Sim``'s event queue, and lossy links retry with backoff.
+  ``pump()`` drains the queue deterministically — usable inside a
+  discrete-event simulation or a plain test loop.
+
+* ``TcpTransport`` — real asyncio TCP: length-framed stream, per-
+  connection ``FrameBuffer`` reassembly (malformed frames quarantined,
+  never raising — a connection exceeding ``quarantine_limit`` is
+  dropped), and per-peer connect retry with backoff.
+
+The transport is deliberately dumb: it moves frames and counts bytes.
+All protocol logic — identity checks, compact relay, sync — lives in
+``PeerNode`` (sans-IO, so both transports drive the identical code).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import heapq
+import random
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.chain.net.messages import (FrameBuffer, Message, decode_message,
+                                      encode_message)
+
+__all__ = [
+    "LoopbackHub",
+    "LoopbackPort",
+    "TcpTransport",
+    "WireStats",
+]
+
+
+@dataclasses.dataclass
+class WireStats:
+    """Bytes and frames through one port (both directions), plus the
+    malformed-frame quarantine count.  ``bytes_sent`` counts every
+    transmission attempt that reached the wire — retries included —
+    which is what a bandwidth bill would count."""
+    frames_sent: int = 0
+    frames_recv: int = 0
+    bytes_sent: int = 0
+    bytes_recv: int = 0
+    quarantined: int = 0
+    drops: int = 0
+    retries: int = 0
+
+    def note_sent(self, n_bytes: int) -> None:
+        self.frames_sent += 1
+        self.bytes_sent += n_bytes
+
+    def note_recv(self, n_bytes: int) -> None:
+        self.frames_recv += 1
+        self.bytes_recv += n_bytes
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class LoopbackPort:
+    """One peer's endpoint on a ``LoopbackHub``.  Assign
+    ``on_message(src_name, msg)`` (``PeerNode.attach`` does) before
+    pumping."""
+
+    def __init__(self, hub: "LoopbackHub", name: str) -> None:
+        self.hub = hub
+        self.name = name
+        self.stats = WireStats()
+        self.on_message: Optional[Callable[[str, Message], None]] = None
+
+    def peer_names(self) -> List[str]:
+        return [n for n in self.hub.ports if n != self.name]
+
+    def send(self, dst: str, msg: Message) -> None:
+        frame = encode_message(msg)
+        self.hub._transmit(self.name, dst, frame, self.stats)
+
+    def _deliver(self, src: str, frame: bytes) -> None:
+        self.stats.note_recv(len(frame))
+        msg = decode_message(frame)
+        if msg is None:
+            self.stats.quarantined += 1
+            return
+        if self.on_message is not None:
+            self.on_message(src, msg)
+
+
+class LoopbackHub:
+    """Deterministic in-memory wire: seeded latency jitter, optional
+    loss with bounded retry/backoff, (time, seq)-ordered delivery.
+
+    ``inject`` pushes raw bytes (adversarial tests corrupt frames with
+    it); ``pump`` drains the queue, running receive handlers — which
+    may enqueue more sends — until quiet."""
+
+    def __init__(self, *, seed: int = 0, min_latency: float = 0.01,
+                 max_latency: float = 0.05, drop_prob: float = 0.0,
+                 max_retries: int = 2,
+                 retry_backoff: float = 0.05) -> None:
+        self.ports: Dict[str, LoopbackPort] = {}
+        self.rng = random.Random(seed)
+        self.min_latency = min_latency
+        self.max_latency = max_latency
+        self.drop_prob = drop_prob
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.now = 0.0
+        self._seq = 0
+        self._queue: List[Tuple[float, int, str, str, bytes]] = []
+
+    def register(self, name: str) -> LoopbackPort:
+        if name in self.ports:
+            raise ValueError(f"peer name {name!r} already registered")
+        port = LoopbackPort(self, name)
+        self.ports[name] = port
+        return port
+
+    def _transmit(self, src: str, dst: str, frame: bytes,
+                  stats: WireStats) -> None:
+        """Send with loss + bounded retry: each attempt that reaches
+        the wire costs bytes; a frame dropped ``max_retries + 1`` times
+        is lost (the protocol above resyncs via chain pull)."""
+        delay = 0.0
+        for attempt in range(self.max_retries + 1):
+            stats.note_sent(len(frame))    # every attempt costs bytes
+            if attempt > 0:
+                stats.retries += 1
+            if self.rng.random() >= self.drop_prob:
+                latency = self.rng.uniform(self.min_latency,
+                                           self.max_latency)
+                self._push(self.now + delay + latency, src, dst, frame)
+                return
+            stats.drops += 1
+            delay += self.retry_backoff * (attempt + 1)
+        # every attempt dropped: the frame is lost
+
+    def inject(self, src: str, dst: str, raw: bytes) -> None:
+        """Deliver raw bytes as-if from ``src`` — the adversarial hook
+        (corrupt frames, replays, garbage)."""
+        latency = self.rng.uniform(self.min_latency, self.max_latency)
+        self._push(self.now + latency, src, dst, raw)
+
+    def _push(self, t: float, src: str, dst: str, frame: bytes) -> None:
+        self._seq += 1
+        heapq.heappush(self._queue, (t, self._seq, src, dst, frame))
+
+    def pump(self, max_frames: int = 100_000) -> int:
+        """Deliver queued frames in deterministic (time, seq) order —
+        handlers may send more; keep going until the wire is quiet.
+        Returns the number of frames delivered."""
+        delivered = 0
+        while self._queue and delivered < max_frames:
+            t, _, src, dst, frame = heapq.heappop(self._queue)
+            self.now = max(self.now, t)
+            delivered += 1
+            port = self.ports.get(dst)
+            if port is not None:
+                port._deliver(src, frame)
+        return delivered
+
+    def total_bytes(self) -> int:
+        """Bytes that crossed the wire, summed over all ports."""
+        return sum(p.stats.bytes_sent for p in self.ports.values())
+
+
+class TcpTransport:
+    """Asyncio TCP with the same port interface as ``LoopbackPort``.
+
+    Peers are addressed by connection name (``"in#3"`` / ``"out#1"``)
+    — the protocol layer maps names to node identities via HELLO.
+    Each connection reads through its own ``FrameBuffer``: malformed
+    frames are quarantined (never raising), and a connection that
+    exceeds ``quarantine_limit`` malformed frames is closed (the
+    outbound side may then ``connect`` again — per-peer retry/backoff
+    lives there)."""
+
+    def __init__(self, *, quarantine_limit: int = 32) -> None:
+        self.stats = WireStats()
+        self.handler_errors: List[str] = []
+        self.quarantine_limit = quarantine_limit
+        self.on_message: Optional[Callable[[str, Message], None]] = None
+        self._writers: Dict[str, asyncio.StreamWriter] = {}
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._tasks: List[asyncio.Task] = []
+        self._n_in = 0
+        self._n_out = 0
+
+    # -- port interface -----------------------------------------------
+    def peer_names(self) -> List[str]:
+        return list(self._writers)
+
+    def send(self, dst: str, msg: Message) -> None:
+        writer = self._writers.get(dst)
+        if writer is None or writer.is_closing():
+            return
+        frame = encode_message(msg)
+        self.stats.note_sent(len(frame))
+        writer.write(frame)
+
+    # -- lifecycle ----------------------------------------------------
+    async def listen(self, host: str = "127.0.0.1",
+                     port: int = 0) -> int:
+        """Accept inbound peers; returns the bound port (``port=0``
+        picks a free one)."""
+        self._server = await asyncio.start_server(
+            self._accept, host=host, port=port)
+        return self._server.sockets[0].getsockname()[1]
+
+    async def _accept(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self._n_in += 1
+        await self._run_conn(f"in#{self._n_in}", reader, writer)
+
+    async def connect(self, host: str, port: int, *,
+                      retries: int = 20,
+                      backoff: float = 0.25) -> str:
+        """Dial a peer with per-peer retry/backoff (linear, capped —
+        the other process may still be starting up).  Returns the
+        connection name; raises ``ConnectionError`` after the final
+        attempt fails."""
+        last: Optional[Exception] = None
+        for attempt in range(retries + 1):
+            try:
+                reader, writer = await asyncio.open_connection(host, port)
+            except OSError as e:
+                last = e
+                self.stats.retries += 1
+                await asyncio.sleep(min(backoff * (attempt + 1), 2.0))
+                continue
+            self._n_out += 1
+            name = f"out#{self._n_out}"
+            task = asyncio.ensure_future(
+                self._run_conn(name, reader, writer))
+            self._tasks.append(task)
+            # give _run_conn a tick to register the writer
+            await asyncio.sleep(0)
+            return name
+        raise ConnectionError(
+            f"could not reach {host}:{port} after {retries + 1} "
+            f"attempts: {last}")
+
+    async def _run_conn(self, name: str, reader: asyncio.StreamReader,
+                        writer: asyncio.StreamWriter) -> None:
+        self._writers[name] = writer
+        fb = FrameBuffer()
+        seen_quarantined = 0
+        try:
+            while True:
+                data = await reader.read(1 << 16)
+                if not data:
+                    for msg in fb.feed(b"", eof=True):
+                        self._dispatch(name, msg)
+                    self.stats.quarantined += \
+                        fb.quarantined - seen_quarantined
+                    break
+                self.stats.bytes_recv += len(data)
+                for msg in fb.feed(data):
+                    self.stats.frames_recv += 1
+                    self._dispatch(name, msg)
+                self.stats.quarantined += fb.quarantined - seen_quarantined
+                seen_quarantined = fb.quarantined
+                if fb.quarantined > self.quarantine_limit:
+                    break                  # hostile/broken peer: drop
+        finally:
+            self._writers.pop(name, None)
+            try:
+                writer.close()
+            except Exception:
+                pass
+
+    def _dispatch(self, name: str, msg: Message) -> None:
+        if self.on_message is None:
+            return
+        try:
+            self.on_message(name, msg)
+        except Exception:
+            # a handler bug must not kill the reader task (the
+            # connection would die silently and every later send
+            # becomes a no-op) — record it and keep reading
+            import traceback
+            err = traceback.format_exc()
+            self.handler_errors.append(err)
+            print(f"[net] handler error on {name}:\n{err}",
+                  file=sys.stderr)
+
+    async def drain(self) -> None:
+        for writer in list(self._writers.values()):
+            try:
+                await writer.drain()
+            except Exception:
+                pass
+
+    async def close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        for writer in list(self._writers.values()):
+            try:
+                writer.close()
+            except Exception:
+                pass
+        for task in self._tasks:
+            task.cancel()

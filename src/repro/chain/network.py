@@ -53,10 +53,16 @@ class Network:
     """N nodes, block broadcast, longest-valid-chain convergence."""
 
     def __init__(self, nodes: Sequence[Node], *,
-                 shared_verify_cache: bool = True) -> None:
+                 shared_verify_cache: bool = True,
+                 identities: Optional[dict] = None) -> None:
         if not nodes:
             raise ValueError("a network needs at least one node")
         self.nodes = list(nodes)
+        # node_id -> PeerIdentity: when set, every deliver carries a
+        # signed announce, so member nodes with a keyring enforce the
+        # same cryptographic origin binding as wire-connected PeerNodes
+        # (one rule, both transports — repro.chain.net.identity)
+        self.identities = dict(identities) if identities else None
         self.log: List[BroadcastResult] = []
         # one trust domain: a node that verified a payload spares every
         # other member the §3 req. 2 re-execution.  Constructing a
@@ -81,6 +87,7 @@ class Network:
     def create(cls, n_nodes: int,
                node_factory: Optional[Callable[[int], Node]] = None,
                shared_verify_cache: bool = True,
+               identities: Optional[dict] = None,
                **node_kwargs) -> "Network":
         if node_factory is None and "workloads" in node_kwargs:
             # one shared Workload instance across nodes would make every
@@ -93,7 +100,8 @@ class Network:
                 "voids independent re-verification")
         factory = node_factory or (lambda i: Node(node_id=i, **node_kwargs))
         net = cls([factory(i) for i in range(n_nodes)],
-                  shared_verify_cache=shared_verify_cache)
+                  shared_verify_cache=shared_verify_cache,
+                  identities=identities)
         net.enroll_nodes()       # create owns these nodes — see __init__
         return net
 
@@ -127,7 +135,13 @@ class Network:
         at-least-once) are an idempotent no-op, skipping the pointless
         full-chain re-verification a chain pull would cost."""
         peer = self.nodes[dest]
-        if peer.receive(block, payload, origin=origin):
+        announce = None
+        if self.identities is not None and payload.origin in self.identities:
+            # lazy import: net builds on chain, never the reverse
+            from repro.chain.net.identity import make_announce
+            announce = make_announce(
+                self.identities[payload.origin], block, payload)
+        if peer.receive(block, payload, origin=origin, announce=announce):
             return True
         if peer.has_block(block.block_hash):
             return False

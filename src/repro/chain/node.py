@@ -32,7 +32,7 @@ from repro.core.difficulty import DifficultyController
 from repro.core.jash import Jash
 from repro.core.ledger import Block, Ledger
 from repro.core.rewards import CreditBook
-from repro.chain.store import ChainStore
+from repro.chain.store import ChainStore, collect_jash_fns
 from repro.chain.workload import (
     BlockContext, BlockPayload, ChainError, ClassicSha256Workload,
     JashFullWorkload, JashOptimalWorkload, RewardEntries, Workload,
@@ -243,6 +243,7 @@ class Node:
                  use_verify_cache: bool = True,
                  confirmation_depth: Optional[int] = None,
                  store: Optional[ChainStore] = None,
+                 keyring: Optional[object] = None,
                  ra: Optional[RuntimeAuthority] = None) -> None:
         """``n_lanes`` is multi-lane mining: partition full/optimal
         execution over ``n_lanes`` single-device miner lanes, all run in
@@ -282,7 +283,15 @@ class Node:
         commit and fork-choice rebuild is appended to it, and after a
         crash ``Node.recover(store, ...)`` rebuilds an equivalent node
         from the journal.  The store must be empty — recovery, not
-        construction, is how a journal with history is adopted."""
+        construction, is how a journal with history is adopted.
+
+        ``keyring`` (a ``repro.chain.net.KeyRing``) turns on
+        cryptographic origin binding: ``receive`` then accepts a block
+        only with a ``SignedAnnounce`` whose signature verifies under
+        the ring's key for ``payload.origin`` — the same rule for the
+        in-process ``Network`` and the wire-level ``PeerNode``.
+        ``None`` keeps the transport-level stand-in (the ``origin``
+        argument's sender-index equality check)."""
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         if snapshot_interval < 0:
@@ -357,6 +366,7 @@ class Node:
                 "not silently shadow an existing chain; use "
                 "Node.recover(store, ...) to adopt it")
         self.store = store
+        self.keyring = keyring
         self._journal_mute = False         # recovery replay: don't re-log
         self.last_recovery: Optional[RecoveryReport] = None
 
@@ -605,7 +615,8 @@ class Node:
         return block_hash in self._hash_index
 
     def receive(self, block: Block, payload: BlockPayload,
-                origin: Optional[int] = None) -> bool:
+                origin: Optional[int] = None,
+                announce: Optional[object] = None) -> bool:
         """Accept a broadcast block iff it extends our tip and the payload
         re-verifies bit-exactly.  Returns False on any mismatch (the
         network layer then falls back to ``consider_chain``).
@@ -613,15 +624,24 @@ class Node:
         Reward-determining payload fields are enforced here, not in the
         workload: ``block_reward`` must equal this node's configured
         reward (a consensus parameter — a payload claiming more mints
-        nothing), and when ``origin`` is given (the network layer passes
-        the actual sender, the in-process stand-in for a block
-        signature) the payload may not claim someone else's lane."""
+        nothing), and the payload may not claim someone else's lane.
+        Origin binding is one rule with two strengths: with a
+        ``keyring`` configured, ``announce`` (a
+        ``repro.chain.net.SignedAnnounce``) is *required* and must bind
+        this exact (block, payload) pair to ``payload.origin`` under
+        the ring's key for it; without one, ``origin`` (the transport-
+        level sender the in-process network passes) must equal the
+        claimed origin — the unsigned stand-in for the same check."""
         if (block.height != self.ledger.height
                 or block.prev_hash != self.ledger.tip_hash):
             return False
         if payload.block_reward != self.block_reward:
             return False
-        if origin is not None and payload.origin != origin:
+        if self.keyring is not None:
+            if announce is None or not announce.verify(
+                    self.keyring, block, payload):
+                return False
+        elif origin is not None and payload.origin != origin:
             return False
         if not self._payload_matches(block, payload):
             return False
@@ -818,13 +838,7 @@ class Node:
             raise ChainError(
                 "Node.recover needs a fresh node shell (no committed "
                 "blocks, no attached store)")
-        fns: Dict[str, object] = {}
-        for wl in node.workloads.values():
-            hook = getattr(wl, "journal_jash_fns", None)
-            if hook is not None:
-                fns.update(hook())
-        if jash_fns:
-            fns.update(jash_fns)
+        fns = collect_jash_fns(node.workloads, jash_fns)
         read = store.read_chain(jash_fns=fns)
         adopted = node._replay_journal(read.blocks, read.payloads)
         truncated = read.truncated_records + (len(read.blocks) - adopted)

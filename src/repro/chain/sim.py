@@ -1069,7 +1069,7 @@ def _main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario",
                     choices=("partition", "adversarial", "throughput",
-                             "heterogeneous", "chaos"),
+                             "heterogeneous", "chaos", "wire"),
                     default="partition")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--nodes", type=int, default=4,
@@ -1078,6 +1078,17 @@ def _main() -> int:
     ap.add_argument("--blocks", type=int, default=32,
                     help="chain length (throughput scenario)")
     args = ap.parse_args()
+    if args.scenario == "wire":
+        # N peers over the repro.chain.net loopback wire (signed compact
+        # relay), checked bit-for-bit against the in-process Network
+        from repro.chain.net import loopback_scenario
+        report = loopback_scenario(n_peers=max(args.nodes, 2),
+                                   seed=args.seed)
+        print(json.dumps(report, indent=2, sort_keys=True))
+        assert report["converged"], "wire peers failed to converge"
+        assert report["oracle_match"], \
+            "wire-relayed chain diverged from the in-process oracle"
+        return 0
     if args.scenario == "partition":
         sim = partitioned_scenario(n_nodes=args.nodes, seed=args.seed)
     elif args.scenario == "throughput":

@@ -53,10 +53,12 @@ from repro.chain.workload import BlockPayload, ChainError
 __all__ = [
     "ChainStore",
     "JournalReadResult",
+    "collect_jash_fns",
     "decode_block",
     "decode_payload",
     "encode_block",
     "encode_payload",
+    "payload_checksum",
 ]
 
 MAGIC = b"PNPJRNL1"
@@ -329,6 +331,34 @@ def decode_payload(data: bytes,
     p = _dec_payload(r, jash_fns or {})
     r.done()
     return p
+
+
+def payload_checksum(payload: BlockPayload) -> bytes:
+    """The 16-byte content address of a payload: truncated SHA-256 of
+    its canonical encoding.  This is the id compact block relay
+    announces and fetches bodies by (``repro.chain.net``), the same
+    truncation the journal uses per record — two payloads share a
+    checksum iff their canonical bytes are identical."""
+    return hashlib.sha256(encode_payload(payload)).digest()[:_CHECKSUM_LEN]
+
+
+def collect_jash_fns(workloads: Dict[str, object],
+                     extra: Optional[Dict[str, Callable]] = None
+                     ) -> Dict[str, Callable]:
+    """The jash-function registry a decoder needs: every registered
+    workload's ``journal_jash_fns`` hook (the classic fallback
+    publishes its base jash here), overlaid with caller-supplied
+    ``extra`` entries (full/optimal researcher jashes).  Shared by
+    ``Node.recover`` (journal replay) and ``repro.chain.net.PeerNode``
+    (wire decode) — one resolution rule for disk and wire."""
+    fns: Dict[str, Callable] = {}
+    for wl in workloads.values():
+        hook = getattr(wl, "journal_jash_fns", None)
+        if hook is not None:
+            fns.update(hook())
+    if extra:
+        fns.update(extra)
+    return fns
 
 
 # ---------------------------------------------------------------------------

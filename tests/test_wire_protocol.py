@@ -1,0 +1,195 @@
+"""Wire-protocol tier-1 tests: message codec round-trips, Ed25519
+identity (RFC 8032 vectors + forgery), and the adversarial decoding
+fuzz sweep — every truncation and every single-bit flip of every
+message type must be rejected without an exception, and a stream peer
+must survive corrupt frames and keep decoding the good ones."""
+import binascii
+import hashlib
+
+import pytest
+
+from repro.chain.net.identity import (KeyRing, PeerIdentity, SignedAnnounce,
+                                      ed25519_public_key, ed25519_sign,
+                                      ed25519_verify, make_announce,
+                                      make_identities)
+from repro.chain.net.messages import (MAX_BODY, PROTOCOL_VERSION, WIRE_MAGIC,
+                                      Announce, Bodies, FrameBuffer,
+                                      GetBodies, GetHeaders, Hello, Tip,
+                                      decode_message, encode_message)
+
+# one specimen of every message type, with representative field shapes
+_SPECIMENS = [
+    Hello(version=PROTOCOL_VERSION, node_id=3, pubkey=b"\x11" * 32,
+          height=17),
+    Announce(header=b"h" * 60, checksum=b"c" * 16, origin=2,
+             pubkey=b"\x22" * 32, signature=b"\x33" * 64, body=None),
+    Announce(header=b"h" * 60, checksum=b"c" * 16, origin=-1,
+             pubkey=b"\x22" * 32, signature=b"\x33" * 64,
+             body=b"full body bytes"),
+    GetHeaders(from_height=0),
+    Tip(start=0, entries=((b"hdr0", b"k" * 16), (b"hdr1", b"\x00" * 16))),
+    GetBodies(checksums=(b"a" * 16, b"b" * 16)),
+    Bodies(bodies=(b"payload one", b"payload two" * 40)),
+]
+
+
+@pytest.mark.parametrize("msg", _SPECIMENS,
+                         ids=lambda m: type(m).__name__)
+def test_round_trip(msg):
+    frame = encode_message(msg)
+    assert frame.startswith(WIRE_MAGIC)
+    assert decode_message(frame) == msg
+
+
+def test_decode_rejects_frame_with_trailing_garbage():
+    frame = encode_message(_SPECIMENS[0])
+    assert decode_message(frame + b"x") is None
+    assert decode_message(b"x" + frame) is None
+
+
+def test_decode_rejects_wrong_magic_and_oversize():
+    frame = bytearray(encode_message(_SPECIMENS[0]))
+    frame[0] ^= 0xFF
+    assert decode_message(bytes(frame)) is None
+    big = WIRE_MAGIC + b"\x01" + (MAX_BODY + 1).to_bytes(4, "little")
+    assert decode_message(big + b"\x00" * 64) is None
+
+
+# -- the adversarial sweep (satellite: fuzz every byte position) ----------
+
+@pytest.mark.parametrize("msg", _SPECIMENS,
+                         ids=lambda m: type(m).__name__)
+def test_truncation_sweep_never_raises_never_accepts(msg):
+    """Every proper prefix of every frame decodes to None — a torn
+    frame can be neither accepted nor allowed to raise."""
+    frame = encode_message(msg)
+    for cut in range(len(frame)):
+        assert decode_message(frame[:cut]) is None, cut
+
+
+@pytest.mark.parametrize("msg", _SPECIMENS,
+                         ids=lambda m: type(m).__name__)
+def test_bitflip_sweep_never_raises_never_accepts(msg):
+    """Flip one bit at every byte position: the checksum covers the
+    type byte and body, the magic covers itself, the length must match
+    exactly — so no single-bit corruption may survive decoding."""
+    frame = encode_message(msg)
+    for pos in range(len(frame)):
+        corrupt = bytearray(frame)
+        corrupt[pos] ^= 1 << (pos % 8)
+        got = decode_message(bytes(corrupt))
+        assert got is None or got == msg  # flips in ignored bits: none
+        assert got is None, f"bit flip at byte {pos} accepted"
+
+
+def test_framebuffer_survives_corruption_and_resyncs():
+    """A stream carrying good frame / corrupt frame / good frame must
+    yield both good frames; the corrupt one is quarantined."""
+    good1 = encode_message(_SPECIMENS[0])
+    good2 = encode_message(_SPECIMENS[3])
+    corrupt = bytearray(encode_message(_SPECIMENS[5]))
+    corrupt[len(corrupt) // 2] ^= 0x40
+    fb = FrameBuffer()
+    out = []
+    stream = good1 + bytes(corrupt) + good2
+    for i in range(0, len(stream), 7):      # ragged chunk boundaries
+        out.extend(fb.feed(stream[i:i + 7]))
+    out.extend(fb.feed(b"", eof=True))
+    assert out == [_SPECIMENS[0], _SPECIMENS[3]]
+    assert fb.quarantined >= 1
+    assert fb.pending() == 0
+
+
+def test_framebuffer_interframe_garbage_and_partial_magic_tail():
+    fb = FrameBuffer()
+    good = encode_message(_SPECIMENS[0])
+    out = list(fb.feed(b"\xde\xad\xbe\xef" + good))
+    assert out == [_SPECIMENS[0]]
+    # a tail that is a proper prefix of the magic must just wait...
+    assert fb.feed(WIRE_MAGIC[:2]) == []
+    # ...and must not wedge the buffer at EOF
+    assert fb.feed(b"", eof=True) == []
+    assert fb.pending() == 0
+
+
+# -- identity ------------------------------------------------------------
+
+def test_ed25519_rfc8032_vectors():
+    # RFC 8032 §7.1 TEST 1 (empty message) and TEST 2 (one byte)
+    seed1 = binascii.unhexlify(
+        "9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60")
+    pub1 = binascii.unhexlify(
+        "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a")
+    sig1 = binascii.unhexlify(
+        "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155"
+        "5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b")
+    assert ed25519_public_key(seed1) == pub1
+    assert ed25519_sign(seed1, b"") == sig1
+    assert ed25519_verify(pub1, b"", sig1)
+
+    seed2 = binascii.unhexlify(
+        "4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb")
+    pub2 = binascii.unhexlify(
+        "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c")
+    sig2 = binascii.unhexlify(
+        "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da"
+        "085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00")
+    assert ed25519_sign(seed2, b"\x72") == sig2
+    assert ed25519_verify(pub2, b"\x72", sig2)
+
+
+def test_ed25519_verify_never_raises_on_junk():
+    assert not ed25519_verify(b"\x00" * 32, b"m", b"\x00" * 64)
+    assert not ed25519_verify(b"short", b"m", b"\x00" * 64)
+    assert not ed25519_verify(b"\xff" * 32, b"m", b"junk")
+
+
+def test_identity_determinism_and_keyring():
+    ids, ring = make_identities(3, seed=5)
+    ids2, _ = make_identities(3, seed=5)
+    assert ids[0].pubkey == ids2[0].pubkey
+    assert ids[0].pubkey != ids[1].pubkey
+    assert all(i in ring for i in range(3))
+    assert ring.pubkey_of(1) == ids[1].pubkey
+    # re-registering a different key for the same node id must fail
+    other = PeerIdentity.generate(1)
+    with pytest.raises(ValueError):
+        ring.register(1, other.pubkey)
+
+
+def test_signed_announce_binds_origin(two_block_node):
+    node, receipt = two_block_node
+    ids, ring = make_identities(2)
+    block = receipt.record.to_block()
+    sa = make_announce(ids[0], block, receipt.payload)
+    assert sa.verify_origin(ring)
+    assert sa.verify(ring, block, receipt.payload)
+    # signature from identity 1 claiming origin 0: forged
+    forged = SignedAnnounce(header=sa.header, checksum=sa.checksum,
+                            origin=sa.origin, pubkey=ids[1].pubkey,
+                            signature=ed25519_sign(
+                                ids[1].seed, b"whatever"),
+                            )
+    assert not forged.verify_origin(ring)
+    # bit-flipped signature
+    bad_sig = SignedAnnounce(header=sa.header, checksum=sa.checksum,
+                             origin=sa.origin, pubkey=sa.pubkey,
+                             signature=bytes([sa.signature[0] ^ 1])
+                             + sa.signature[1:])
+    assert not bad_sig.verify_origin(ring)
+
+
+@pytest.fixture
+def two_block_node():
+    from repro.chain.node import Node
+    node = Node(node_id=0, classic_arg_bits=6)
+    receipt = node.mine_block()
+    return node, receipt
+
+
+def test_payload_checksum_matches_wire(two_block_node):
+    from repro.chain.store import encode_payload, payload_checksum
+    _, receipt = two_block_node
+    body = encode_payload(receipt.payload)
+    assert payload_checksum(receipt.payload) == \
+        hashlib.sha256(body).digest()[:16]
