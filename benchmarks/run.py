@@ -759,6 +759,39 @@ def bench_wire_relay(n_peers: int = 4, n_blocks: int = 6) -> dict:
             "wire_relay_saving_frac": saving}
 
 
+def bench_mesh_discovery(n_peers: int = 5, n_blocks: int = 6) -> dict:
+    """DESIGN §14: single-seed mesh bootstrap.  N loopback peers start
+    knowing only peer0's address, learn the mesh from HELLO/ADDR
+    gossip, dial it full, then mine round-robin.  Rows: wall-clock to
+    full mesh, discovery rounds, and the post-discovery convergence
+    check — failing to fill the mesh or to converge is a hard failure
+    rather than a slow row."""
+    from repro.chain.net import mesh_scenario
+
+    schedule = ("classic",) * n_blocks
+    # warmup (suite construction, identity derivation) off the clock
+    mesh_scenario(n_peers=2, seed=0, schedule=("classic",), oracle=False)
+    t0 = time.perf_counter()
+    rep = mesh_scenario(n_peers=n_peers, seed=0, schedule=schedule,
+                        oracle=False)
+    dt = time.perf_counter() - t0
+    if not rep["full_mesh"]:
+        raise RuntimeError("mesh_discovery: mesh never filled")
+    if not rep["converged"]:
+        raise RuntimeError("mesh_discovery: peers diverged")
+    row("mesh_discovery", rep["discovery_s"] * 1e6,
+        f"n_peers={n_peers} rounds={rep['discovery_rounds']} "
+        f"addrs_added={rep['addrs_added']} "
+        f"bytes_on_wire={rep['bytes_on_wire']} "
+        f"blocks_per_s={n_blocks / dt:.1f}")
+    return {"n_peers": n_peers, "n_blocks": n_blocks,
+            "mesh_discovery_us": rep["discovery_s"] * 1e6,
+            "mesh_discovery_rounds": rep["discovery_rounds"],
+            "mesh_total_us": dt * 1e6,
+            "mesh_bytes_on_wire": rep["bytes_on_wire"],
+            "mesh_addrs_added": rep["addrs_added"]}
+
+
 def bench_roofline():
     """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
     files = sorted(glob.glob("experiments/dryrun/*__single.json"))
@@ -842,7 +875,8 @@ def check_smoke_regression(measured: dict) -> int:
         return 0
     failures = 0
     for key in ("merkle_commit_us_device", "verify_chain_batched_us",
-                "workload_suite_dock_verify_us", "wire_relay_us"):
+                "workload_suite_dock_verify_us", "wire_relay_us",
+                "mesh_discovery_us"):
         base, got = baseline.get(key), measured.get(key)
         if base is None or got is None:
             continue
@@ -870,6 +904,7 @@ def _smoke_scale_metrics(train_section: bool = True,
                                        full_arg_bits=SMOKE_VERIFY_ARG_BITS)
         suite = bench_workload_suite(**SMOKE_SUITE)
         wire = bench_wire_relay()
+        mesh = bench_mesh_discovery()
     finally:
         _QUIET = False
     return {
@@ -883,6 +918,9 @@ def _smoke_scale_metrics(train_section: bool = True,
         "wire_relay_us": wire["wire_relay_us"],
         "wire_relay_compact_bytes": wire["wire_relay_compact_bytes"],
         "wire_relay_full_bytes": wire["wire_relay_full_bytes"],
+        "mesh_discovery_us": mesh["mesh_discovery_us"],
+        "mesh_discovery_rounds": mesh["mesh_discovery_rounds"],
+        "mesh_bytes_on_wire": mesh["mesh_bytes_on_wire"],
     }
 
 
@@ -917,6 +955,7 @@ def main(smoke: bool = False) -> None:
     payload["recovery"] = bench_recovery()
     payload["sim_chaos"] = bench_chaos()
     payload["wire_relay"] = bench_wire_relay()
+    payload["mesh_discovery"] = bench_mesh_discovery()
     payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
                                                      quiet=True)
     bench_sim_gossip()

@@ -20,6 +20,12 @@ process without touching consensus:
   unmodified ``Node`` with BIP-152-style compact relay (header +
   content checksum announces; bodies fetched by checksum on demand;
   already-seen payloads never cross the wire twice).
+* ``peerbook`` — the mesh layer (DESIGN.md §14): ``PeerBook`` is a
+  capped two-bucket address manager fed by signed HELLO/ADDR addr
+  gossip and driving outbound dialing; ``PeerScore`` ranks
+  connections for eviction and bans protocol abusers; ``TokenBucket``
+  rate-limits the serve path (GET_BODIES / GET_HEADERS) so a spammer
+  cannot starve honest sync.
 
 The correctness contract is the **convergence oracle**: peers mining
 over the wire — two OS processes over TCP (``python -m
@@ -32,20 +38,24 @@ Run the two-process TCP convergence demo (used by CI)::
 
     PYTHONPATH=src python -m repro.chain.net --demo
 """
-from repro.chain.net.identity import (KeyRing, PeerIdentity,
+from repro.chain.net.identity import (KeyRing, PeerAddr, PeerIdentity,
                                       SignedAnnounce, ed25519_public_key,
                                       ed25519_sign, ed25519_verify,
-                                      make_announce, make_identities)
-from repro.chain.net.messages import (MAX_BODY, PROTOCOL_VERSION, WIRE_MAGIC,
-                                      Announce, Bodies, FrameBuffer,
-                                      GetBodies, GetHeaders, Hello, Message,
-                                      Tip, decode_message, encode_message)
+                                      make_addr, make_announce,
+                                      make_identities)
+from repro.chain.net.messages import (MAX_ADDRS, MAX_BODY, PROTOCOL_VERSION,
+                                      WIRE_MAGIC, Addr, Announce, Bodies,
+                                      FrameBuffer, GetBodies, GetHeaders,
+                                      Hello, Message, Tip, decode_message,
+                                      encode_message)
 from repro.chain.net.peer import (PeerNode, PeerStats, chain_digest,
-                                  loopback_scenario)
+                                  loopback_scenario, mesh_scenario)
+from repro.chain.net.peerbook import PeerBook, PeerScore, TokenBucket
 from repro.chain.net.transport import (LoopbackHub, LoopbackPort,
                                        TcpTransport, WireStats)
 
 __all__ = [
+    "Addr",
     "Announce",
     "Bodies",
     "FrameBuffer",
@@ -55,15 +65,20 @@ __all__ = [
     "KeyRing",
     "LoopbackHub",
     "LoopbackPort",
+    "MAX_ADDRS",
     "MAX_BODY",
     "Message",
     "PROTOCOL_VERSION",
+    "PeerAddr",
+    "PeerBook",
     "PeerIdentity",
     "PeerNode",
+    "PeerScore",
     "PeerStats",
     "SignedAnnounce",
     "TcpTransport",
     "Tip",
+    "TokenBucket",
     "WIRE_MAGIC",
     "WireStats",
     "chain_digest",
@@ -73,6 +88,8 @@ __all__ = [
     "ed25519_verify",
     "encode_message",
     "loopback_scenario",
+    "make_addr",
     "make_announce",
     "make_identities",
+    "mesh_scenario",
 ]

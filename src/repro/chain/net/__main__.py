@@ -1,16 +1,22 @@
-"""``python -m repro.chain.net --demo`` — the two-OS-process TCP
-convergence oracle (DESIGN.md §13, run by CI's examples-smoke).
+"""``python -m repro.chain.net --demo [--peers N]`` — the N-OS-process
+TCP mesh convergence oracle (DESIGN.md §13–§14, run by CI's
+examples-smoke).
 
-The parent process listens on an ephemeral TCP port, spawns a child
-interpreter (``--role child``), and the two mine the heterogeneous
-workload suite round-robin over real TCP with signed compact relay
-(parent mines even heights, child odd).  When both reach the target
-height the child prints its canonical chain digest and credit book;
-the parent then mines the *same* schedule on an in-process ``Network``
-with the same seeds and requires all three — parent, child, oracle —
-to be bit-identical.  Wall-clock is bounded by ``--timeout``.
+The parent process (worker 0) listens on an ephemeral TCP port — the
+**single seed address** — and spawns N-1 child interpreters
+(``--role child``).  Every child knows only the seed: it dials it,
+learns the rest of the mesh from signed HELLO/ADDR gossip, and dials
+the peers its ``PeerBook`` proposes until the mesh is connected.  The
+N workers then mine the heterogeneous workload suite round-robin
+(block ``k`` is mined by worker ``k mod N``) over real TCP with
+signed compact relay.  When every worker sees every other at the
+target height, children print their canonical chain digest and credit
+book; the parent mines the *same* schedule on an in-process
+``Network`` with the same seeds and requires all N+1 — every worker
+plus the oracle — to be bit-identical.  Wall-clock is bounded by
+``--timeout``.
 
-Exit status 0 iff the chains converged AND matched the in-process
+Exit status 0 iff every chain converged AND matched the in-process
 oracle.
 """
 from __future__ import annotations
@@ -23,26 +29,51 @@ import subprocess
 import sys
 import time
 
-from repro.chain.net.identity import make_identities
+from repro.chain.net.identity import make_addr, make_identities
 from repro.chain.net.peer import (_SUITE_SCHEDULE, PeerNode, _suite_node,
                                   chain_digest)
 from repro.chain.net.transport import TcpTransport
 
 _RESULT_PREFIX = "RESULT "
+_HOST = "127.0.0.1"
 
 
-def _build_peer(idx: int, *, suite_seed: int) -> PeerNode:
-    identities, ring = make_identities(2)
+def _build_peer(idx: int, n_peers: int, *, suite_seed: int):
+    """One worker's peer plus the shared identity list (every process
+    derives the same deterministic identities, so any worker can
+    reconstruct the seed's signed addr locally)."""
+    identities, ring = make_identities(n_peers)
     node = _suite_node(idx, suite_seed=suite_seed, keyring=ring)
-    return PeerNode(node, identities[idx], ring, compact=True)
+    peer = PeerNode(node, identities[idx], ring, compact=True,
+                    max_peers=2 * n_peers)
+    return peer, identities
+
+
+async def _dial_round(peer: PeerNode, transport: TcpTransport) -> int:
+    """Dial every candidate the PeerBook proposes right now."""
+    dialed = 0
+    for cand in list(peer.dial_candidates()):
+        peer.note_dialing(cand.node_id)
+        try:
+            conn = await transport.connect(cand.host, cand.port,
+                                           retries=3, backoff=0.1)
+        except ConnectionError:
+            peer.note_dial_failed(cand.node_id)
+            continue
+        peer.on_dialed(conn, cand)
+        dialed += 1
+    if dialed:
+        await transport.drain()
+    return dialed
 
 
 async def _mine_loop(peer: PeerNode, transport: TcpTransport, idx: int,
-                     schedule, deadline: float) -> None:
+                     n_peers: int, schedule, deadline: float) -> None:
     """Round-robin over TCP: mine when the tip height is ours, else let
-    the reader tasks advance the chain.  After reaching the target,
-    keep serving body fetches until the other side reports the target
-    height too (its last block may still need our bodies)."""
+    the reader tasks advance the chain.  Between turns, dial whatever
+    the PeerBook has discovered.  After reaching the target, keep
+    serving body fetches until every known peer reports the target
+    height too (their last blocks may still need our bodies)."""
     loop = asyncio.get_running_loop()
     target = len(schedule)
     last_hello = 0.0
@@ -50,20 +81,23 @@ async def _mine_loop(peer: PeerNode, transport: TcpTransport, idx: int,
     while True:
         if loop.time() > deadline:
             raise TimeoutError(
-                f"peer {idx} stuck at height {peer.node.ledger.height}")
+                f"peer {idx} stuck at height {peer.node.ledger.height} "
+                f"knowing {sorted(peer.known_heights().items())}")
+        await _dial_round(peer, transport)
         h = peer.node.ledger.height
         if h != last_height:
             # announce every height change at once: a chain pull can
-            # jump several heights in one event, and the peer must see
+            # jump several heights in one event, and the peers must see
             # the final height before we are allowed to exit — a timer
             # alone races with shutdown
             last_height = h
             last_hello = loop.time()
             peer.broadcast_hello()
             await transport.drain()
-        if h >= target and max(peer.peer_heights.values(),
-                               default=0) >= target:
-            peer.broadcast_hello()       # parting beacon: peer exits too
+        heights = peer.known_heights()
+        if (h >= target and len(heights) >= n_peers - 1
+                and all(v >= target for v in heights.values())):
+            peer.broadcast_hello()       # parting beacon: peers exit too
             await transport.drain()
             return
         now = loop.time()
@@ -71,127 +105,160 @@ async def _mine_loop(peer: PeerNode, transport: TcpTransport, idx: int,
             last_hello = now
             peer.broadcast_hello()       # height beacon + resync trigger
             await transport.drain()
-        if h < target and h % 2 == idx:
+        if h < target and h % n_peers == idx:
             peer.mine_and_announce(schedule[h])
             await transport.drain()
         else:
             await asyncio.sleep(0.02)
 
 
-async def _run_child(port: int, *, suite_seed: int, timeout: float,
-                     schedule) -> dict:
-    peer = _build_peer(1, suite_seed=suite_seed)
-    transport = TcpTransport()
-    peer.attach(transport)
-    await transport.connect("127.0.0.1", port)
-    deadline = asyncio.get_running_loop().time() + timeout
-    await _mine_loop(peer, transport, 1, schedule, deadline)
-    await transport.drain()
-    report = {
-        "role": "child",
+def _report(peer: PeerNode, transport: TcpTransport, role: str) -> dict:
+    return {
+        "role": role,
         "height": peer.node.ledger.height,
         "chain_digest": chain_digest(peer.node),
         "book": sorted(peer.node.book.balances.items()),
         "chain_valid": peer.node.ledger.verify_chain(),
+        "known_ids": sorted(peer.known_heights()),
+        "n_conns": len(transport.peer_names()),
         "stats": peer.stats.to_dict(),
         "wire": transport.stats.to_dict(),
     }
-    # linger a moment so late body fetches from the parent still land
+
+
+async def _run_child(idx: int, seed_port: int, n_peers: int, *,
+                     suite_seed: int, timeout: float, schedule) -> dict:
+    peer, identities = _build_peer(idx, n_peers, suite_seed=suite_seed)
+    transport = TcpTransport()
+    peer.attach(transport)
+    own_port = await transport.listen(_HOST)
+    peer.addr = make_addr(identities[idx], _HOST, own_port)
+    # single-seed bootstrap: the only address a child starts with is
+    # worker 0's (its signed record is reconstructible — identities
+    # are deterministic — so it enters the tried bucket like any dial)
+    seed_addr = make_addr(identities[0], _HOST, seed_port)
+    peer.note_dialing(0)
+    conn = await transport.connect(_HOST, seed_port)
+    peer.on_dialed(conn, seed_addr)
+    deadline = asyncio.get_running_loop().time() + timeout
+    await _mine_loop(peer, transport, idx, n_peers, schedule, deadline)
+    await transport.drain()
+    report = _report(peer, transport, f"child{idx}")
+    # linger a moment so late body fetches from slower peers still land
     await asyncio.sleep(0.3)
     await transport.close()
     return report
 
 
-async def _run_parent(*, suite_seed: int, timeout: float,
+async def _run_parent(*, n_peers: int, suite_seed: int, timeout: float,
                       verbose: bool, schedule) -> int:
     t0 = time.perf_counter()
-    peer = _build_peer(0, suite_seed=suite_seed)
+    peer, identities = _build_peer(0, n_peers, suite_seed=suite_seed)
     transport = TcpTransport()
     peer.attach(transport)
-    port = await transport.listen()
-    child = subprocess.Popen(
-        [sys.executable, "-m", "repro.chain.net", "--role", "child",
-         "--port", str(port), "--suite-seed", str(suite_seed),
-         "--timeout", str(timeout), "--schedule", ",".join(schedule)],
-        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
-        text=True, env=dict(os.environ))
+    port = await transport.listen(_HOST)
+    peer.addr = make_addr(identities[0], _HOST, port)
+    children = [
+        subprocess.Popen(
+            [sys.executable, "-m", "repro.chain.net", "--role", "child",
+             "--index", str(i), "--port", str(port),
+             "--peers", str(n_peers), "--suite-seed", str(suite_seed),
+             "--timeout", str(timeout), "--schedule", ",".join(schedule)],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True, env=dict(os.environ))
+        for i in range(1, n_peers)]
+    outputs = []
     try:
         deadline = asyncio.get_running_loop().time() + timeout
-        await _mine_loop(peer, transport, 0, schedule, deadline)
+        await _mine_loop(peer, transport, 0, n_peers, schedule, deadline)
         await transport.drain()
-        out, _ = await asyncio.get_running_loop().run_in_executor(
-            None, lambda: child.communicate(timeout=timeout))
+        for child in children:
+            out, _ = await asyncio.get_running_loop().run_in_executor(
+                None, lambda c=child: c.communicate(timeout=timeout))
+            outputs.append(out)
     except BaseException:
-        if child.poll() is None:
-            child.kill()
-        try:
-            dump, _ = child.communicate(timeout=10)
-            print(f"--- child output ---\n{dump}", file=sys.stderr)
-        except Exception:
-            pass
+        for child in children:
+            if child.poll() is None:
+                child.kill()
+            try:
+                dump, _ = child.communicate(timeout=10)
+                print(f"--- child output ---\n{dump}", file=sys.stderr)
+            except Exception:
+                pass
         raise
     finally:
-        if child.poll() is None:
-            child.kill()
+        for child in children:
+            if child.poll() is None:
+                child.kill()
         await transport.close()
-    child_report = None
-    for line in (out or "").splitlines():
-        if line.startswith(_RESULT_PREFIX):
-            child_report = json.loads(line[len(_RESULT_PREFIX):])
-    if child_report is None:
-        print(out or "", file=sys.stderr)
-        print("FAIL: child produced no RESULT line", file=sys.stderr)
-        return 1
+    child_reports = []
+    for out in outputs:
+        found = None
+        for line in (out or "").splitlines():
+            if line.startswith(_RESULT_PREFIX):
+                found = json.loads(line[len(_RESULT_PREFIX):])
+        if found is None:
+            print(out or "", file=sys.stderr)
+            print("FAIL: a child produced no RESULT line", file=sys.stderr)
+            return 1
+        child_reports.append(found)
 
     # the in-process oracle: same seeds, same schedule, one interpreter
     from repro.chain.network import Network
-    identities, ring = make_identities(2)
+    oracle_ids, ring = make_identities(n_peers)
     net = Network.create(
-        2, node_factory=lambda i: _suite_node(
+        n_peers, node_factory=lambda i: _suite_node(
             i, suite_seed=suite_seed, keyring=ring),
-        identities=identities)
+        identities=oracle_ids)
     net.run(len(schedule), list(schedule))
     oracle_digest = chain_digest(net.nodes[0])
     oracle_book = sorted(net.nodes[0].book.balances.items())
 
     parent_digest = chain_digest(peer.node)
     parent_book = sorted(peer.node.book.balances.items())
-    ok = (parent_digest == child_report["chain_digest"] == oracle_digest
-          and parent_book == [tuple(e) for e in child_report["book"]]
-          == oracle_book
+    converged = all(r["chain_digest"] == parent_digest
+                    for r in child_reports)
+    ok = (converged and parent_digest == oracle_digest
+          and parent_book == oracle_book
+          and all([tuple(e) for e in r["book"]] == oracle_book
+                  for r in child_reports)
           and peer.node.ledger.verify_chain()
-          and child_report["chain_valid"])
+          and all(r["chain_valid"] for r in child_reports))
     report = {
-        "demo": "two-process TCP convergence",
+        "demo": f"{n_peers}-process TCP mesh convergence",
+        "n_peers": n_peers,
         "n_blocks": len(schedule),
         "height": peer.node.ledger.height,
-        "converged": parent_digest == child_report["chain_digest"],
+        "converged": converged,
         "oracle_match": ok,
         "chain_digest": parent_digest,
         "oracle_digest": oracle_digest,
         "elapsed_s": round(time.perf_counter() - t0, 3),
-        "parent_stats": peer.stats.to_dict(),
-        "child_stats": child_report["stats"],
-        "parent_wire": transport.stats.to_dict(),
-        "child_wire": child_report["wire"],
+        "parent": _report(peer, transport, "parent"),
+        "children": child_reports,
     }
     if verbose:
         print(json.dumps(report, indent=2))
     else:
         print(json.dumps({k: report[k] for k in
-                          ("converged", "oracle_match", "height",
-                           "elapsed_s")}))
+                          ("n_peers", "converged", "oracle_match",
+                           "height", "elapsed_s")}))
     return 0 if ok else 1
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--demo", action="store_true",
-                    help="run the two-process TCP convergence demo")
+                    help="run the N-process TCP mesh convergence demo")
+    ap.add_argument("--peers", type=int, default=2,
+                    help="total number of OS processes in the mesh "
+                         "(parent + N-1 children; default 2)")
     ap.add_argument("--role", choices=("parent", "child"),
                     default="parent")
+    ap.add_argument("--index", type=int, default=1,
+                    help="(child) this worker's index in [1, peers)")
     ap.add_argument("--port", type=int, default=0,
-                    help="(child) parent's listen port")
+                    help="(child) the seed's (parent's) listen port")
     ap.add_argument("--suite-seed", type=int, default=7)
     ap.add_argument("--timeout", type=float, default=600.0,
                     help="overall wall-clock bound (generous: first-run "
@@ -204,17 +271,23 @@ def main(argv=None) -> int:
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     schedule = tuple(f for f in args.schedule.split(",") if f)
+    if args.peers < 2:
+        ap.error("--peers must be >= 2")
     if args.role == "child":
+        if not (1 <= args.index < args.peers):
+            ap.error("--index must be in [1, peers)")
         report = asyncio.run(
-            _run_child(args.port, suite_seed=args.suite_seed,
+            _run_child(args.index, args.port, args.peers,
+                       suite_seed=args.suite_seed,
                        timeout=args.timeout, schedule=schedule))
         print(_RESULT_PREFIX + json.dumps(report), flush=True)
         return 0
     if not args.demo:
         ap.error("nothing to do: pass --demo (or --role child)")
     return asyncio.run(
-        _run_parent(suite_seed=args.suite_seed, timeout=args.timeout,
-                    verbose=args.verbose, schedule=schedule))
+        _run_parent(n_peers=args.peers, suite_seed=args.suite_seed,
+                    timeout=args.timeout, verbose=args.verbose,
+                    schedule=schedule))
 
 
 if __name__ == "__main__":

@@ -33,11 +33,13 @@ from repro.core.ledger import Block
 
 __all__ = [
     "KeyRing",
+    "PeerAddr",
     "PeerIdentity",
     "SignedAnnounce",
     "ed25519_public_key",
     "ed25519_sign",
     "ed25519_verify",
+    "make_addr",
     "make_announce",
     "make_identities",
 ]
@@ -255,6 +257,74 @@ def make_identities(n: int, *, seed: int = 0
     ids = {i: PeerIdentity.from_seed(i, seed * 1_000_003 + i)
            for i in range(n)}
     return ids, KeyRing.of(ids.values())
+
+
+# ---------------------------------------------------------------------------
+# self-signed peer addresses (the discovery gossip payload)
+# ---------------------------------------------------------------------------
+
+_ADDR_DOMAIN = b"PNPADDR1"
+MAX_HOST_LEN = 255
+
+
+def _addr_message(node_id: int, host: str, port: int) -> bytes:
+    return (_ADDR_DOMAIN + struct.pack("<q", node_id)
+            + struct.pack("<I", port) + host.encode("utf-8"))
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerAddr:
+    """A self-signed endpoint claim: "node ``node_id`` is reachable at
+    ``host:port``", signed by the node's own key.  Addr gossip relays
+    these records verbatim — a peer cannot fabricate an endpoint for
+    somebody else's identity, so a hostile relay can redirect *its own*
+    traffic but never poison the ``PeerBook`` mapping for an honest
+    node.  ``verify`` is the admission rule: structural sanity, the
+    signature under the carried key, and (when a ``KeyRing`` is
+    given) that the carried key IS the ring's key for the claimed id."""
+    node_id: int
+    host: str
+    port: int
+    pubkey: bytes
+    signature: bytes
+
+    def well_formed(self) -> bool:
+        """Structural sanity only (no crypto): field shapes a decoder
+        or book must refuse regardless of signatures."""
+        return (len(self.pubkey) == 32 and len(self.signature) == 64
+                and 0 < self.port < 65536
+                and 0 < len(self.host) <= MAX_HOST_LEN
+                and all(33 <= ord(c) < 127 for c in self.host))
+
+    def verify(self, keyring: Optional["KeyRing"] = None) -> bool:
+        """True iff this addr may enter a ``PeerBook``: well-formed,
+        self-signed under the carried key, and — with a ring — the
+        carried key matches the ring's key for ``node_id`` (an unknown
+        or mismatched identity never verifies)."""
+        if not self.well_formed():
+            return False
+        if keyring is not None:
+            expected = keyring.pubkey_of(self.node_id)
+            if expected is None or expected != self.pubkey:
+                return False
+        return ed25519_verify(
+            self.pubkey,
+            _addr_message(self.node_id, self.host, self.port),
+            self.signature)
+
+    @property
+    def endpoint(self) -> Tuple[str, int]:
+        return (self.host, self.port)
+
+
+def make_addr(identity: PeerIdentity, host: str, port: int) -> PeerAddr:
+    """Self-sign this identity's reachable endpoint (what its HELLO
+    carries and addr gossip relays)."""
+    return PeerAddr(
+        node_id=identity.node_id, host=host, port=port,
+        pubkey=identity.pubkey,
+        signature=identity.sign(
+            _addr_message(identity.node_id, host, port)))
 
 
 # ---------------------------------------------------------------------------

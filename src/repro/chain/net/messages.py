@@ -1,9 +1,13 @@
 """``repro.chain.net.messages`` — the typed, versioned wire catalogue.
 
-Six message types carry the whole peer protocol (DESIGN.md §13):
+Seven message types carry the whole peer protocol (DESIGN.md §13–14):
 
     HELLO        version, node id, pubkey, chain height (introduction
-                 + liveness beacon)
+                 + liveness beacon) + an optional self-signed listen
+                 address (``PeerAddr``) — the discovery bootstrap
+    ADDR         peer discovery gossip: a capped list of self-signed
+                 ``PeerAddr`` records relayed verbatim (a relay cannot
+                 forge an endpoint for someone else's identity)
     ANNOUNCE     compact block relay: canonical header bytes + payload
                  body checksum + the origin's signature; ``body`` is
                  optionally inlined (full-body relay, the baseline the
@@ -39,16 +43,19 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 # the journal's canonical encoding primitives ARE the wire body format
 # (one encoding discipline across disk and wire, by design)
+from repro.chain.net.identity import MAX_HOST_LEN, PeerAddr
 from repro.chain.store import _Corrupt, _R, _W
 from repro.chain.workload import ChainError
 
 __all__ = [
+    "Addr",
     "Announce",
     "Bodies",
     "FrameBuffer",
     "GetBodies",
     "GetHeaders",
     "Hello",
+    "MAX_ADDRS",
     "MAX_BODY",
     "PROTOCOL_VERSION",
     "Tip",
@@ -57,10 +64,11 @@ __all__ = [
     "encode_message",
 ]
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2          # v2: HELLO carries an optional PeerAddr
 WIRE_MAGIC = b"PNPW"
 MAX_BODY = 1 << 27            # 128 MiB: anything larger is damage/abuse
 CHECKSUM_LEN = 16
+MAX_ADDRS = 32                # per ADDR message: more is abuse
 
 MSG_HELLO = 1
 MSG_ANNOUNCE = 2
@@ -68,6 +76,7 @@ MSG_GET_HEADERS = 3
 MSG_TIP = 4
 MSG_GET_BODIES = 5
 MSG_BODIES = 6
+MSG_ADDR = 7
 
 _U8 = struct.Struct("<B")
 _U32 = struct.Struct("<I")
@@ -78,11 +87,23 @@ _HEAD_LEN = len(WIRE_MAGIC) + 1 + 4      # magic | msgtype | body_len
 class Hello:
     """Introduction + liveness beacon: who I am (claimed — only a
     signature proves it), which protocol I speak, how tall my chain
-    is.  A peer at a greater height is a sync trigger."""
+    is.  A peer at a greater height is a sync trigger.  ``addr`` is
+    the sender's self-signed listen endpoint (``identity.PeerAddr``)
+    — how a node bootstrapped from one seed address becomes
+    discoverable by the whole mesh; ``None`` for unreachable peers."""
     version: int
     node_id: int
     pubkey: bytes
     height: int
+    addr: Optional[PeerAddr] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Addr:
+    """Peer-discovery gossip: self-signed ``PeerAddr`` records relayed
+    verbatim (re-signing would let relays forge endpoints).  Capped at
+    ``MAX_ADDRS`` per message — a longer list never decodes."""
+    addrs: Tuple[PeerAddr, ...]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,10 +147,28 @@ class Bodies:
     bodies: Tuple[bytes, ...]
 
 
-Message = Union[Hello, Announce, GetHeaders, Tip, GetBodies, Bodies]
+Message = Union[Hello, Addr, Announce, GetHeaders, Tip, GetBodies, Bodies]
 
 
 # -- per-type body codecs ---------------------------------------------------
+
+
+def _enc_peer_addr(w: _W, a: PeerAddr) -> None:
+    w.i64(a.node_id)
+    w.s(a.host)
+    w.u32(a.port)
+    w.bstr(a.pubkey)
+    w.bstr(a.signature)
+
+
+def _dec_peer_addr(r: _R) -> PeerAddr:
+    a = PeerAddr(node_id=r.i64(), host=r.s(), port=r.u32(),
+                 pubkey=r.bstr(), signature=r.bstr())
+    # structural validation at the decoder: a malformed addr is frame
+    # damage, not something for the PeerBook to see
+    if not a.well_formed():
+        raise _Corrupt("malformed peer addr")
+    return a
 
 
 def _enc_hello(w: _W, m: Hello) -> None:
@@ -137,11 +176,28 @@ def _enc_hello(w: _W, m: Hello) -> None:
     w.i64(m.node_id)
     w.bstr(m.pubkey)
     w.u64(m.height)
+    w.opt(m.addr, lambda a: _enc_peer_addr(w, a))
 
 
 def _dec_hello(r: _R) -> Hello:
     return Hello(version=r.u32(), node_id=r.i64(), pubkey=r.bstr(),
-                 height=r.u64())
+                 height=r.u64(), addr=r.opt(lambda: _dec_peer_addr(r)))
+
+
+def _enc_addr(w: _W, m: Addr) -> None:
+    if len(m.addrs) > MAX_ADDRS:
+        raise ChainError(
+            f"addr message carries {len(m.addrs)} > {MAX_ADDRS} entries")
+    w.u32(len(m.addrs))
+    for a in m.addrs:
+        _enc_peer_addr(w, a)
+
+
+def _dec_addr(r: _R) -> Addr:
+    n = r.u32()
+    if n > MAX_ADDRS:
+        raise _Corrupt(f"addr message claims {n} > {MAX_ADDRS} entries")
+    return Addr(addrs=tuple(_dec_peer_addr(r) for _ in range(n)))
 
 
 def _enc_announce(w: _W, m: Announce) -> None:
@@ -226,6 +282,7 @@ _CODECS: Dict[type, Tuple[int, Callable]] = {
     Tip: (MSG_TIP, _enc_tip),
     GetBodies: (MSG_GET_BODIES, _enc_get_bodies),
     Bodies: (MSG_BODIES, _enc_bodies),
+    Addr: (MSG_ADDR, _enc_addr),
 }
 
 _DECODERS: Dict[int, Callable[[_R], Message]] = {
@@ -235,6 +292,7 @@ _DECODERS: Dict[int, Callable[[_R], Message]] = {
     MSG_TIP: _dec_tip,
     MSG_GET_BODIES: _dec_get_bodies,
     MSG_BODIES: _dec_bodies,
+    MSG_ADDR: _dec_addr,
 }
 
 

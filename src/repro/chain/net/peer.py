@@ -34,11 +34,14 @@ import hashlib
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.chain.net.identity import (KeyRing, PeerIdentity, SignedAnnounce,
+from repro.chain.net.identity import (KeyRing, PeerAddr, PeerIdentity,
+                                      SignedAnnounce, make_addr,
                                       make_announce, make_identities)
-from repro.chain.net.messages import (PROTOCOL_VERSION, Announce, Bodies,
-                                      GetBodies, GetHeaders, Hello, Message,
-                                      Tip)
+from repro.chain.net.messages import (MAX_ADDRS, PROTOCOL_VERSION, Addr,
+                                      Announce, Bodies, GetBodies,
+                                      GetHeaders, Hello, Message, Tip)
+from repro.chain.net.peerbook import (BAN_THRESHOLD, PeerBook, PeerScore,
+                                      TokenBucket, eviction_order)
 from repro.chain.net.transport import LoopbackHub
 from repro.chain.node import BlockReceipt, Node
 from repro.chain.store import (collect_jash_fns, decode_block, decode_payload,
@@ -52,6 +55,7 @@ __all__ = [
     "PeerStats",
     "chain_digest",
     "loopback_scenario",
+    "mesh_scenario",
 ]
 
 _ZERO_CK = b"\x00" * 16          # "body pruned at finalization" sentinel
@@ -86,6 +90,13 @@ class PeerStats:
     reorgs: int = 0
     blocks_committed: int = 0
     version_rejects: int = 0
+    addrs_recv: int = 0           # addr records seen in HELLO/ADDR
+    addrs_added: int = 0          # newly learned (relayed onward once)
+    addr_rejects: int = 0         # forged/mismatched addr records
+    rate_violations: int = 0      # serve-path limits we enforced
+    unsolicited: int = 0          # bodies nobody asked this peer for
+    evictions: int = 0            # connections dropped at max_peers
+    bans: int = 0                 # peers banned for misbehavior
 
     def to_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -111,17 +122,37 @@ class PeerNode:
 
     ``compact=True`` announces header+checksum and serves bodies on
     demand; ``compact=False`` inlines every body (the bandwidth
-    baseline the ``wire_relay`` bench compares against)."""
+    baseline the ``wire_relay`` bench compares against).
+
+    Mesh additions (DESIGN.md §14): ``addr`` is this peer's own
+    self-signed listen endpoint (carried in HELLO and gossiped);
+    ``peerbook`` collects verified addrs and yields
+    ``dial_candidates`` for the driver to connect; per-connection
+    ``PeerScore`` tracks behavior, bans at ``ban_threshold``
+    misbehavior points, and evicts the worst-scored connection past
+    ``max_peers``; token buckets rate-limit the GET_HEADERS /
+    GET_BODIES serve path (violations feed the score)."""
 
     def __init__(self, node: Node, identity: PeerIdentity,
                  keyring: Optional[KeyRing] = None, *,
                  compact: bool = True,
                  jash_fns: Optional[Dict[str, object]] = None,
-                 max_bodies: int = 4096) -> None:
+                 max_bodies: int = 4096,
+                 addr: Optional[PeerAddr] = None,
+                 peerbook: Optional[PeerBook] = None,
+                 max_peers: int = 8,
+                 ban_threshold: int = BAN_THRESHOLD,
+                 bodies_rate: float = 16.0, bodies_burst: float = 64.0,
+                 headers_rate: float = 8.0, headers_burst: float = 32.0,
+                 max_bodies_per_request: int = 64,
+                 max_pending: int = 256,
+                 clock=None) -> None:
         if keyring is None:
             keyring = getattr(node, "keyring", None)
         elif node.keyring is None:
             node.keyring = keyring      # one rule: the node enforces it
+        if max_peers < 1:
+            raise ValueError(f"max_peers must be >= 1, got {max_peers}")
         self.node = node
         self.identity = identity
         self.keyring = keyring
@@ -138,24 +169,168 @@ class PeerNode:
         # block hash -> original signed announce (re-gossip relays the
         # miner's signature; re-signing would break origin binding)
         self._anns: Dict[str, Announce] = {}
-        # checksum -> (block, announce, src) awaiting its body
-        self._pending: Dict[bytes, Tuple[Block, Announce, str]] = {}
+        # checksum -> (block, announce, src) awaiting its body —
+        # bounded: past max_pending the oldest entry is dropped (its
+        # block arrives later via an ordinary chain pull)
+        self._pending: "collections.OrderedDict[bytes, Tuple[Block, Announce, str]]" = \
+            collections.OrderedDict()
+        self.max_pending = max_pending
         self._sync: Dict[str, _SyncState] = {}
         self.peer_heights: Dict[str, int] = {}
+        # -- mesh state (discovery, scoring, rate limits) -------------
+        self.addr = addr
+        self.peerbook = peerbook if peerbook is not None else PeerBook(
+            self_id=identity.node_id, keyring=keyring)
+        self.max_peers = max_peers
+        self.ban_threshold = ban_threshold
+        self.scores: Dict[str, PeerScore] = {}
+        self.conn_ids: Dict[str, int] = {}   # conn name -> hello node id
+        self._clock = clock
+        self._bucket_cfg = {"bodies": (bodies_rate, bodies_burst),
+                            "headers": (headers_rate, headers_burst)}
+        self._buckets: Dict[Tuple[str, str], TokenBucket] = {}
+        self.max_bodies_per_request = max_bodies_per_request
+        self._helloed: set = set()       # conns our HELLO already went to
+        self._addr_sent: set = set()     # conns that got our addr gossip
+        self._banned_conns: set = set()
+        self._dialing: set = set()       # node ids with a dial in flight
+        # conn -> checksums we asked it for (bounded; solicited-reply
+        # check for unsolicited-body scoring)
+        self._asked: Dict[str, "collections.OrderedDict[bytes, bool]"] = {}
 
     # -- wiring -------------------------------------------------------
     def attach(self, port) -> None:
         """Connect to a transport port (``LoopbackPort``/
-        ``TcpTransport``): its messages flow into ``on_message``."""
+        ``TcpTransport``): its messages flow into ``on_message``;
+        transport-level quarantine events feed the sender's score."""
         self.port = port
         port.on_message = self.on_message
+        if hasattr(port, "on_quarantine"):
+            port.on_quarantine = self._on_quarantine
 
     def _peers(self) -> List[str]:
-        return self.port.peer_names() if self.port is not None else []
+        if self.port is None:
+            return []
+        return [n for n in self.port.peer_names()
+                if n not in self._banned_conns]
 
     def _send(self, dst: str, msg: Message) -> None:
-        if self.port is not None:
+        if self.port is not None and dst not in self._banned_conns:
             self.port.send(dst, msg)
+
+    def _now(self) -> float:
+        if self._clock is not None:
+            return self._clock()
+        if self.port is not None and hasattr(self.port, "now"):
+            return self.port.now()
+        return time.monotonic()
+
+    # -- scoring, banning, eviction (DESIGN §14) ----------------------
+    def _score(self, src: str) -> PeerScore:
+        sc = self.scores.get(src)
+        if sc is None:
+            sc = self.scores[src] = PeerScore()
+        return sc
+
+    def _punish(self, src: str, field: str, n: int = 1) -> None:
+        """Charge ``n`` misbehavior events of ``field`` against the
+        connection; ban (disconnect + PeerBook blacklist) past the
+        threshold.  Banning is by identity too when the conn completed
+        HELLO, so a banned peer cannot redial under a fresh name."""
+        sc = self._score(src)
+        setattr(sc, field, getattr(sc, field) + n)
+        if (sc.banned(self.ban_threshold)
+                and src not in self._banned_conns):
+            self._ban(src)
+
+    def _ban(self, src: str) -> None:
+        self.stats.bans += 1
+        self._banned_conns.add(src)
+        nid = self.conn_ids.get(src)
+        if nid is not None:
+            self.peerbook.ban(nid)
+        self._disconnect(src)
+
+    def _disconnect(self, src: str) -> None:
+        if self.port is not None and hasattr(self.port, "disconnect"):
+            self.port.disconnect(src)
+        self._sync.pop(src, None)
+        self._asked.pop(src, None)
+
+    def _on_quarantine(self, src: str) -> None:
+        """Transport saw a malformed frame from this connection."""
+        self._punish(src, "invalid_frames")
+
+    def _note_conn(self, src: str) -> None:
+        """First sign of life from a connection: create its score and
+        enforce the connection cap by evicting the worst-scored peer
+        (deterministic ordering — ``peerbook.eviction_order``)."""
+        if src in self.scores:
+            return
+        self._score(src)
+        names = self._peers()
+        while len(names) > self.max_peers:
+            ranked = eviction_order(
+                {n: self._score(n) for n in names})
+            victim = ranked[0]
+            self.stats.evictions += 1
+            self._disconnect(victim)
+            names = [n for n in names if n != victim]
+
+    def _bucket(self, src: str, kind: str) -> TokenBucket:
+        b = self._buckets.get((src, kind))
+        if b is None:
+            rate, burst = self._bucket_cfg[kind]
+            b = self._buckets[(src, kind)] = TokenBucket(rate, burst)
+        return b
+
+    def _note_asked(self, src: str, cks) -> None:
+        asked = self._asked.setdefault(src, collections.OrderedDict())
+        for ck in cks:
+            asked[ck] = True
+            asked.move_to_end(ck)
+        while len(asked) > 4 * self.max_pending:
+            asked.popitem(last=False)
+
+    # -- discovery (PeerBook-driven dialing) --------------------------
+    def known_heights(self) -> Dict[int, int]:
+        """Peer chain heights by *node id* (HELLO-mapped) — what the
+        N-process demo's exit condition reads."""
+        out: Dict[int, int] = {}
+        for name, h in self.peer_heights.items():
+            nid = self.conn_ids.get(name)
+            if nid is not None:
+                out[nid] = max(h, out.get(nid, -1))
+        return out
+
+    def dial_candidates(self) -> List[PeerAddr]:
+        """Who the driver should dial next: PeerBook selection minus
+        everyone already connected (by HELLO-mapped id) or mid-dial,
+        bounded by the connection cap."""
+        connected = {self.conn_ids[n] for n in self._peers()
+                     if n in self.conn_ids}
+        room = self.max_peers - len(self._peers())
+        if room <= 0:
+            return []
+        return self.peerbook.select(
+            room, exclude=connected | self._dialing)
+
+    def note_dialing(self, node_id: int) -> None:
+        self._dialing.add(node_id)
+
+    def note_dial_failed(self, node_id: int) -> None:
+        self._dialing.discard(node_id)
+        self.peerbook.mark_failed(node_id)
+
+    def on_dialed(self, conn: str, addr: PeerAddr) -> None:
+        """A dial to ``addr`` produced connection ``conn``: introduce
+        ourselves and promote the addr to the tried bucket."""
+        self._dialing.discard(addr.node_id)
+        self.conn_ids[conn] = addr.node_id
+        self.peerbook.mark_connected(addr.node_id)
+        self._note_conn(conn)
+        self._helloed.add(conn)
+        self._send(conn, self.hello())
 
     # -- body store ---------------------------------------------------
     def _remember_body(self, ck: bytes, body: bytes) -> None:
@@ -196,12 +371,58 @@ class PeerNode:
         return Hello(version=PROTOCOL_VERSION,
                      node_id=self.identity.node_id,
                      pubkey=self.identity.pubkey,
-                     height=self.node.ledger.height)
+                     height=self.node.ledger.height,
+                     addr=self.addr)
 
     def broadcast_hello(self) -> None:
         m = self.hello()
         for dst in self._peers():
+            self._helloed.add(dst)
             self._send(dst, m)
+
+    def _gossip_addrs(self, dst: str) -> None:
+        """Send everything the book knows to one (new) connection —
+        once per conn, chunked at the per-message cap."""
+        if dst in self._addr_sent:
+            return
+        self._addr_sent.add(dst)
+        known = self.peerbook.known()
+        if self.addr is not None:
+            known = [self.addr] + known
+        for i in range(0, len(known), MAX_ADDRS):
+            self._send(dst, Addr(addrs=tuple(known[i:i + MAX_ADDRS])))
+
+    def _relay_addr(self, addr: PeerAddr, exclude: str) -> None:
+        """Flood one newly learned addr to every other connection
+        (each addr is relayed at most once — ``PeerBook.add`` returns
+        True only on first admission)."""
+        m = Addr(addrs=(addr,))
+        for dst in self._peers():
+            if dst != exclude:
+                self._send(dst, m)
+
+    def _admit_addr(self, src: str, addr: PeerAddr, *,
+                    claimed_id: Optional[int] = None) -> None:
+        """One addr record from HELLO or ADDR gossip: fast-path exact
+        duplicates (no re-verification), verify + admit the rest, relay
+        genuinely new knowledge, and score forged records."""
+        self.stats.addrs_recv += 1
+        if addr.node_id == self.identity.node_id:
+            return                         # our own addr echoed back
+        if self.peerbook.has_exact(addr):
+            return                         # already known: no crypto
+        if claimed_id is not None and addr.node_id != claimed_id:
+            # a HELLO advertising someone else's addr as its own
+            self.stats.addr_rejects += 1
+            self._punish(src, "invalid_frames")
+            return
+        if not addr.verify(self.peerbook.keyring or self.keyring):
+            self.stats.addr_rejects += 1
+            self._punish(src, "invalid_frames")
+            return
+        if self.peerbook.add(addr, verified=True):
+            self.stats.addrs_added += 1
+            self._relay_addr(addr, exclude=src)
 
     def mine_and_announce(self, workload: Optional[str] = None
                           ) -> BlockReceipt:
@@ -243,8 +464,16 @@ class PeerNode:
 
     # -- inbound dispatch ---------------------------------------------
     def on_message(self, src: str, msg: Message) -> None:
+        if src in self._banned_conns:
+            return                         # dead to us
+        nid = self.conn_ids.get(src)
+        if nid is not None and nid in self.peerbook.banned:
+            return
+        self._note_conn(src)
         if isinstance(msg, Hello):
             self._on_hello(src, msg)
+        elif isinstance(msg, Addr):
+            self._on_addr(src, msg)
         elif isinstance(msg, Announce):
             self._on_announce(src, msg)
         elif isinstance(msg, GetHeaders):
@@ -259,10 +488,27 @@ class PeerNode:
     def _on_hello(self, src: str, m: Hello) -> None:
         if m.version != PROTOCOL_VERSION:
             self.stats.version_rejects += 1
+            self._punish(src, "invalid_frames")
             return
+        self.conn_ids[src] = m.node_id
         self.peer_heights[src] = m.height
+        if m.node_id in self.peerbook.banned:
+            self._ban(src)                 # banned identity redialing
+            return
+        if m.addr is not None:
+            self._admit_addr(src, m.addr, claimed_id=m.node_id)
+        if src not in self._helloed:       # introduce ourselves back
+            self._helloed.add(src)
+            self._send(src, self.hello())
+        self._gossip_addrs(src)            # once per conn
+        if self.conn_ids.get(src) == m.node_id:
+            self.peerbook.mark_connected(m.node_id)
         if m.height > self.node.ledger.height:
             self._request_sync(src)
+
+    def _on_addr(self, src: str, m: Addr) -> None:
+        for addr in m.addrs:
+            self._admit_addr(src, addr)
 
     def _on_announce(self, src: str, a: Announce) -> None:
         self.stats.announces_recv += 1
@@ -292,7 +538,13 @@ class PeerNode:
                 self.stats.compact_hits += 1    # nothing crosses the wire
         if body is None:
             self._pending[a.checksum] = (block, a, src)
+            self._pending.move_to_end(a.checksum)
+            while len(self._pending) > self.max_pending:
+                # bounded in-flight table: the dropped block arrives
+                # later via an ordinary chain pull
+                self._pending.popitem(last=False)
             self.stats.body_requests += 1
+            self._note_asked(src, (a.checksum,))
             self._send(src, GetBodies(checksums=(a.checksum,)))
             return
         self._process(src, block, a, body)
@@ -315,11 +567,16 @@ class PeerNode:
         self._anns[block.block_hash] = dataclasses.replace(ann, body=None)
         if ok:
             self.stats.blocks_committed += 1
+            self._score(src).useful_blocks += 1
             self._regossip(block, ann, exclude=src)
         elif not self.node.has_block(block.block_hash):
             self._request_sync(src)
 
     def _on_get_headers(self, src: str, g: GetHeaders) -> None:
+        if not self._bucket(src, "headers").allow(self._now()):
+            self.stats.rate_violations += 1
+            self._punish(src, "rate_violations")
+            return                         # throttled: no reply
         entries = tuple(
             (encode_block(blk), self._ck_of_height(h))
             for h, blk in enumerate(self.node.ledger.blocks)
@@ -330,6 +587,12 @@ class PeerNode:
         self._sync.pop(src, None)
         if t.start != 0:
             return                         # we only ever pull from 0
+        if len(t.entries) < self.node.ledger.height:
+            # strictly shorter than us: the peer advertised a height it
+            # cannot deliver (equality is the honest caught-up-while-
+            # pulling race and goes unscored)
+            self._punish(src, "stale_tips")
+            return
         if len(t.entries) <= self.node.ledger.height:
             return                         # not longer: no fork choice
         try:
@@ -349,6 +612,7 @@ class PeerNode:
         if missing:
             self._sync[src] = state
             self.stats.body_requests += len(missing)
+            self._note_asked(src, missing)
             self._send(src, GetBodies(checksums=tuple(sorted(missing))))
             return
         self._finish_sync(src, state)
@@ -396,19 +660,44 @@ class PeerNode:
             self.stats.blocks_committed += 1
 
     def _on_get_bodies(self, src: str, g: GetBodies) -> None:
+        """DoS-hardened body serving: a per-request count cap, a
+        token-bucket rate limit charging one token per requested body,
+        and an *always-reply* discipline — an admitted request gets a
+        ``Bodies`` even when nothing was found, so an honest requester
+        holding an unknown or finality-pruned checksum detects the
+        miss and falls back to headers-first sync instead of waiting
+        forever.  Violations feed the requester's score; a throttled
+        request is never served."""
+        if len(g.checksums) > self.max_bodies_per_request:
+            self.stats.rate_violations += 1
+            self._punish(src, "rate_violations")
+            return
+        if not self._bucket(src, "bodies").allow(
+                self._now(), cost=float(max(len(g.checksums), 1))):
+            self.stats.rate_violations += 1
+            self._punish(src, "rate_violations")
+            return
         bodies = []
         for ck in g.checksums:
+            if ck == _ZERO_CK:
+                continue                   # pruned-body sentinel: skip
             body = self._lookup_body(ck)
             if body is not None:
                 bodies.append(body)
-        if bodies:
-            self.stats.bodies_served += len(bodies)
-            self._send(src, Bodies(bodies=tuple(bodies)))
+        self.stats.bodies_served += len(bodies)
+        self._send(src, Bodies(bodies=tuple(bodies)))
 
     def _on_bodies(self, src: str, b: Bodies) -> None:
+        asked = self._asked.get(src, collections.OrderedDict())
         got = set()
         for body in b.bodies:
             ck = hashlib.sha256(body).digest()[:16]
+            if ck not in asked:
+                # a body nobody asked this peer for: unmetered push
+                self.stats.unsolicited += 1
+                self._punish(src, "unsolicited")
+                continue
+            asked.pop(ck, None)
             self._remember_body(ck, body)
             got.add(ck)
             self.stats.bodies_recv += 1
@@ -422,6 +711,22 @@ class PeerNode:
             if not state.missing:
                 del self._sync[src]
                 self._finish_sync(src, state)
+            elif not got:
+                # the peer answered but could not serve what the sync
+                # still needs (unknown/pruned over there): abandon this
+                # pull — ordinary announce flow or another peer's
+                # headers will cover it
+                del self._sync[src]
+        # announce-path fetches this reply failed to cover (unknown or
+        # pruned on the serving side): drop them and fall back to a
+        # headers-first pull from the same peer
+        stranded = [ck for ck, (_, _, who) in self._pending.items()
+                    if who == src and ck in asked and ck not in got]
+        for ck in stranded:
+            self._pending.pop(ck, None)
+            asked.pop(ck, None)
+        if stranded:
+            self._request_sync(src)
 
 
 # ---------------------------------------------------------------------------
@@ -518,6 +823,130 @@ def loopback_scenario(n_peers: int = 4, seed: int = 0, *,
             node_factory=lambda i: _suite_node(
                 i, suite_seed=suite_seed, keyring=used_ring),
             identities=identities if signed else None)
+        net.run(len(schedule), list(schedule))
+        oracle_digest = chain_digest(net.nodes[0])
+        oracle_books = tuple(sorted(net.nodes[0].book.balances.items()))
+        report["oracle_digest"] = oracle_digest
+        report["oracle_match"] = bool(
+            converged and digests[0] == oracle_digest
+            and books[0] == oracle_books)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# the N-peer single-seed mesh scenario (discovery + scoring, DESIGN §14)
+# ---------------------------------------------------------------------------
+
+
+def _mesh_complete(peers: List[PeerNode]) -> bool:
+    """Every peer is connected to every other (or holds its cap)."""
+    want = len(peers) - 1
+    return all(len(pn._peers()) >= min(want, pn.max_peers)
+               for pn in peers)
+
+
+def drive_discovery(hub: LoopbackHub, peers: List[PeerNode],
+                    *, max_rounds: int = 16) -> int:
+    """Deterministic discovery driver for loopback meshes: each round
+    pumps gossip, then dials every PeerBook candidate (the loopback
+    "address" of node ``i`` is the port name ``peer{i}``).  Returns
+    the number of rounds until no peer wants another connection."""
+    for rounds in range(1, max_rounds + 1):
+        dialed = 0
+        for pn in peers:
+            for cand in pn.dial_candidates():
+                dst = f"peer{cand.node_id}"
+                if hub.connect(pn.port.name, dst):
+                    pn.on_dialed(dst, cand)
+                    dialed += 1
+                else:
+                    # the other side dialed us first — same link
+                    pn.conn_ids.setdefault(dst, cand.node_id)
+                    pn.peerbook.mark_connected(cand.node_id)
+        hub.pump()
+        if not dialed and _mesh_complete(peers):
+            return rounds
+    return max_rounds
+
+
+def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
+                  compact: bool = True,
+                  drop_prob: float = 0.0,
+                  suite_seed: int = 7,
+                  schedule: Sequence[str] = _SUITE_SCHEDULE,
+                  oracle: bool = True,
+                  max_peers: Optional[int] = None,
+                  max_rounds: int = 16) -> Dict[str, object]:
+    """N peers bootstrapped from a **single seed address**: every peer
+    starts linked only to ``peer0``, learns the rest of the mesh from
+    HELLO addr payloads and ADDR gossip, dials it full, then mines the
+    heterogeneous suite round-robin — and must still reconverge
+    bit-identically with the in-process ``Network`` oracle (tips,
+    ledgers, credit books).  The report adds discovery metrics (rounds
+    and wall-clock to full mesh — the ``mesh_discovery`` bench row)
+    and per-peer score/book state."""
+    identities, ring = make_identities(n_peers)
+    hub = LoopbackHub(seed=seed, drop_prob=drop_prob, full_mesh=False)
+    cap = max_peers if max_peers is not None else n_peers + 2
+    peers: List[PeerNode] = []
+    t0 = time.perf_counter()
+    for i in range(n_peers):
+        node = _suite_node(i, suite_seed=suite_seed, keyring=ring)
+        pn = PeerNode(node, identities[i], ring, compact=compact,
+                      addr=make_addr(identities[i], "loopback", 9000 + i),
+                      max_peers=cap)
+        pn.attach(hub.register(f"peer{i}"))
+        peers.append(pn)
+    # single-seed bootstrap: the only links are peer{i} -> peer0
+    for i in range(1, n_peers):
+        hub.connect(f"peer{i}", "peer0")
+        peers[i].conn_ids["peer0"] = 0
+        peers[i].broadcast_hello()
+    hub.pump()
+    rounds = drive_discovery(hub, peers, max_rounds=max_rounds)
+    discovery_s = time.perf_counter() - t0
+    full_mesh = _mesh_complete(peers)
+    # mine the suite round-robin over the discovered topology
+    for b, family in enumerate(schedule):
+        peers[b % n_peers].mine_and_announce(family)
+        hub.pump()
+    for _ in range(8):
+        heights = {pn.node.ledger.height for pn in peers}
+        if len(heights) == 1:
+            break
+        for pn in peers:
+            pn.broadcast_hello()
+        hub.pump()
+    elapsed = time.perf_counter() - t0
+    digests = [chain_digest(pn.node) for pn in peers]
+    books = [tuple(sorted(pn.node.book.balances.items())) for pn in peers]
+    converged = (len(set(digests)) == 1 and len(set(books)) == 1
+                 and all(pn.node.ledger.verify_chain() for pn in peers))
+    report: Dict[str, object] = {
+        "n_peers": n_peers,
+        "n_blocks": len(schedule),
+        "compact": compact,
+        "drop_prob": drop_prob,
+        "converged": converged,
+        "full_mesh": full_mesh,
+        "discovery_rounds": rounds,
+        "discovery_s": round(discovery_s, 4),
+        "links": {pn.port.name: pn.port.peer_names() for pn in peers},
+        "height": peers[0].node.ledger.height,
+        "chain_digest": digests[0],
+        "bytes_on_wire": hub.total_bytes(),
+        "addrs_added": sum(pn.stats.addrs_added for pn in peers),
+        "elapsed_s": round(elapsed, 3),
+        "peer_stats": [pn.stats.to_dict() for pn in peers],
+        "peerbooks": [pn.peerbook.to_dict() for pn in peers],
+    }
+    if oracle:
+        from repro.chain.network import Network
+        net = Network.create(
+            n_peers,
+            node_factory=lambda i: _suite_node(
+                i, suite_seed=suite_seed, keyring=ring),
+            identities=identities)
         net.run(len(schedule), list(schedule))
         oracle_digest = chain_digest(net.nodes[0])
         oracle_books = tuple(sorted(net.nodes[0].book.balances.items()))

@@ -1,0 +1,310 @@
+"""``repro.chain.net.peerbook`` — who to dial, who to keep, who to
+throttle (DESIGN.md §14).
+
+Three small, deterministic pieces turn the point-to-point PR-7 wire
+into an open(able) mesh:
+
+* ``PeerBook`` — the address manager.  Verified ``PeerAddr`` records
+  live in two capped buckets, Bitcoin-addrman style: ``new`` (gossip
+  we have never connected to) and ``tried`` (endpoints that carried a
+  live connection).  Eviction is *deterministic and order-free*: each
+  bucket keeps the entries with the smallest salted-hash keys, so the
+  retained set depends only on the set of ids ever added — never on
+  arrival order — which is what makes discovery reproducible under a
+  seeded transport.
+* ``PeerScore`` — per-connection behavior ledger.  Useful blocks earn
+  credit; invalid frames, unsolicited bodies, stale tips and rate
+  violations cost misbehavior points.  ``banned`` trips at a fixed
+  misbehavior threshold and is **monotone**: more misbehavior can
+  never un-ban a peer (the property test pins this).
+* ``TokenBucket`` — the serve-path rate limiter (GET_BODIES /
+  GET_HEADERS).  Driven by an explicit clock (the loopback hub's
+  simulated time in tests, ``time.monotonic`` on real TCP), so the
+  admission bound — never more than ``burst + rate * elapsed`` cost in
+  any window — is exactly testable.
+
+Nothing here does IO: ``PeerNode`` consults the book for dial
+candidates, feeds the scores, and asks the buckets before serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.chain.net.identity import KeyRing, PeerAddr
+
+__all__ = [
+    "PeerBook",
+    "PeerScore",
+    "TokenBucket",
+]
+
+
+# ---------------------------------------------------------------------------
+# token bucket (serve-path rate limiting)
+# ---------------------------------------------------------------------------
+
+
+class TokenBucket:
+    """Classic token bucket with an explicit clock.
+
+    ``allow(now, cost)`` admits a request iff the bucket holds
+    ``cost`` tokens after refilling at ``rate`` tokens/second since
+    the last call, capped at ``burst``.  Time moving backwards (a
+    hostile or buggy clock) refills nothing — the bucket clamps to
+    monotone time, so for **any** event sequence the admitted cost
+    through elapsed time ``t`` is bounded by ``burst + rate * t``
+    (the Hypothesis property in ``tests/test_peerbook.py``)."""
+
+    def __init__(self, rate: float, burst: float) -> None:
+        if not (rate > 0.0):
+            raise ValueError(f"rate must be positive, got {rate}")
+        if not (burst >= 1.0):
+            raise ValueError(f"burst must be >= 1, got {burst}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t_last: Optional[float] = None
+        self.admitted = 0
+        self.rejected = 0
+
+    def _refill(self, now: float) -> None:
+        if self._t_last is None:
+            self._t_last = now
+            return
+        if now > self._t_last:
+            self.tokens = min(self.burst,
+                              self.tokens + self.rate * (now - self._t_last))
+            self._t_last = now
+        # now <= t_last: clock went backwards — no refill, no rewind
+
+    def peek(self, now: float) -> float:
+        """Tokens available at ``now`` (refills as a side effect)."""
+        self._refill(now)
+        return self.tokens
+
+    def allow(self, now: float, cost: float = 1.0) -> bool:
+        if cost < 0:
+            raise ValueError(f"cost must be >= 0, got {cost}")
+        self._refill(now)
+        if self.tokens >= cost:
+            self.tokens -= cost
+            self.admitted += 1
+            return True
+        self.rejected += 1
+        return False
+
+
+# ---------------------------------------------------------------------------
+# per-connection behavior scoring
+# ---------------------------------------------------------------------------
+
+# misbehavior weights (points per event); ban at >= BAN_THRESHOLD
+W_INVALID = 20          # undecodable/forged frame content, bad signature
+W_RATE = 10             # serve-path rate-limit / request-cap violation
+W_STALE = 5             # advertised a height it could not deliver
+W_UNSOLICITED = 2       # bodies/addrs nobody asked for
+W_USEFUL = 5            # credit per block this peer genuinely delivered
+BAN_THRESHOLD = 100
+
+
+@dataclasses.dataclass
+class PeerScore:
+    """Behavior ledger for one connection.  ``score`` ranks peers for
+    eviction (higher = keep); ``misbehavior`` only ever grows, and
+    ``banned`` is monotone in it — useful blocks buy eviction
+    priority, **not** forgiveness for protocol abuse."""
+    useful_blocks: int = 0
+    invalid_frames: int = 0
+    rate_violations: int = 0
+    stale_tips: int = 0
+    unsolicited: int = 0
+
+    def misbehavior(self) -> int:
+        return (W_INVALID * self.invalid_frames
+                + W_RATE * self.rate_violations
+                + W_STALE * self.stale_tips
+                + W_UNSOLICITED * self.unsolicited)
+
+    def score(self) -> int:
+        return W_USEFUL * self.useful_blocks - self.misbehavior()
+
+    def banned(self, threshold: int = BAN_THRESHOLD) -> bool:
+        return self.misbehavior() >= threshold
+
+    def to_dict(self) -> Dict[str, int]:
+        d = dataclasses.asdict(self)
+        d["score"] = self.score()
+        d["misbehavior"] = self.misbehavior()
+        return d
+
+
+def eviction_order(scores: Dict[str, PeerScore]) -> List[str]:
+    """Connection names worst-first — the deterministic eviction
+    ranking: ascending score, name as the total tie-break (so the
+    victim never depends on dict insertion order)."""
+    return sorted(scores, key=lambda n: (scores[n].score(), n))
+
+
+# ---------------------------------------------------------------------------
+# the address manager
+# ---------------------------------------------------------------------------
+
+
+class PeerBook:
+    """Capped two-bucket address manager driving outbound dialing.
+
+    ``add`` admits only addrs that ``PeerAddr.verify`` accepts (under
+    the book's ring, when set) — a malformed or forged addr never
+    enters.  ``mark_connected`` promotes an id to ``tried``;
+    ``mark_failed`` demotes it back to ``new`` (and drops it after
+    ``max_failures`` consecutive failures); ``ban`` removes the id and
+    refuses it forever.  ``select`` returns dial candidates tried-
+    bucket-first in deterministic salted-hash order.
+
+    Both buckets are capped.  Eviction keeps the ``max_*`` entries
+    with the smallest ``sha256(salt | node_id)`` keys: deterministic,
+    insertion-order-free, and uniform over ids — an attacker cannot
+    choose arrival order to flush honest entries."""
+
+    def __init__(self, *, self_id: Optional[int] = None,
+                 keyring: Optional[KeyRing] = None,
+                 max_new: int = 64, max_tried: int = 32,
+                 max_failures: int = 3, salt: int = 0) -> None:
+        if max_new < 1 or max_tried < 1:
+            raise ValueError("bucket caps must be >= 1")
+        self.self_id = self_id
+        self.keyring = keyring
+        self.max_new = max_new
+        self.max_tried = max_tried
+        self.max_failures = max_failures
+        self.salt = salt
+        self.new: Dict[int, PeerAddr] = {}
+        self.tried: Dict[int, PeerAddr] = {}
+        self.banned: set = set()
+        self.failures: Dict[int, int] = {}
+        self.rejected = 0            # addrs refused admission
+        self.evicted = 0
+
+    # -- internals ----------------------------------------------------
+    def _key(self, node_id: int) -> bytes:
+        return hashlib.sha256(
+            b"pnp-peerbook|" + struct.pack("<q", self.salt)
+            + struct.pack("<q", node_id)).digest()
+
+    def _trim(self, bucket: Dict[int, PeerAddr], cap: int) -> None:
+        while len(bucket) > cap:
+            worst = max(bucket, key=self._key)
+            del bucket[worst]
+            self.evicted += 1
+
+    # -- admission ----------------------------------------------------
+    def has_exact(self, addr: PeerAddr) -> bool:
+        """True iff this exact record (endpoint AND signature) is
+        already held — the gossip fast path that skips re-verifying
+        a signature we have verified before."""
+        nid = addr.node_id
+        return self.tried.get(nid) == addr or self.new.get(nid) == addr
+
+    def add(self, addr: PeerAddr, *, verified: bool = False) -> bool:
+        """Admit a gossiped addr into ``new`` (or refresh an existing
+        entry).  Returns True iff the addr is *newly learned* — the
+        caller's cue to relay it onward exactly once.  ``verified``
+        skips the (slow) signature check when the caller already ran
+        ``addr.verify`` against this book's ring; structural sanity is
+        never skipped — a malformed addr cannot enter."""
+        if not isinstance(addr, PeerAddr):
+            self.rejected += 1
+            return False
+        if verified:
+            if not addr.well_formed():
+                self.rejected += 1
+                return False
+        elif not addr.verify(self.keyring):
+            self.rejected += 1
+            return False
+        nid = addr.node_id
+        if nid == self.self_id or nid in self.banned:
+            self.rejected += 1
+            return False
+        if nid in self.tried:
+            if self.tried[nid].endpoint != addr.endpoint:
+                self.tried[nid] = addr      # endpoint moved: refresh
+            return False
+        novel = nid not in self.new
+        known = self.new.get(nid)
+        if known is None or known.endpoint != addr.endpoint:
+            self.new[nid] = addr
+            self._trim(self.new, self.max_new)
+        return novel and nid in self.new
+
+    # -- lifecycle ----------------------------------------------------
+    def mark_connected(self, node_id: int) -> None:
+        """A live connection reached this id: promote to ``tried``."""
+        addr = self.new.pop(node_id, None)
+        if addr is None:
+            addr = self.tried.get(node_id)
+        if addr is None:
+            return
+        self.failures.pop(node_id, None)
+        self.tried[node_id] = addr
+        self._trim(self.tried, self.max_tried)
+
+    def mark_failed(self, node_id: int) -> None:
+        """A dial to this id failed: demote tried -> new; drop entirely
+        after ``max_failures`` consecutive failures."""
+        n = self.failures.get(node_id, 0) + 1
+        self.failures[node_id] = n
+        addr = self.tried.pop(node_id, None)
+        if addr is not None and n < self.max_failures:
+            self.new[node_id] = addr
+            self._trim(self.new, self.max_new)
+        elif n >= self.max_failures:
+            self.new.pop(node_id, None)
+            self.failures.pop(node_id, None)
+
+    def ban(self, node_id: int) -> None:
+        """Remove and permanently refuse this id (misbehavior ban)."""
+        self.banned.add(node_id)
+        self.new.pop(node_id, None)
+        self.tried.pop(node_id, None)
+        self.failures.pop(node_id, None)
+
+    # -- selection ----------------------------------------------------
+    def select(self, n: int, exclude: Iterable[int] = ()) -> List[PeerAddr]:
+        """Up to ``n`` dial candidates, tried bucket first, each bucket
+        in deterministic salted-hash order, skipping ``exclude`` (the
+        ids already connected or being dialed)."""
+        skip = set(exclude) | self.banned
+        if self.self_id is not None:
+            skip.add(self.self_id)
+        out: List[PeerAddr] = []
+        for bucket in (self.tried, self.new):
+            for nid in sorted(bucket, key=self._key):
+                if len(out) >= n:
+                    return out
+                if nid not in skip:
+                    out.append(bucket[nid])
+                    skip.add(nid)
+        return out
+
+    def known(self) -> List[PeerAddr]:
+        """Every addr the book holds (tried first, deterministic order)
+        — what HELLO-triggered addr gossip sends a new peer."""
+        out = []
+        for bucket in (self.tried, self.new):
+            out.extend(bucket[nid] for nid in sorted(bucket, key=self._key))
+        return out
+
+    def __contains__(self, node_id: int) -> bool:
+        return node_id in self.new or node_id in self.tried
+
+    def __len__(self) -> int:
+        return len(self.new) + len(self.tried)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"new": sorted(self.new), "tried": sorted(self.tried),
+                "banned": sorted(self.banned),
+                "rejected": self.rejected, "evicted": self.evicted}

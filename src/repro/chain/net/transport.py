@@ -28,6 +28,7 @@ import dataclasses
 import heapq
 import random
 import sys
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.chain.net.messages import (FrameBuffer, Message, decode_message,
@@ -70,26 +71,41 @@ class WireStats:
 class LoopbackPort:
     """One peer's endpoint on a ``LoopbackHub``.  Assign
     ``on_message(src_name, msg)`` (``PeerNode.attach`` does) before
-    pumping."""
+    pumping.  ``on_quarantine(src_name)`` (optional) fires once per
+    malformed frame so the protocol layer can score the sender."""
 
     def __init__(self, hub: "LoopbackHub", name: str) -> None:
         self.hub = hub
         self.name = name
         self.stats = WireStats()
         self.on_message: Optional[Callable[[str, Message], None]] = None
+        self.on_quarantine: Optional[Callable[[str], None]] = None
 
     def peer_names(self) -> List[str]:
-        return [n for n in self.hub.ports if n != self.name]
+        return self.hub.links_of(self.name)
+
+    def now(self) -> float:
+        """The hub's simulated clock (drives the peer's rate buckets
+        deterministically)."""
+        return self.hub.now
 
     def send(self, dst: str, msg: Message) -> None:
         frame = encode_message(msg)
         self.hub._transmit(self.name, dst, frame, self.stats)
+
+    def disconnect(self, dst: str) -> None:
+        """Tear down the link to ``dst`` (eviction/ban): both ends stop
+        listing each other and in-flight frames on the link are dropped
+        at delivery."""
+        self.hub.disconnect(self.name, dst)
 
     def _deliver(self, src: str, frame: bytes) -> None:
         self.stats.note_recv(len(frame))
         msg = decode_message(frame)
         if msg is None:
             self.stats.quarantined += 1
+            if self.on_quarantine is not None:
+                self.on_quarantine(src)
             return
         if self.on_message is not None:
             self.on_message(src, msg)
@@ -106,7 +122,8 @@ class LoopbackHub:
     def __init__(self, *, seed: int = 0, min_latency: float = 0.01,
                  max_latency: float = 0.05, drop_prob: float = 0.0,
                  max_retries: int = 2,
-                 retry_backoff: float = 0.05) -> None:
+                 retry_backoff: float = 0.05,
+                 full_mesh: bool = True) -> None:
         self.ports: Dict[str, LoopbackPort] = {}
         self.rng = random.Random(seed)
         self.min_latency = min_latency
@@ -114,22 +131,53 @@ class LoopbackHub:
         self.drop_prob = drop_prob
         self.max_retries = max_retries
         self.retry_backoff = retry_backoff
+        self.full_mesh = full_mesh
         self.now = 0.0
         self._seq = 0
         self._queue: List[Tuple[float, int, str, str, bytes]] = []
+        self._links: Dict[str, set] = {}
 
     def register(self, name: str) -> LoopbackPort:
         if name in self.ports:
             raise ValueError(f"peer name {name!r} already registered")
         port = LoopbackPort(self, name)
+        self._links[name] = set()
+        if self.full_mesh:
+            # the PR-7 contract: every port sees every other (the mesh
+            # scenarios pass full_mesh=False and connect explicitly)
+            for other in self.ports:
+                self._links[name].add(other)
+                self._links[other].add(name)
         self.ports[name] = port
         return port
+
+    # -- explicit topology (mesh mode) --------------------------------
+    def links_of(self, name: str) -> List[str]:
+        return sorted(self._links.get(name, ()))
+
+    def connect(self, a: str, b: str) -> bool:
+        """Create the bidirectional link a<->b (a discovery dial).
+        Returns False if it already exists or either end is unknown."""
+        if a == b or a not in self.ports or b not in self.ports:
+            return False
+        if b in self._links[a]:
+            return False
+        self._links[a].add(b)
+        self._links[b].add(a)
+        return True
+
+    def disconnect(self, a: str, b: str) -> None:
+        self._links.get(a, set()).discard(b)
+        self._links.get(b, set()).discard(a)
 
     def _transmit(self, src: str, dst: str, frame: bytes,
                   stats: WireStats) -> None:
         """Send with loss + bounded retry: each attempt that reaches
         the wire costs bytes; a frame dropped ``max_retries + 1`` times
         is lost (the protocol above resyncs via chain pull)."""
+        if dst not in self._links.get(src, ()):
+            stats.drops += 1
+            return                         # no link: nothing to send on
         delay = 0.0
         for attempt in range(self.max_retries + 1):
             stats.note_sent(len(frame))    # every attempt costs bytes
@@ -164,8 +212,11 @@ class LoopbackHub:
             self.now = max(self.now, t)
             delivered += 1
             port = self.ports.get(dst)
-            if port is not None:
-                port._deliver(src, frame)
+            if port is None:
+                continue
+            if src in self.ports and src not in self._links.get(dst, ()):
+                continue                   # link torn down in flight
+            port._deliver(src, frame)
         return delivered
 
     def total_bytes(self) -> int:
@@ -189,6 +240,7 @@ class TcpTransport:
         self.handler_errors: List[str] = []
         self.quarantine_limit = quarantine_limit
         self.on_message: Optional[Callable[[str, Message], None]] = None
+        self.on_quarantine: Optional[Callable[[str], None]] = None
         self._writers: Dict[str, asyncio.StreamWriter] = {}
         self._server: Optional[asyncio.AbstractServer] = None
         self._tasks: List[asyncio.Task] = []
@@ -199,6 +251,10 @@ class TcpTransport:
     def peer_names(self) -> List[str]:
         return list(self._writers)
 
+    def now(self) -> float:
+        """Monotonic wall clock (drives the peer's rate buckets)."""
+        return time.monotonic()
+
     def send(self, dst: str, msg: Message) -> None:
         writer = self._writers.get(dst)
         if writer is None or writer.is_closing():
@@ -206,6 +262,16 @@ class TcpTransport:
         frame = encode_message(msg)
         self.stats.note_sent(len(frame))
         writer.write(frame)
+
+    def disconnect(self, dst: str) -> None:
+        """Close one connection (eviction/ban): its reader task winds
+        down and the name disappears from ``peer_names``."""
+        writer = self._writers.pop(dst, None)
+        if writer is not None:
+            try:
+                writer.close()
+            except Exception:
+                pass
 
     # -- lifecycle ----------------------------------------------------
     async def listen(self, host: str = "127.0.0.1",
@@ -267,8 +333,12 @@ class TcpTransport:
                 for msg in fb.feed(data):
                     self.stats.frames_recv += 1
                     self._dispatch(name, msg)
-                self.stats.quarantined += fb.quarantined - seen_quarantined
+                fresh = fb.quarantined - seen_quarantined
+                self.stats.quarantined += fresh
                 seen_quarantined = fb.quarantined
+                if fresh and self.on_quarantine is not None:
+                    for _ in range(fresh):
+                        self.on_quarantine(name)
                 if fb.quarantined > self.quarantine_limit:
                     break                  # hostile/broken peer: drop
         finally:

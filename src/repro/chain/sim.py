@@ -1069,7 +1069,7 @@ def _main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario",
                     choices=("partition", "adversarial", "throughput",
-                             "heterogeneous", "chaos", "wire"),
+                             "heterogeneous", "chaos", "wire", "mesh"),
                     default="partition")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--nodes", type=int, default=4,
@@ -1088,6 +1088,19 @@ def _main() -> int:
         assert report["converged"], "wire peers failed to converge"
         assert report["oracle_match"], \
             "wire-relayed chain diverged from the in-process oracle"
+        return 0
+    if args.scenario == "mesh":
+        # N >= 5 peers bootstrapped from a single seed address: HELLO/
+        # ADDR discovery fills the mesh, then mining must still match
+        # the in-process oracle bit-for-bit (DESIGN.md §14)
+        from repro.chain.net import mesh_scenario
+        report = mesh_scenario(n_peers=max(args.nodes, 5),
+                               seed=args.seed)
+        print(json.dumps(report, indent=2, sort_keys=True))
+        assert report["full_mesh"], "discovery failed to fill the mesh"
+        assert report["converged"], "mesh peers failed to converge"
+        assert report["oracle_match"], \
+            "mesh-relayed chain diverged from the in-process oracle"
         return 0
     if args.scenario == "partition":
         sim = partitioned_scenario(n_nodes=args.nodes, seed=args.seed)

@@ -1,0 +1,85 @@
+"""Shared test infrastructure (DESIGN.md §14 flake-proofing).
+
+Two hazards make asyncio TCP tests flaky on loaded CI machines:
+
+* a wedged reader/writer task can hang a test forever (pytest has no
+  built-in per-test timeout and ``pytest-timeout`` is not a declared
+  dependency), and
+* an event loop or socket leaked by one test surfaces as a spurious
+  ``ResourceWarning`` — or worse, a port clash — in a *later* test.
+
+``_per_test_alarm`` gives every test in the wire/net modules a hard
+SIGALRM deadline (override anywhere with ``@pytest.mark.timeout_s(N)``;
+``0`` disables).  The alarm raises ``pytest.fail`` in the main thread,
+so a hung ``asyncio.run`` dies with a stack trace instead of eating
+the whole CI job.  ``_net_resource_guard`` closes any event loop a
+test left behind and forces a GC pass so sockets are reclaimed before
+the next test binds.  All TCP tests bind port 0 (the OS picks a free
+port) — nothing in this suite hard-codes a port number.
+"""
+from __future__ import annotations
+
+import asyncio
+import gc
+import signal
+import threading
+
+import pytest
+
+# modules that get a hard deadline even without an explicit marker
+_NET_MODULES = ("test_net_peers", "test_wire_protocol", "test_peerbook",
+                "test_net_mesh")
+_DEFAULT_NET_TIMEOUT_S = 300
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout_s(seconds): hard per-test wall-clock limit enforced "
+        "via SIGALRM (0 disables)")
+
+
+def _alarm_supported() -> bool:
+    return (hasattr(signal, "SIGALRM")
+            and threading.current_thread() is threading.main_thread())
+
+
+@pytest.fixture(autouse=True)
+def _per_test_alarm(request):
+    limit = None
+    marker = request.node.get_closest_marker("timeout_s")
+    if marker is not None and marker.args:
+        limit = float(marker.args[0])
+    elif any(m in request.node.nodeid for m in _NET_MODULES):
+        limit = float(_DEFAULT_NET_TIMEOUT_S)
+    if not limit or not _alarm_supported():
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        pytest.fail(f"test exceeded hard timeout of {limit:.0f}s "
+                    f"(SIGALRM watchdog)", pytrace=True)
+
+    old_handler = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old_handler)
+
+
+@pytest.fixture(autouse=True)
+def _net_resource_guard(request):
+    """Close leaked event loops and reclaim sockets after net tests."""
+    yield
+    if not any(m in request.node.nodeid for m in _NET_MODULES):
+        return
+    try:
+        loop = asyncio.get_event_loop_policy().get_event_loop()
+        if not loop.is_running() and not loop.is_closed():
+            loop.close()
+    except Exception:
+        pass
+    asyncio.set_event_loop(None)
+    gc.collect()

@@ -1,0 +1,225 @@
+"""Mesh-layer tier-1 tests (DESIGN.md §14): single-seed discovery to
+full-mesh convergence, deterministic scoring/eviction/banning under a
+GET_BODIES spammer, and the unknown/pruned body-serving regressions —
+all on the seeded loopback hub, so every run is bit-reproducible."""
+import dataclasses
+
+import pytest
+
+from repro.chain.net.identity import make_addr, make_identities
+from repro.chain.net.messages import Addr, GetBodies, GetHeaders
+from repro.chain.net.peer import (PeerNode, chain_digest, drive_discovery,
+                                  mesh_scenario)
+from repro.chain.net.peerbook import BAN_THRESHOLD, W_RATE
+from repro.chain.net.transport import LoopbackHub
+from repro.chain.node import Node
+
+_ZERO_CK = b"\x00" * 16
+
+
+def _mesh_peer(i, identities, ring, hub, **kw):
+    node = Node(node_id=i, classic_arg_bits=6, keyring=ring)
+    pn = PeerNode(node, identities[i], ring, compact=True,
+                  addr=make_addr(identities[i], "loopback", 9000 + i), **kw)
+    pn.attach(hub.register(f"peer{i}"))
+    return pn
+
+
+def _bootstrap_single_seed(n, *, seed=0, **kw):
+    """N peers on a mesh-mode hub, each linked only to peer0."""
+    identities, ring = make_identities(n)
+    hub = LoopbackHub(seed=seed, full_mesh=False)
+    peers = [_mesh_peer(i, identities, ring, hub, **kw) for i in range(n)]
+    for i in range(1, n):
+        hub.connect(f"peer{i}", "peer0")
+        peers[i].conn_ids["peer0"] = 0
+        peers[i].broadcast_hello()
+    hub.pump()
+    return identities, ring, hub, peers
+
+
+# -- discovery ------------------------------------------------------------
+
+
+def test_single_seed_discovery_reaches_full_mesh():
+    """Five peers, one seed address: HELLO addr payloads + ADDR gossip
+    must propagate every endpoint, and PeerBook-driven dialing must
+    complete the mesh in a bounded number of rounds."""
+    _, _, hub, peers = _bootstrap_single_seed(5)
+    rounds = drive_discovery(hub, peers)
+    assert rounds <= 3
+    want = {f"peer{i}" for i in range(5)}
+    for pn in peers:
+        assert set(hub.links_of(pn.port.name)) == want - {pn.port.name}
+        # everyone's book learned everyone else, promoted to tried
+        assert set(pn.peerbook.tried) == set(range(5)) - {pn.identity.node_id}
+    assert sum(pn.stats.addrs_added for pn in peers) >= 4
+
+
+def test_mesh_scenario_converges_and_matches_oracle():
+    """The pinned acceptance scenario: single-seed bootstrap, full
+    discovery, round-robin mining — byte-identical with the in-process
+    Network oracle (chain digest AND credit books)."""
+    r = mesh_scenario(n_peers=5, seed=0, schedule=("classic",) * 6)
+    assert r["full_mesh"] and r["converged"]
+    assert r["oracle_match"], (r["chain_digest"], r["oracle_digest"])
+    assert r["height"] == 6
+    assert r["addrs_added"] > 0
+
+
+def test_mesh_scenario_is_deterministic():
+    a = mesh_scenario(n_peers=4, seed=3, schedule=("classic",) * 4,
+                      oracle=False)
+    b = mesh_scenario(n_peers=4, seed=3, schedule=("classic",) * 4,
+                      oracle=False)
+    assert a["chain_digest"] == b["chain_digest"]
+    assert a["bytes_on_wire"] == b["bytes_on_wire"]
+    assert a["links"] == b["links"]
+
+
+def test_peerbook_ignores_gossip_for_banned_id():
+    """An addr for a banned identity re-gossiped later must not
+    re-enter the book or be dialed again."""
+    identities, ring, hub, peers = _bootstrap_single_seed(3)
+    drive_discovery(hub, peers)
+    victim = peers[0]
+    victim.peerbook.ban(2)
+    addr2 = make_addr(identities[2], "loopback", 9002)
+    assert not victim.peerbook.add(addr2)
+    assert all(a.node_id != 2 for a in victim.peerbook.select(8))
+
+
+# -- scoring, eviction, banning -------------------------------------------
+
+
+def test_get_bodies_spammer_is_banned_and_mesh_still_converges():
+    """The pinned misbehavior scenario: a peer spamming GET_BODIES far
+    past the token bucket accumulates rate violations, crosses the ban
+    threshold, and is disconnected — while the honest mesh goes on to
+    converge."""
+    identities, ring, hub, peers = _bootstrap_single_seed(3)
+    drive_discovery(hub, peers)
+    spam = hub.register("spammer")
+    assert hub.connect("spammer", "peer0")
+    victim = peers[0]
+    for _ in range(200):
+        spam.send("peer0", GetBodies(checksums=(b"\xab" * 16,)))
+    hub.pump()
+    score = victim.scores["spammer"]
+    assert score.rate_violations * W_RATE >= BAN_THRESHOLD
+    assert score.banned()
+    assert victim.stats.bans == 1
+    assert "spammer" in victim._banned_conns
+    # the link is torn down: nothing more reaches the victim from it
+    assert "spammer" not in hub.links_of("peer0")
+    before = victim.port.stats.frames_recv
+    spam.send("peer0", GetBodies(checksums=(b"\xab" * 16,)))
+    hub.pump()
+    assert victim.port.stats.frames_recv == before
+    # honest mesh still converges afterwards
+    for b in range(4):
+        peers[b % 3].mine_and_announce()
+        hub.pump()
+    digests = {chain_digest(pn.node) for pn in peers}
+    assert len(digests) == 1
+    assert all(pn.node.ledger.height == 4 for pn in peers)
+
+
+def test_rate_limited_peer_gets_no_service_while_throttled():
+    """Requests past the bucket are not served (no reply at all), and
+    each one costs score."""
+    identities, ring, hub, peers = _bootstrap_single_seed(2,
+                                                          headers_rate=1.0,
+                                                          headers_burst=2.0)
+    victim, other = peers
+    sent_before = victim.port.stats.frames_sent
+    for _ in range(6):
+        other.port.send("peer0", GetHeaders(from_height=0))
+    hub.pump()
+    # 2 admitted (burst) + small refill; the rest unanswered
+    assert victim.stats.rate_violations >= 3
+    assert victim.scores["peer1"].rate_violations >= 3
+    replies = victim.port.stats.frames_sent - sent_before
+    assert replies <= 3
+
+
+def test_connection_cap_evicts_worst_scored_peer():
+    """At max_peers the worst-scored connection is evicted — and the
+    victim choice is deterministic (score, then name)."""
+    identities, ring = make_identities(4)
+    hub = LoopbackHub(seed=0, full_mesh=False)
+    peers = [_mesh_peer(i, identities, ring, hub, max_peers=2)
+             for i in range(4)]
+    hub.connect("peer0", "peer1")
+    hub.connect("peer0", "peer2")
+    peers[1].broadcast_hello()
+    peers[2].broadcast_hello()
+    hub.pump()
+    # peer1 misbehaves: worst score at eviction time
+    peers[0]._punish("peer1", "unsolicited")
+    hub.connect("peer0", "peer3")
+    peers[3].broadcast_hello()
+    hub.pump()
+    assert peers[0].stats.evictions == 1
+    links = hub.links_of("peer0")
+    assert "peer1" not in links and len(links) == 2
+    # eviction is not a ban: peer1 may reconnect later
+    assert "peer1" not in peers[0]._banned_conns
+
+
+# -- body-serving regressions (unknown / pruned checksums) ----------------
+
+
+def test_get_bodies_unknown_and_pruned_checksums_never_crash():
+    """A GET_BODIES for a checksum the peer never had — or for the
+    zero-checksum finality sentinel — must be answered (empty) without
+    crashing, and must not poison the requester."""
+    identities, ring, hub, peers = _bootstrap_single_seed(2)
+    serving, asking = peers
+    asking.port.send("peer0", GetBodies(checksums=(b"\x5c" * 16,)))
+    asking.port.send("peer0", GetBodies(checksums=(_ZERO_CK,)))
+    asking.port.send("peer0", GetBodies(checksums=(_ZERO_CK, b"\x5c" * 16)))
+    hub.pump()                      # raises if any handler crashed
+    assert serving.stats.bodies_served == 0
+    # empty replies are not "unsolicited bodies": the asker keeps a
+    # clean score on the serving side and vice versa
+    assert asking.scores.get("peer0") is None \
+        or asking.scores["peer0"].misbehavior() == 0
+    # the pair still works: mine and relay a real block
+    serving.mine_and_announce()
+    hub.pump()
+    assert asking.node.ledger.height == 1
+
+
+def test_requester_falls_back_when_server_pruned_bodies():
+    """A peer whose bodies are pruned (serves headers but no bodies)
+    must not wedge the requester: the pull is abandoned and a later
+    peer with intact bodies completes the sync."""
+    identities, ring = make_identities(3)
+    hub = LoopbackHub(seed=1, full_mesh=False)
+    peers = [_mesh_peer(i, identities, ring, hub) for i in range(3)]
+    pruned, behind, intact = peers
+    # pruned and intact mine the same chain together first
+    hub.connect("peer0", "peer2")
+    pruned.conn_ids["peer2"] = 2
+    intact.conn_ids["peer0"] = 0
+    for _ in range(3):
+        pruned.mine_and_announce()
+        hub.pump()
+    assert intact.node.ledger.height == 3
+    # now peer0 "prunes": headers remain, bodies are gone
+    pruned._bodies.clear()
+    pruned._lookup_body = lambda ck: None
+    hub.connect("peer1", "peer0")
+    pruned.broadcast_hello()
+    hub.pump()
+    # the pull was abandoned, not wedged: no sync state, no progress
+    assert behind.node.ledger.height == 0
+    assert "peer0" not in behind._sync
+    assert behind.stats.sync_pulls >= 1
+    # a peer with intact bodies completes the catch-up
+    hub.connect("peer1", "peer2")
+    intact.broadcast_hello()
+    hub.pump()
+    assert behind.node.ledger.height == 3
+    assert chain_digest(behind.node) == chain_digest(intact.node)

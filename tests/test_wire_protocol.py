@@ -4,23 +4,35 @@ fuzz sweep — every truncation and every single-bit flip of every
 message type must be rejected without an exception, and a stream peer
 must survive corrupt frames and keep decoding the good ones."""
 import binascii
+import dataclasses
 import hashlib
 
 import pytest
 
 from repro.chain.net.identity import (KeyRing, PeerIdentity, SignedAnnounce,
                                       ed25519_public_key, ed25519_sign,
-                                      ed25519_verify, make_announce,
-                                      make_identities)
-from repro.chain.net.messages import (MAX_BODY, PROTOCOL_VERSION, WIRE_MAGIC,
-                                      Announce, Bodies, FrameBuffer,
-                                      GetBodies, GetHeaders, Hello, Tip,
-                                      decode_message, encode_message)
+                                      ed25519_verify, make_addr,
+                                      make_announce, make_identities)
+from repro.chain.net.messages import (MAX_ADDRS, MAX_BODY, PROTOCOL_VERSION,
+                                      WIRE_MAGIC, Addr, Announce, Bodies,
+                                      FrameBuffer, GetBodies, GetHeaders,
+                                      Hello, Tip, decode_message,
+                                      encode_message)
+from repro.chain.net.peerbook import PeerBook
+from repro.chain.workload import ChainError
+
+# real signed addrs so the ADDR / addr-bearing HELLO specimens survive
+# their own decoder (which enforces structural sanity)
+_ADDR_IDS, _ADDR_RING = make_identities(3, seed=9)
+_ADDR1 = make_addr(_ADDR_IDS[1], "node-1.example", 9101)
+_ADDR2 = make_addr(_ADDR_IDS[2], "10.0.0.2", 9102)
 
 # one specimen of every message type, with representative field shapes
 _SPECIMENS = [
     Hello(version=PROTOCOL_VERSION, node_id=3, pubkey=b"\x11" * 32,
           height=17),
+    Hello(version=PROTOCOL_VERSION, node_id=1, pubkey=_ADDR_IDS[1].pubkey,
+          height=4, addr=_ADDR1),
     Announce(header=b"h" * 60, checksum=b"c" * 16, origin=2,
              pubkey=b"\x22" * 32, signature=b"\x33" * 64, body=None),
     Announce(header=b"h" * 60, checksum=b"c" * 16, origin=-1,
@@ -30,6 +42,7 @@ _SPECIMENS = [
     Tip(start=0, entries=((b"hdr0", b"k" * 16), (b"hdr1", b"\x00" * 16))),
     GetBodies(checksums=(b"a" * 16, b"b" * 16)),
     Bodies(bodies=(b"payload one", b"payload two" * 40)),
+    Addr(addrs=(_ADDR1, _ADDR2)),
 ]
 
 
@@ -80,6 +93,59 @@ def test_bitflip_sweep_never_raises_never_accepts(msg):
         got = decode_message(bytes(corrupt))
         assert got is None or got == msg  # flips in ignored bits: none
         assert got is None, f"bit flip at byte {pos} accepted"
+
+
+def test_addr_fuzz_never_enters_peerbook():
+    """Satellite: no corruption of an ADDR frame may land an addr in a
+    PeerBook.  Byte-level corruption dies in the decoder (checksum /
+    structural sanity); decodable-but-tampered records die at
+    ``PeerAddr.verify`` inside ``PeerBook.add``."""
+    book = PeerBook(self_id=0, keyring=_ADDR_RING)
+    frame = encode_message(Addr(addrs=(_ADDR1, _ADDR2)))
+    for pos in range(len(frame)):
+        corrupt = bytearray(frame)
+        corrupt[pos] ^= 1 << (pos % 8)
+        got = decode_message(bytes(corrupt))
+        assert got is None, f"bit flip at byte {pos} decoded"
+        for cut in range(0, len(frame), 3):
+            assert decode_message(frame[:cut]) is None
+    # a re-signed-field tamper decodes fine (well-formed) but the
+    # signature no longer covers the endpoint: the book must refuse it
+    moved = dataclasses.replace(_ADDR1, port=_ADDR1.port + 1)
+    wire = decode_message(encode_message(Addr(addrs=(moved,))))
+    assert wire is not None and wire.addrs[0] == moved
+    assert not book.add(wire.addrs[0])
+    claimed = dataclasses.replace(_ADDR1, node_id=2)   # identity theft
+    wire = decode_message(encode_message(Addr(addrs=(claimed,))))
+    assert wire is not None
+    assert not book.add(wire.addrs[0])
+    assert len(book) == 0 and book.rejected == 2
+
+
+def test_addr_respects_per_message_cap():
+    """> MAX_ADDRS entries: refused at encode, rejected at decode."""
+    flood = Addr(addrs=(_ADDR1,) * (MAX_ADDRS + 1))
+    with pytest.raises(ChainError):
+        encode_message(flood)
+    # hand-build the oversize frame the encoder refuses to produce
+    from repro.chain.net import messages as M
+    from repro.chain.store import _W
+    w = _W()
+    w.u32(MAX_ADDRS + 1)
+    for _ in range(MAX_ADDRS + 1):
+        M._enc_peer_addr(w, _ADDR1)
+    body = bytes(w.buf)
+    frame = (WIRE_MAGIC + bytes([M.MSG_ADDR])
+             + len(body).to_bytes(4, "little") + body
+             + hashlib.sha256(bytes([M.MSG_ADDR]) + body).digest()[:16])
+    assert decode_message(frame) is None
+
+
+def test_hello_without_addr_still_decodes():
+    """The addr payload is optional: a bare HELLO (the PR-7 shape plus
+    version bump) round-trips with ``addr=None``."""
+    m = decode_message(encode_message(_SPECIMENS[0]))
+    assert m is not None and m.addr is None
 
 
 def test_framebuffer_survives_corruption_and_resyncs():
