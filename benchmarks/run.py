@@ -792,6 +792,39 @@ def bench_mesh_discovery(n_peers: int = 5, n_blocks: int = 6) -> dict:
             "mesh_addrs_added": rep["addrs_added"]}
 
 
+def bench_mesh_chaos(n_peers: int = 5, n_blocks: int = 10) -> dict:
+    """DESIGN §15: time-to-reconverge under everything at once — two
+    crash/restart cycles (one with a corrupted journal tail), a 10:1
+    addr-flooding eclipse adversary on peer1, and one corrupted frame
+    per block.  Failing to reconverge, or the victim losing its last
+    honest anchor, is a hard failure rather than a slow row."""
+    from repro.chain.net import mesh_chaos_scenario
+
+    schedule = ("classic",) * n_blocks
+    faults = ((3, "crash", 2), (3, "corrupt_store", 2), (5, "restart", 2),
+              (7, "crash", 3), (8, "restart", 3))
+    t0 = time.perf_counter()
+    rep = mesh_chaos_scenario(n_peers=n_peers, seed=0, schedule=schedule,
+                              faults=faults, oracle=False)
+    dt = time.perf_counter() - t0
+    if not rep["converged"]:
+        raise RuntimeError("mesh_chaos: peers diverged")
+    if rep["victim"]["honest_anchors"] < 1:
+        raise RuntimeError("mesh_chaos: victim lost every honest anchor")
+    row("mesh_chaos", dt * 1e6,
+        f"n_peers={n_peers} blocks={n_blocks} "
+        f"settle_rounds={rep['settle_rounds']} "
+        f"recoveries={len(rep['recoveries'])} "
+        f"timeouts={rep['timeouts']} failovers={rep['failovers']} "
+        f"honest_anchors={rep['victim']['honest_anchors']}")
+    return {"n_peers": n_peers, "n_blocks": n_blocks,
+            "mesh_chaos_us": dt * 1e6,
+            "mesh_chaos_settle_rounds": rep["settle_rounds"],
+            "mesh_chaos_timeouts": rep["timeouts"],
+            "mesh_chaos_failovers": rep["failovers"],
+            "mesh_chaos_recoveries": len(rep["recoveries"])}
+
+
 def bench_roofline():
     """Emit the dry-run roofline table (deliverable (g)) as CSV rows."""
     files = sorted(glob.glob("experiments/dryrun/*__single.json"))
@@ -876,7 +909,7 @@ def check_smoke_regression(measured: dict) -> int:
     failures = 0
     for key in ("merkle_commit_us_device", "verify_chain_batched_us",
                 "workload_suite_dock_verify_us", "wire_relay_us",
-                "mesh_discovery_us"):
+                "mesh_discovery_us", "mesh_chaos_us"):
         base, got = baseline.get(key), measured.get(key)
         if base is None or got is None:
             continue
@@ -905,6 +938,7 @@ def _smoke_scale_metrics(train_section: bool = True,
         suite = bench_workload_suite(**SMOKE_SUITE)
         wire = bench_wire_relay()
         mesh = bench_mesh_discovery()
+        chaos = bench_mesh_chaos()
     finally:
         _QUIET = False
     return {
@@ -921,6 +955,8 @@ def _smoke_scale_metrics(train_section: bool = True,
         "mesh_discovery_us": mesh["mesh_discovery_us"],
         "mesh_discovery_rounds": mesh["mesh_discovery_rounds"],
         "mesh_bytes_on_wire": mesh["mesh_bytes_on_wire"],
+        "mesh_chaos_us": chaos["mesh_chaos_us"],
+        "mesh_chaos_settle_rounds": chaos["mesh_chaos_settle_rounds"],
     }
 
 
@@ -956,6 +992,7 @@ def main(smoke: bool = False) -> None:
     payload["sim_chaos"] = bench_chaos()
     payload["wire_relay"] = bench_wire_relay()
     payload["mesh_discovery"] = bench_mesh_discovery()
+    payload["mesh_chaos"] = bench_mesh_chaos()
     payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
                                                      quiet=True)
     bench_sim_gossip()

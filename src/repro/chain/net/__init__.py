@@ -19,7 +19,12 @@ process without touching consensus:
 * ``peer`` — ``PeerNode``: sans-IO protocol logic driving one
   unmodified ``Node`` with BIP-152-style compact relay (header +
   content checksum announces; bodies fetched by checksum on demand;
-  already-seen payloads never cross the wire twice).
+  already-seen payloads never cross the wire twice), plus the
+  liveness layer (DESIGN.md §15): PING/PONG keepalive, per-request
+  deadlines with exponential-backoff failover, and anchor
+  connections — ``EclipseAttacker`` + ``mesh_chaos_scenario`` pin
+  the whole stack under crashes, journal corruption, an addr-flood
+  eclipse adversary, and corrupted frames at once.
 * ``peerbook`` — the mesh layer (DESIGN.md §14): ``PeerBook`` is a
   capped two-bucket address manager fed by signed HELLO/ADDR addr
   gossip and driving outbound dialing; ``PeerScore`` ranks
@@ -46,10 +51,11 @@ from repro.chain.net.identity import (KeyRing, PeerAddr, PeerIdentity,
 from repro.chain.net.messages import (MAX_ADDRS, MAX_BODY, PROTOCOL_VERSION,
                                       WIRE_MAGIC, Addr, Announce, Bodies,
                                       FrameBuffer, GetBodies, GetHeaders,
-                                      Hello, Message, Tip, decode_message,
-                                      encode_message)
-from repro.chain.net.peer import (PeerNode, PeerStats, chain_digest,
-                                  loopback_scenario, mesh_scenario)
+                                      Hello, Message, Ping, Pong, Tip,
+                                      decode_message, encode_message)
+from repro.chain.net.peer import (EclipseAttacker, PeerNode, PeerStats,
+                                  chain_digest, loopback_scenario,
+                                  mesh_chaos_scenario, mesh_scenario)
 from repro.chain.net.peerbook import PeerBook, PeerScore, TokenBucket
 from repro.chain.net.transport import (LoopbackHub, LoopbackPort,
                                        TcpTransport, WireStats)
@@ -58,6 +64,7 @@ __all__ = [
     "Addr",
     "Announce",
     "Bodies",
+    "EclipseAttacker",
     "FrameBuffer",
     "GetBodies",
     "GetHeaders",
@@ -75,6 +82,8 @@ __all__ = [
     "PeerNode",
     "PeerScore",
     "PeerStats",
+    "Ping",
+    "Pong",
     "SignedAnnounce",
     "TcpTransport",
     "Tip",
@@ -91,5 +100,6 @@ __all__ = [
     "make_addr",
     "make_announce",
     "make_identities",
+    "mesh_chaos_scenario",
     "mesh_scenario",
 ]

@@ -16,6 +16,15 @@ book; the parent mines the *same* schedule on an in-process
 plus the oracle — to be bit-identical.  Wall-clock is bounded by
 ``--timeout``.
 
+``--chaos`` is the kill-and-restart variant (wire-level crash
+recovery, DESIGN.md §15): worker 1 journals to a durable
+``ChainStore`` file; when the mesh reaches the midpoint height the
+parent SIGKILLs it — no goodbye, frames in flight lost — and respawns
+it with ``--recover``.  The restarted process replays its journal
+through ``Node.recover``, redials the seed on a fresh port, resyncs
+the lost tail headers-first over TCP, and must still land on the
+oracle digest.
+
 Exit status 0 iff every chain converged AND matched the in-process
 oracle.
 """
@@ -27,25 +36,44 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 from repro.chain.net.identity import make_addr, make_identities
 from repro.chain.net.peer import (_SUITE_SCHEDULE, PeerNode, _suite_node,
                                   chain_digest)
 from repro.chain.net.transport import TcpTransport
+from repro.chain.node import Node
+from repro.chain.store import ChainStore
 
 _RESULT_PREFIX = "RESULT "
 _HOST = "127.0.0.1"
 
 
-def _build_peer(idx: int, n_peers: int, *, suite_seed: int):
+def _build_peer(idx: int, n_peers: int, *, suite_seed: int,
+                store_path: str = "", recover: bool = False):
     """One worker's peer plus the shared identity list (every process
     derives the same deterministic identities, so any worker can
-    reconstruct the seed's signed addr locally)."""
+    reconstruct the seed's signed addr locally).  ``store_path``
+    attaches a durable journal; ``recover`` replays it through
+    ``Node.recover`` instead of starting at genesis — the restarted
+    half of the ``--chaos`` demo.
+
+    Liveness windows are generous on real TCP: synchronous mining and
+    first-run XLA compilation can stall a worker's event loop for tens
+    of seconds, and a spurious keepalive drop just forces a redial."""
     identities, ring = make_identities(n_peers)
-    node = _suite_node(idx, suite_seed=suite_seed, keyring=ring)
+    if recover:
+        shell = _suite_node(idx, suite_seed=suite_seed, keyring=ring)
+        node = Node.recover(ChainStore(store_path), node=shell)
+    else:
+        node = _suite_node(idx, suite_seed=suite_seed, keyring=ring,
+                           store=ChainStore(store_path) if store_path
+                           else None)
     peer = PeerNode(node, identities[idx], ring, compact=True,
-                    max_peers=2 * n_peers)
+                    max_peers=2 * n_peers,
+                    request_timeout=10.0, ping_interval=15.0,
+                    keepalive_timeout=120.0)
     return peer, identities
 
 
@@ -105,6 +133,10 @@ async def _mine_loop(peer: PeerNode, transport: TcpTransport, idx: int,
             last_hello = now
             peer.broadcast_hello()       # height beacon + resync trigger
             await transport.drain()
+        # liveness sweep: expire stalled pulls (a killed peer's requests
+        # fail over), ping idle conns, drop the silent ones
+        peer.tick()
+        await transport.drain()
         if h < target and h % n_peers == idx:
             peer.mine_and_announce(schedule[h])
             await transport.drain()
@@ -113,7 +145,7 @@ async def _mine_loop(peer: PeerNode, transport: TcpTransport, idx: int,
 
 
 def _report(peer: PeerNode, transport: TcpTransport, role: str) -> dict:
-    return {
+    out = {
         "role": role,
         "height": peer.node.ledger.height,
         "chain_digest": chain_digest(peer.node),
@@ -124,11 +156,46 @@ def _report(peer: PeerNode, transport: TcpTransport, role: str) -> dict:
         "stats": peer.stats.to_dict(),
         "wire": transport.stats.to_dict(),
     }
+    rec = getattr(peer.node, "last_recovery", None)
+    if rec is not None:
+        out["recovered"] = {"replayed": rec.replayed,
+                            "adopted_height": rec.adopted_height,
+                            "truncated_records": rec.truncated_records,
+                            "resynced_height": rec.resynced_height}
+    return out
+
+
+async def _kill_and_respawn(peer: PeerNode, children: list, child_args,
+                            mid: int, deadline: float,
+                            verbose: bool) -> dict:
+    """The --chaos fault: SIGKILL worker 1 once the parent's chain
+    reaches the midpoint height, then respawn it with ``--recover``.
+    The journal file survives the kill; everything else — sockets,
+    conns, in-flight frames — dies with the process."""
+    loop = asyncio.get_running_loop()
+    while peer.node.ledger.height < mid:
+        if loop.time() > deadline:
+            return {"killed": False, "reason": "deadline before midpoint"}
+        await asyncio.sleep(0.05)
+    proc = children[0]                     # worker 1 is children[0]
+    proc.kill()
+    out, _ = await loop.run_in_executor(
+        None, lambda: proc.communicate(timeout=30))
+    if verbose and out:
+        print(f"--- killed child output ---\n{out}", file=sys.stderr)
+    children[0] = subprocess.Popen(
+        child_args + ["--recover"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env=dict(os.environ))
+    return {"killed": True, "killed_at_height": peer.node.ledger.height,
+            "respawned_pid": children[0].pid}
 
 
 async def _run_child(idx: int, seed_port: int, n_peers: int, *,
-                     suite_seed: int, timeout: float, schedule) -> dict:
-    peer, identities = _build_peer(idx, n_peers, suite_seed=suite_seed)
+                     suite_seed: int, timeout: float, schedule,
+                     store_path: str = "", recover: bool = False) -> dict:
+    peer, identities = _build_peer(idx, n_peers, suite_seed=suite_seed,
+                                   store_path=store_path, recover=recover)
     transport = TcpTransport()
     peer.attach(transport)
     own_port = await transport.listen(_HOST)
@@ -151,27 +218,44 @@ async def _run_child(idx: int, seed_port: int, n_peers: int, *,
 
 
 async def _run_parent(*, n_peers: int, suite_seed: int, timeout: float,
-                      verbose: bool, schedule) -> int:
+                      verbose: bool, schedule,
+                      chaos: bool = False) -> int:
     t0 = time.perf_counter()
     peer, identities = _build_peer(0, n_peers, suite_seed=suite_seed)
     transport = TcpTransport()
     peer.attach(transport)
     port = await transport.listen(_HOST)
     peer.addr = make_addr(identities[0], _HOST, port)
+    chaos_dir = tempfile.mkdtemp(prefix="pnp-chaos-") if chaos else None
+
+    def _args_for(i: int) -> list:
+        out = [sys.executable, "-m", "repro.chain.net", "--role", "child",
+               "--index", str(i), "--port", str(port),
+               "--peers", str(n_peers), "--suite-seed", str(suite_seed),
+               "--timeout", str(timeout), "--schedule", ",".join(schedule)]
+        if chaos and i == 1:
+            out += ["--store", os.path.join(chaos_dir, "worker1.journal")]
+        return out
+
     children = [
-        subprocess.Popen(
-            [sys.executable, "-m", "repro.chain.net", "--role", "child",
-             "--index", str(i), "--port", str(port),
-             "--peers", str(n_peers), "--suite-seed", str(suite_seed),
-             "--timeout", str(timeout), "--schedule", ",".join(schedule)],
-            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
-            text=True, env=dict(os.environ))
+        subprocess.Popen(_args_for(i),
+                         stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                         text=True, env=dict(os.environ))
         for i in range(1, n_peers)]
     outputs = []
+    fault: dict = {}
     try:
         deadline = asyncio.get_running_loop().time() + timeout
+        kill_task = None
+        if chaos:
+            kill_task = asyncio.create_task(_kill_and_respawn(
+                peer, children, _args_for(1),
+                mid=max(1, len(schedule) // 2), deadline=deadline,
+                verbose=verbose))
         await _mine_loop(peer, transport, 0, n_peers, schedule, deadline)
         await transport.drain()
+        if kill_task is not None:
+            fault = await kill_task
         for child in children:
             out, _ = await asyncio.get_running_loop().run_in_executor(
                 None, lambda c=child: c.communicate(timeout=timeout))
@@ -191,6 +275,9 @@ async def _run_parent(*, n_peers: int, suite_seed: int, timeout: float,
             if child.poll() is None:
                 child.kill()
         await transport.close()
+        if chaos_dir is not None:
+            import shutil
+            shutil.rmtree(chaos_dir, ignore_errors=True)
     child_reports = []
     for out in outputs:
         found = None
@@ -224,8 +311,15 @@ async def _run_parent(*, n_peers: int, suite_seed: int, timeout: float,
                   for r in child_reports)
           and peer.node.ledger.verify_chain()
           and all(r["chain_valid"] for r in child_reports))
+    if chaos:
+        # the fault must actually have fired, and the respawned worker
+        # must have come back through Node.recover, not from genesis
+        ok = (ok and bool(fault.get("killed"))
+              and child_reports[0].get("recovered") is not None)
     report = {
-        "demo": f"{n_peers}-process TCP mesh convergence",
+        "demo": (f"{n_peers}-process TCP mesh "
+                 + ("kill-and-restart recovery" if chaos
+                    else "convergence")),
         "n_peers": n_peers,
         "n_blocks": len(schedule),
         "height": peer.node.ledger.height,
@@ -237,12 +331,19 @@ async def _run_parent(*, n_peers: int, suite_seed: int, timeout: float,
         "parent": _report(peer, transport, "parent"),
         "children": child_reports,
     }
+    if chaos:
+        report["fault"] = fault
+        report["recovered"] = child_reports[0].get("recovered")
     if verbose:
         print(json.dumps(report, indent=2))
     else:
-        print(json.dumps({k: report[k] for k in
-                          ("n_peers", "converged", "oracle_match",
-                           "height", "elapsed_s")}))
+        brief = {k: report[k] for k in
+                 ("n_peers", "converged", "oracle_match",
+                  "height", "elapsed_s")}
+        if chaos:
+            brief["fault"] = fault
+            brief["recovered"] = report["recovered"]
+        print(json.dumps(brief))
     return 0 if ok else 1
 
 
@@ -260,6 +361,16 @@ def main(argv=None) -> int:
     ap.add_argument("--port", type=int, default=0,
                     help="(child) the seed's (parent's) listen port")
     ap.add_argument("--suite-seed", type=int, default=7)
+    ap.add_argument("--chaos", action="store_true",
+                    help="kill-and-restart variant: SIGKILL worker 1 at "
+                         "the midpoint height, respawn it with --recover "
+                         "(its journal survives), require oracle parity "
+                         "anyway")
+    ap.add_argument("--store", default="",
+                    help="(child) journal the chain to this file")
+    ap.add_argument("--recover", action="store_true",
+                    help="(child) replay --store through Node.recover "
+                         "before joining the mesh")
     ap.add_argument("--timeout", type=float, default=600.0,
                     help="overall wall-clock bound (generous: first-run "
                          "XLA compilation of the workload kernels can "
@@ -276,10 +387,13 @@ def main(argv=None) -> int:
     if args.role == "child":
         if not (1 <= args.index < args.peers):
             ap.error("--index must be in [1, peers)")
+        if args.recover and not args.store:
+            ap.error("--recover needs --store")
         report = asyncio.run(
             _run_child(args.index, args.port, args.peers,
                        suite_seed=args.suite_seed,
-                       timeout=args.timeout, schedule=schedule))
+                       timeout=args.timeout, schedule=schedule,
+                       store_path=args.store, recover=args.recover))
         print(_RESULT_PREFIX + json.dumps(report), flush=True)
         return 0
     if not args.demo:
@@ -287,7 +401,7 @@ def main(argv=None) -> int:
     return asyncio.run(
         _run_parent(n_peers=args.peers, suite_seed=args.suite_seed,
                     timeout=args.timeout, verbose=args.verbose,
-                    schedule=schedule))
+                    schedule=schedule, chaos=args.chaos))
 
 
 if __name__ == "__main__":

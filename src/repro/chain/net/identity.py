@@ -267,6 +267,16 @@ _ADDR_DOMAIN = b"PNPADDR1"
 MAX_HOST_LEN = 255
 
 
+def well_formed_endpoint(host: str, port: int) -> bool:
+    """The structural rule every wire-carried endpoint obeys — shared
+    by ``PeerAddr`` records and HELLO's observed-address echoes: a
+    printable-ASCII host of bounded length and a real port number."""
+    return (isinstance(host, str) and isinstance(port, int)
+            and 0 < port < 65536
+            and 0 < len(host) <= MAX_HOST_LEN
+            and all(33 <= ord(c) < 127 for c in host))
+
+
 def _addr_message(node_id: int, host: str, port: int) -> bytes:
     return (_ADDR_DOMAIN + struct.pack("<q", node_id)
             + struct.pack("<I", port) + host.encode("utf-8"))
@@ -292,9 +302,7 @@ class PeerAddr:
         """Structural sanity only (no crypto): field shapes a decoder
         or book must refuse regardless of signatures."""
         return (len(self.pubkey) == 32 and len(self.signature) == 64
-                and 0 < self.port < 65536
-                and 0 < len(self.host) <= MAX_HOST_LEN
-                and all(33 <= ord(c) < 127 for c in self.host))
+                and well_formed_endpoint(self.host, self.port))
 
     def verify(self, keyring: Optional["KeyRing"] = None) -> bool:
         """True iff this addr may enter a ``PeerBook``: well-formed,

@@ -1,10 +1,13 @@
 """``repro.chain.net.messages`` — the typed, versioned wire catalogue.
 
-Seven message types carry the whole peer protocol (DESIGN.md §13–14):
+Nine message types carry the whole peer protocol (DESIGN.md §13–15):
 
     HELLO        version, node id, pubkey, chain height (introduction
                  + liveness beacon) + an optional self-signed listen
-                 address (``PeerAddr``) — the discovery bootstrap
+                 address (``PeerAddr``) — the discovery bootstrap —
+                 and the remote endpoint the sender *observed* for the
+                 receiver (how a NATed peer learns a routable
+                 self-addr before signing its own ``PeerAddr``)
     ADDR         peer discovery gossip: a capped list of self-signed
                  ``PeerAddr`` records relayed verbatim (a relay cannot
                  forge an endpoint for someone else's identity)
@@ -16,6 +19,9 @@ Seven message types carry the whole peer protocol (DESIGN.md §13–14):
     TIP          the reply: (header bytes, body checksum) per height
     GET_BODIES   fetch payload bodies by content checksum
     BODIES       the bodies (canonical ``encode_payload`` bytes)
+    PING         keepalive probe with an echo nonce (DESIGN §15): a
+                 peer silent past the keepalive window is disconnected
+    PONG         the echo — proof the peer is still processing frames
 
 Framing reuses the journal's discipline (``chain/store.py``)::
 
@@ -43,7 +49,8 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 # the journal's canonical encoding primitives ARE the wire body format
 # (one encoding discipline across disk and wire, by design)
-from repro.chain.net.identity import MAX_HOST_LEN, PeerAddr
+from repro.chain.net.identity import (MAX_HOST_LEN, PeerAddr,
+                                      well_formed_endpoint)
 from repro.chain.store import _Corrupt, _R, _W
 from repro.chain.workload import ChainError
 
@@ -58,13 +65,17 @@ __all__ = [
     "MAX_ADDRS",
     "MAX_BODY",
     "PROTOCOL_VERSION",
+    "Ping",
+    "Pong",
     "Tip",
     "WIRE_MAGIC",
     "decode_message",
     "encode_message",
 ]
 
-PROTOCOL_VERSION = 2          # v2: HELLO carries an optional PeerAddr
+# v2: HELLO carries an optional PeerAddr; v3: PING/PONG keepalive +
+# HELLO echoes the observed remote endpoint
+PROTOCOL_VERSION = 3
 WIRE_MAGIC = b"PNPW"
 MAX_BODY = 1 << 27            # 128 MiB: anything larger is damage/abuse
 CHECKSUM_LEN = 16
@@ -77,6 +88,8 @@ MSG_TIP = 4
 MSG_GET_BODIES = 5
 MSG_BODIES = 6
 MSG_ADDR = 7
+MSG_PING = 8
+MSG_PONG = 9
 
 _U8 = struct.Struct("<B")
 _U32 = struct.Struct("<I")
@@ -90,12 +103,18 @@ class Hello:
     is.  A peer at a greater height is a sync trigger.  ``addr`` is
     the sender's self-signed listen endpoint (``identity.PeerAddr``)
     — how a node bootstrapped from one seed address becomes
-    discoverable by the whole mesh; ``None`` for unreachable peers."""
+    discoverable by the whole mesh; ``None`` for unreachable peers.
+    ``observed`` is the (host, port) the *sender* saw this connection
+    arrive from — observed-address feedback: a NATed receiver with no
+    configured self-addr collects these echoes and, once enough
+    distinct peers agree, signs the consensus endpoint as its own
+    ``PeerAddr`` (a single lying peer cannot steer it)."""
     version: int
     node_id: int
     pubkey: bytes
     height: int
     addr: Optional[PeerAddr] = None
+    observed: Optional[Tuple[str, int]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,7 +166,24 @@ class Bodies:
     bodies: Tuple[bytes, ...]
 
 
-Message = Union[Hello, Addr, Announce, GetHeaders, Tip, GetBodies, Bodies]
+@dataclasses.dataclass(frozen=True)
+class Ping:
+    """Keepalive probe (DESIGN §15).  ``nonce`` is an arbitrary echo
+    token: the matching ``Pong`` must return it exactly, so a pong
+    cannot be replayed from an earlier probe."""
+    nonce: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Pong:
+    """Keepalive echo: proof the peer decoded and processed our PING
+    after we sent it — a one-sided TCP half-open or a wedged process
+    cannot produce one."""
+    nonce: int
+
+
+Message = Union[Hello, Addr, Announce, GetHeaders, Tip, GetBodies,
+                Bodies, Ping, Pong]
 
 
 # -- per-type body codecs ---------------------------------------------------
@@ -171,17 +207,33 @@ def _dec_peer_addr(r: _R) -> PeerAddr:
     return a
 
 
+def _enc_endpoint(w: _W, e: Tuple[str, int]) -> None:
+    w.s(e[0])
+    w.u32(e[1])
+
+
+def _dec_endpoint(r: _R) -> Tuple[str, int]:
+    host, port = r.s(), r.u32()
+    # same structural rule as PeerAddr endpoints: a malformed observed
+    # endpoint is frame damage, never something the peer layer sees
+    if not well_formed_endpoint(host, port):
+        raise _Corrupt("malformed observed endpoint")
+    return (host, port)
+
+
 def _enc_hello(w: _W, m: Hello) -> None:
     w.u32(m.version)
     w.i64(m.node_id)
     w.bstr(m.pubkey)
     w.u64(m.height)
     w.opt(m.addr, lambda a: _enc_peer_addr(w, a))
+    w.opt(m.observed, lambda e: _enc_endpoint(w, e))
 
 
 def _dec_hello(r: _R) -> Hello:
     return Hello(version=r.u32(), node_id=r.i64(), pubkey=r.bstr(),
-                 height=r.u64(), addr=r.opt(lambda: _dec_peer_addr(r)))
+                 height=r.u64(), addr=r.opt(lambda: _dec_peer_addr(r)),
+                 observed=r.opt(lambda: _dec_endpoint(r)))
 
 
 def _enc_addr(w: _W, m: Addr) -> None:
@@ -275,6 +327,22 @@ def _dec_bodies(r: _R) -> Bodies:
     return Bodies(bodies=tuple(r.bstr() for _ in range(n)))
 
 
+def _enc_ping(w: _W, m: Ping) -> None:
+    w.u64(m.nonce)
+
+
+def _dec_ping(r: _R) -> Ping:
+    return Ping(nonce=r.u64())
+
+
+def _enc_pong(w: _W, m: Pong) -> None:
+    w.u64(m.nonce)
+
+
+def _dec_pong(r: _R) -> Pong:
+    return Pong(nonce=r.u64())
+
+
 _CODECS: Dict[type, Tuple[int, Callable]] = {
     Hello: (MSG_HELLO, _enc_hello),
     Announce: (MSG_ANNOUNCE, _enc_announce),
@@ -283,6 +351,8 @@ _CODECS: Dict[type, Tuple[int, Callable]] = {
     GetBodies: (MSG_GET_BODIES, _enc_get_bodies),
     Bodies: (MSG_BODIES, _enc_bodies),
     Addr: (MSG_ADDR, _enc_addr),
+    Ping: (MSG_PING, _enc_ping),
+    Pong: (MSG_PONG, _enc_pong),
 }
 
 _DECODERS: Dict[int, Callable[[_R], Message]] = {
@@ -293,6 +363,8 @@ _DECODERS: Dict[int, Callable[[_R], Message]] = {
     MSG_GET_BODIES: _dec_get_bodies,
     MSG_BODIES: _dec_bodies,
     MSG_ADDR: _dec_addr,
+    MSG_PING: _dec_ping,
+    MSG_PONG: _dec_pong,
 }
 
 

@@ -22,15 +22,33 @@ triggers a chain pull (``GET_HEADERS``/``TIP``) and ``Node.
 consider_chain`` fork choice, substituting locally held bodies per
 checksum so only the genuinely missing ones are transferred.
 
+Liveness (DESIGN.md §15): every pull this peer issues — an
+announce-path body fetch or a headers-first sync — carries a deadline
+on the explicit clock (hub simulated time on loopback,
+``time.monotonic`` on TCP).  ``tick()`` sweeps expired requests:
+the silent peer is charged a ``timeouts`` score, the request *fails
+over* to the next-best-scored connection with exponential backoff,
+and past the retry cap a headers-first pull from the best peer
+recovers the block — sync degrades, it never hangs.  PING/PONG
+keepalive probes idle connections; a peer silent past the keepalive
+window is disconnected.  ``anchor_ids`` are protected connections
+(the first outbound dials) that connection-cap eviction never
+touches — the eclipse defense's guarantee that a victim keeps at
+least one honest link no matter how many attacker addrs flood its
+book (the ``PeerBook`` per-source quota bounds that flood too).
+
 ``loopback_scenario`` is the N-peer deterministic convergence harness
 (the sim CLI's ``--scenario wire`` and the ``wire_relay`` bench run
-it); the two-OS-process TCP flavor lives in ``__main__``.
+it); ``mesh_chaos_scenario`` composes crashes + restarts + journal
+corruption + an eclipse attacker + frame corruption over one seed;
+the two-OS-process TCP flavor lives in ``__main__``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import hashlib
+import random
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -39,22 +57,25 @@ from repro.chain.net.identity import (KeyRing, PeerAddr, PeerIdentity,
                                       make_announce, make_identities)
 from repro.chain.net.messages import (MAX_ADDRS, PROTOCOL_VERSION, Addr,
                                       Announce, Bodies, GetBodies,
-                                      GetHeaders, Hello, Message, Tip)
+                                      GetHeaders, Hello, Message, Ping,
+                                      Pong, Tip, encode_message)
 from repro.chain.net.peerbook import (BAN_THRESHOLD, PeerBook, PeerScore,
                                       TokenBucket, eviction_order)
 from repro.chain.net.transport import LoopbackHub
 from repro.chain.node import BlockReceipt, Node
-from repro.chain.store import (collect_jash_fns, decode_block, decode_payload,
-                               encode_block, encode_payload,
+from repro.chain.store import (ChainStore, collect_jash_fns, decode_block,
+                               decode_payload, encode_block, encode_payload,
                                payload_checksum)
 from repro.chain.workload import BlockPayload, ChainError
 from repro.core.ledger import Block
 
 __all__ = [
+    "EclipseAttacker",
     "PeerNode",
     "PeerStats",
     "chain_digest",
     "loopback_scenario",
+    "mesh_chaos_scenario",
     "mesh_scenario",
 ]
 
@@ -97,6 +118,13 @@ class PeerStats:
     unsolicited: int = 0          # bodies nobody asked this peer for
     evictions: int = 0            # connections dropped at max_peers
     bans: int = 0                 # peers banned for misbehavior
+    pings_sent: int = 0           # keepalive probes issued
+    pongs_recv: int = 0           # matching echoes
+    timeouts: int = 0             # request deadlines that expired
+    failovers: int = 0            # expired pulls re-targeted elsewhere
+    keepalive_drops: int = 0      # conns silent past the window
+    observed_echoes: int = 0      # HELLO observed-endpoint reports seen
+    addrs_adopted: int = 0        # self-addrs signed from observations
 
     def to_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -104,9 +132,26 @@ class PeerStats:
 
 @dataclasses.dataclass
 class _SyncState:
+    """One in-flight headers-first pull past the Tip stage: the
+    decoded candidate chain plus the body checksums still missing —
+    and the deadline/attempt pair the liveness sweep enforces."""
     blocks: List[Block]
     entries: Tuple[Tuple[bytes, bytes], ...]
     missing: set
+    deadline: float = 0.0
+    attempt: int = 0
+
+
+@dataclasses.dataclass
+class _PendingBody:
+    """One announce whose body is being fetched: who we asked, when
+    the answer is due, and how many times the fetch already failed
+    over (``tick`` re-targets it with exponential backoff)."""
+    block: Block
+    ann: Announce
+    src: str
+    deadline: float = 0.0
+    attempt: int = 0
 
 
 class PeerNode:
@@ -131,7 +176,20 @@ class PeerNode:
     ``PeerScore`` tracks behavior, bans at ``ban_threshold``
     misbehavior points, and evicts the worst-scored connection past
     ``max_peers``; token buckets rate-limit the GET_HEADERS /
-    GET_BODIES serve path (violations feed the score)."""
+    GET_BODIES serve path (violations feed the score).
+
+    Liveness additions (DESIGN.md §15): every pull carries a deadline
+    of ``request_timeout * backoff ** attempt`` seconds on the
+    explicit clock, enforced by ``tick()`` — drivers call it between
+    pumps (loopback) or each loop iteration (TCP).  ``max_retries``
+    caps failover attempts per request; ``ping_interval`` /
+    ``keepalive_timeout`` bound how long an idle or silent connection
+    lives; ``anchors`` pre-seeds protected node ids (otherwise the
+    first ``n_anchors`` outbound dials become anchors); ``min_observed``
+    distinct peers must echo the same observed endpoint before an
+    addr-less peer signs it as its own (``listen_port`` overrides the
+    observed source port — on real TCP an outbound source port is
+    ephemeral, only the host part is routable knowledge)."""
 
     def __init__(self, node: Node, identity: PeerIdentity,
                  keyring: Optional[KeyRing] = None, *,
@@ -146,6 +204,15 @@ class PeerNode:
                  headers_rate: float = 8.0, headers_burst: float = 32.0,
                  max_bodies_per_request: int = 64,
                  max_pending: int = 256,
+                 request_timeout: float = 5.0,
+                 max_retries: int = 3,
+                 backoff: float = 2.0,
+                 ping_interval: float = 10.0,
+                 keepalive_timeout: float = 30.0,
+                 anchors: Sequence[int] = (),
+                 n_anchors: int = 2,
+                 min_observed: int = 2,
+                 listen_port: Optional[int] = None,
                  clock=None) -> None:
         if keyring is None:
             keyring = getattr(node, "keyring", None)
@@ -169,13 +236,15 @@ class PeerNode:
         # block hash -> original signed announce (re-gossip relays the
         # miner's signature; re-signing would break origin binding)
         self._anns: Dict[str, Announce] = {}
-        # checksum -> (block, announce, src) awaiting its body —
-        # bounded: past max_pending the oldest entry is dropped (its
-        # block arrives later via an ordinary chain pull)
-        self._pending: "collections.OrderedDict[bytes, Tuple[Block, Announce, str]]" = \
+        # checksum -> _PendingBody awaiting its body — bounded: past
+        # max_pending the oldest entry is dropped (its block arrives
+        # later via an ordinary chain pull)
+        self._pending: "collections.OrderedDict[bytes, _PendingBody]" = \
             collections.OrderedDict()
         self.max_pending = max_pending
         self._sync: Dict[str, _SyncState] = {}
+        # conn -> (deadline, attempt) of a GET_HEADERS with no Tip yet
+        self._sync_req: Dict[str, Tuple[float, int]] = {}
         self.peer_heights: Dict[str, int] = {}
         # -- mesh state (discovery, scoring, rate limits) -------------
         self.addr = addr
@@ -197,6 +266,21 @@ class PeerNode:
         # conn -> checksums we asked it for (bounded; solicited-reply
         # check for unsolicited-body scoring)
         self._asked: Dict[str, "collections.OrderedDict[bytes, bool]"] = {}
+        # -- liveness state (deadlines, keepalive, anchors — §15) -----
+        self.request_timeout = float(request_timeout)
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.ping_interval = float(ping_interval)
+        self.keepalive_timeout = float(keepalive_timeout)
+        self.anchor_ids: set = set(anchors)
+        self.n_anchors = int(n_anchors)
+        self.min_observed = int(min_observed)
+        self.listen_port = listen_port
+        self._last_recv: Dict[str, float] = {}
+        self._ping_sent: Dict[str, Tuple[int, float]] = {}
+        self._ping_nonce = 0
+        # observed endpoint -> distinct reporters who echoed it
+        self._observed: Dict[Tuple[str, int], set] = {}
 
     # -- wiring -------------------------------------------------------
     def attach(self, port) -> None:
@@ -255,7 +339,13 @@ class PeerNode:
         if self.port is not None and hasattr(self.port, "disconnect"):
             self.port.disconnect(src)
         self._sync.pop(src, None)
+        self._sync_req.pop(src, None)
         self._asked.pop(src, None)
+        self._ping_sent.pop(src, None)
+        self._last_recv.pop(src, None)
+        self.peer_heights.pop(src, None)
+        # body fetches still waiting on this conn are orphaned — the
+        # next tick() re-targets them (their src is no longer alive)
 
     def _on_quarantine(self, src: str) -> None:
         """Transport saw a malformed frame from this connection."""
@@ -264,14 +354,20 @@ class PeerNode:
     def _note_conn(self, src: str) -> None:
         """First sign of life from a connection: create its score and
         enforce the connection cap by evicting the worst-scored peer
-        (deterministic ordering — ``peerbook.eviction_order``)."""
+        (deterministic ordering — ``peerbook.eviction_order``).
+        Anchored connections are exempt from cap eviction — the
+        eclipse defense's protected links — unless every connection
+        is an anchor."""
         if src in self.scores:
             return
         self._score(src)
+        self._last_recv.setdefault(src, self._now())
         names = self._peers()
         while len(names) > self.max_peers:
+            pool = [n for n in names
+                    if self.conn_ids.get(n) not in self.anchor_ids]
             ranked = eviction_order(
-                {n: self._score(n) for n in names})
+                {n: self._score(n) for n in (pool or names)})
             victim = ranked[0]
             self.stats.evictions += 1
             self._disconnect(victim)
@@ -324,13 +420,18 @@ class PeerNode:
 
     def on_dialed(self, conn: str, addr: PeerAddr) -> None:
         """A dial to ``addr`` produced connection ``conn``: introduce
-        ourselves and promote the addr to the tried bucket."""
+        ourselves and promote the addr to the tried bucket.  The first
+        ``n_anchors`` outbound dials become **anchor** connections —
+        endpoints this peer chose (not ones gossip pushed at it), so
+        an addr-flooding adversary cannot occupy them."""
         self._dialing.discard(addr.node_id)
         self.conn_ids[conn] = addr.node_id
         self.peerbook.mark_connected(addr.node_id)
+        if len(self.anchor_ids) < self.n_anchors:
+            self.anchor_ids.add(addr.node_id)
         self._note_conn(conn)
         self._helloed.add(conn)
-        self._send(conn, self.hello())
+        self._send(conn, self.hello(observed=self._observed_of(conn)))
 
     # -- body store ---------------------------------------------------
     def _remember_body(self, ck: bytes, body: bytes) -> None:
@@ -367,18 +468,26 @@ class PeerNode:
         return ck
 
     # -- outbound -----------------------------------------------------
-    def hello(self) -> Hello:
+    def hello(self, observed: Optional[Tuple[str, int]] = None) -> Hello:
         return Hello(version=PROTOCOL_VERSION,
                      node_id=self.identity.node_id,
                      pubkey=self.identity.pubkey,
                      height=self.node.ledger.height,
-                     addr=self.addr)
+                     addr=self.addr,
+                     observed=observed)
+
+    def _observed_of(self, conn: str) -> Optional[Tuple[str, int]]:
+        """The endpoint we see ``conn`` arriving from (observed-address
+        feedback: echoed back in our HELLO so a NATed peer learns how
+        the world routes to it)."""
+        if self.port is not None and hasattr(self.port, "peer_endpoint"):
+            return self.port.peer_endpoint(conn)
+        return None
 
     def broadcast_hello(self) -> None:
-        m = self.hello()
         for dst in self._peers():
             self._helloed.add(dst)
-            self._send(dst, m)
+            self._send(dst, self.hello(observed=self._observed_of(dst)))
 
     def _gossip_addrs(self, dst: str) -> None:
         """Send everything the book knows to one (new) connection —
@@ -405,7 +514,10 @@ class PeerNode:
                     claimed_id: Optional[int] = None) -> None:
         """One addr record from HELLO or ADDR gossip: fast-path exact
         duplicates (no re-verification), verify + admit the rest, relay
-        genuinely new knowledge, and score forged records."""
+        genuinely new knowledge, and score forged records.  Third-party
+        gossip is charged against the relaying identity's PeerBook
+        quota (eclipse defense); a peer's own HELLO addr is first-hand
+        and uncharged."""
         self.stats.addrs_recv += 1
         if addr.node_id == self.identity.node_id:
             return                         # our own addr echoed back
@@ -420,9 +532,34 @@ class PeerNode:
             self.stats.addr_rejects += 1
             self._punish(src, "invalid_frames")
             return
-        if self.peerbook.add(addr, verified=True):
+        first_hand = (claimed_id is not None
+                      and addr.node_id == claimed_id)
+        source = None if first_hand else self.conn_ids.get(src, -1)
+        if self.peerbook.add(addr, verified=True, source=source):
             self.stats.addrs_added += 1
             self._relay_addr(addr, exclude=src)
+
+    def _note_observed(self, src: str, endpoint: Tuple[str, int]) -> None:
+        """A peer echoed where our connection appears to come from.
+        With no configured self-addr, collect the echoes; once
+        ``min_observed`` *distinct* peers agree on an endpoint, sign
+        it as our own ``PeerAddr`` — one lying peer cannot steer the
+        adoption.  ``listen_port`` replaces the observed source port
+        (ephemeral on real TCP); the observed host is the routable
+        part."""
+        self.stats.observed_echoes += 1
+        if self.addr is not None:
+            return                         # already know who we are
+        host = endpoint[0]
+        port = self.listen_port if self.listen_port else endpoint[1]
+        if not (0 < port < 65536):
+            return
+        reporter = self.conn_ids.get(src, src)
+        reporters = self._observed.setdefault((host, port), set())
+        reporters.add(reporter)
+        if len(reporters) >= self.min_observed:
+            self.addr = make_addr(self.identity, host, port)
+            self.stats.addrs_adopted += 1
 
     def mine_and_announce(self, workload: Optional[str] = None
                           ) -> BlockReceipt:
@@ -456,10 +593,17 @@ class PeerNode:
                 self._send(dst, out)
                 self.stats.announces_sent += 1
 
-    def _request_sync(self, src: str) -> None:
-        if src in self._sync:
+    def _deadline(self, now: float, attempt: int) -> float:
+        """Exponential backoff: each failover waits longer before
+        declaring the next target silent too."""
+        return now + self.request_timeout * (self.backoff ** attempt)
+
+    def _request_sync(self, src: str, *, attempt: int = 0) -> None:
+        if src in self._sync or src in self._sync_req:
             return                         # one pull in flight per peer
         self.stats.sync_pulls += 1
+        self._sync_req[src] = (self._deadline(self._now(), attempt),
+                               attempt)
         self._send(src, GetHeaders(from_height=0))
 
     # -- inbound dispatch ---------------------------------------------
@@ -470,6 +614,12 @@ class PeerNode:
         if nid is not None and nid in self.peerbook.banned:
             return
         self._note_conn(src)
+        self._last_recv[src] = self._now()
+        if not isinstance(msg, Pong):
+            # any inbound frame proves the peer is processing: an
+            # outstanding keepalive probe is satisfied (PONG itself is
+            # nonce-checked in its handler)
+            self._ping_sent.pop(src, None)
         if isinstance(msg, Hello):
             self._on_hello(src, msg)
         elif isinstance(msg, Addr):
@@ -484,6 +634,22 @@ class PeerNode:
             self._on_get_bodies(src, msg)
         elif isinstance(msg, Bodies):
             self._on_bodies(src, msg)
+        elif isinstance(msg, Ping):
+            self._on_ping(src, msg)
+        elif isinstance(msg, Pong):
+            self._on_pong(src, msg)
+
+    def _on_ping(self, src: str, m: Ping) -> None:
+        self._send(src, Pong(nonce=m.nonce))
+
+    def _on_pong(self, src: str, m: Pong) -> None:
+        sent = self._ping_sent.pop(src, None)
+        if sent is None or sent[0] != m.nonce:
+            # an echo nobody asked for, or a stale/forged nonce
+            self.stats.unsolicited += 1
+            self._punish(src, "unsolicited")
+            return
+        self.stats.pongs_recv += 1
 
     def _on_hello(self, src: str, m: Hello) -> None:
         if m.version != PROTOCOL_VERSION:
@@ -497,9 +663,11 @@ class PeerNode:
             return
         if m.addr is not None:
             self._admit_addr(src, m.addr, claimed_id=m.node_id)
+        if m.observed is not None:
+            self._note_observed(src, m.observed)
         if src not in self._helloed:       # introduce ourselves back
             self._helloed.add(src)
-            self._send(src, self.hello())
+            self._send(src, self.hello(observed=self._observed_of(src)))
         self._gossip_addrs(src)            # once per conn
         if self.conn_ids.get(src) == m.node_id:
             self.peerbook.mark_connected(m.node_id)
@@ -508,7 +676,7 @@ class PeerNode:
 
     def _on_addr(self, src: str, m: Addr) -> None:
         for addr in m.addrs:
-            self._admit_addr(src, addr)
+            self._admit_addr(src, addr)    # relayed: charged to src
 
     def _on_announce(self, src: str, a: Announce) -> None:
         self.stats.announces_recv += 1
@@ -537,7 +705,9 @@ class PeerNode:
             if body is not None:
                 self.stats.compact_hits += 1    # nothing crosses the wire
         if body is None:
-            self._pending[a.checksum] = (block, a, src)
+            self._pending[a.checksum] = _PendingBody(
+                block=block, ann=a, src=src,
+                deadline=self._deadline(self._now(), 0))
             self._pending.move_to_end(a.checksum)
             while len(self._pending) > self.max_pending:
                 # bounded in-flight table: the dropped block arrives
@@ -584,6 +754,8 @@ class PeerNode:
         self._send(src, Tip(start=g.from_height, entries=entries))
 
     def _on_tip(self, src: str, t: Tip) -> None:
+        req = self._sync_req.pop(src, None)
+        attempt = req[1] if req is not None else 0
         self._sync.pop(src, None)
         if t.start != 0:
             return                         # we only ever pull from 0
@@ -608,7 +780,9 @@ class PeerNode:
                 return    # sender pruned a body we'd need: can't adopt
             missing.add(ck)
         state = _SyncState(blocks=blocks, entries=t.entries,
-                           missing=missing)
+                           missing=missing,
+                           deadline=self._deadline(self._now(), attempt),
+                           attempt=attempt)
         if missing:
             self._sync[src] = state
             self.stats.body_requests += len(missing)
@@ -703,8 +877,7 @@ class PeerNode:
             self.stats.bodies_recv += 1
             pend = self._pending.pop(ck, None)
             if pend is not None:
-                block, ann, _ = pend
-                self._process(src, block, ann, body)
+                self._process(src, pend.block, pend.ann, body)
         state = self._sync.get(src)
         if state is not None:
             state.missing -= got
@@ -720,13 +893,132 @@ class PeerNode:
         # announce-path fetches this reply failed to cover (unknown or
         # pruned on the serving side): drop them and fall back to a
         # headers-first pull from the same peer
-        stranded = [ck for ck, (_, _, who) in self._pending.items()
-                    if who == src and ck in asked and ck not in got]
+        stranded = [ck for ck, pend in self._pending.items()
+                    if pend.src == src and ck in asked
+                    and ck not in got]
         for ck in stranded:
             self._pending.pop(ck, None)
             asked.pop(ck, None)
         if stranded:
             self._request_sync(src)
+
+    # -- liveness sweep (DESIGN §15) ----------------------------------
+    def _next_best_peer(self, exclude=()) -> Optional[str]:
+        """The failover target: the best-scored live connection not in
+        ``exclude`` (deterministic — score descending, name as the
+        tie-break via ``eviction_order``)."""
+        cands = [n for n in self._peers() if n not in exclude]
+        if not cands:
+            return None
+        return eviction_order({n: self._score(n) for n in cands})[-1]
+
+    def _expire_pending(self, now: float, alive: set) -> None:
+        for ck in list(self._pending):
+            ent = self._pending.get(ck)
+            if ent is None:
+                continue
+            if ent.src in alive and ent.deadline > now:
+                continue
+            # expired — or its connection is gone entirely
+            self._pending.pop(ck, None)
+            asked = self._asked.get(ent.src)
+            if asked is not None:
+                asked.pop(ck, None)
+            if ent.src in alive:
+                self.stats.timeouts += 1
+                self._punish(ent.src, "timeouts")
+            nxt = self._next_best_peer(exclude={ent.src})
+            if nxt is None:
+                continue                   # nobody left to ask — drop
+            if ent.attempt < self.max_retries:
+                attempt = ent.attempt + 1
+                self._pending[ck] = dataclasses.replace(
+                    ent, src=nxt, attempt=attempt,
+                    deadline=self._deadline(now, attempt))
+                self.stats.failovers += 1
+                self.stats.body_requests += 1
+                self._note_asked(nxt, (ck,))
+                self._send(nxt, GetBodies(checksums=(ck,)))
+            else:
+                # retry cap: stop chasing the checksum — a headers-
+                # first pull from the best peer recovers the block
+                self._request_sync(nxt)
+
+    def _expire_sync(self, now: float, alive: set) -> None:
+        for src in list(self._sync_req):
+            req = self._sync_req.get(src)
+            if req is None:
+                continue
+            deadline, attempt = req
+            if src in alive and deadline > now:
+                continue
+            self._sync_req.pop(src, None)
+            if src in alive:
+                self.stats.timeouts += 1
+                self._punish(src, "timeouts")
+            nxt = self._next_best_peer(exclude={src})
+            if nxt is not None and attempt < self.max_retries:
+                self.stats.failovers += 1
+                self._request_sync(nxt, attempt=attempt + 1)
+        for src in list(self._sync):
+            state = self._sync.get(src)
+            if state is None or (src in alive and state.deadline > now):
+                continue
+            self._sync.pop(src, None)
+            if src in alive:
+                self.stats.timeouts += 1
+                self._punish(src, "timeouts")
+            nxt = self._next_best_peer(exclude={src})
+            if nxt is not None and state.attempt < self.max_retries:
+                self.stats.failovers += 1
+                self._request_sync(nxt, attempt=state.attempt + 1)
+
+    def _keepalive(self, now: float) -> None:
+        for conn in list(self._peers()):
+            last = self._last_recv.setdefault(conn, now)
+            sent = self._ping_sent.get(conn)
+            if sent is not None and now - sent[1] >= self.keepalive_timeout:
+                # silent past the window: graceful drop, never a hang
+                self.stats.keepalive_drops += 1
+                nid = self.conn_ids.get(conn)
+                if nid is not None:
+                    self.peerbook.mark_failed(nid)
+                self._disconnect(conn)
+                continue
+            if sent is None and now - last >= self.ping_interval:
+                self._ping_nonce += 1
+                self._ping_sent[conn] = (self._ping_nonce, now)
+                self.stats.pings_sent += 1
+                self._send(conn, Ping(nonce=self._ping_nonce))
+
+    def tick(self, now: Optional[float] = None) -> None:
+        """The liveness sweep — drivers call it between pumps
+        (loopback) or once per loop iteration (TCP):
+
+        1. expire announce-path body fetches whose deadline passed or
+           whose connection vanished: charge the silent peer, re-ask
+           the next-best-scored connection with exponential backoff,
+           and past ``max_retries`` fall back to a headers-first pull
+           (the stranded-checksum bugfix: entries for a dead peer
+           re-enter the pull queue instead of leaking);
+        2. the same for headers-first pulls (GET_HEADERS awaiting a
+           Tip, and Tip-stage pulls awaiting bodies);
+        3. keepalive: PING idle connections, disconnect those silent
+           past ``keepalive_timeout`` after a probe.
+
+        Never raises, never blocks — graceful degradation only."""
+        if now is None:
+            now = self._now()
+        alive = set(self._peers())
+        # sweep solicited-checksum tables of vanished connections so a
+        # banned/disconnected peer's entries cannot linger until the
+        # max_pending bound evicts them
+        for conn in list(self._asked):
+            if conn not in alive:
+                self._asked.pop(conn, None)
+        self._expire_pending(now, alive)
+        self._expire_sync(now, alive)
+        self._keepalive(now)
 
 
 # ---------------------------------------------------------------------------
@@ -742,14 +1034,16 @@ _SUITE_SCHEDULE = ("sat", "gan", "docking", "classic",
 
 def _suite_node(i: int, *, suite_seed: int = 7,
                 classic_arg_bits: int = 6,
-                keyring: Optional[KeyRing] = None) -> Node:
+                keyring: Optional[KeyRing] = None,
+                store: Optional[ChainStore] = None) -> Node:
     """One heterogeneous-suite node (same dims as the sim's
     ``heterogeneous_scenario`` — small enough for CI, every family
-    represented)."""
+    represented).  ``store`` attaches a durable journal (the chaos
+    scenarios' crash/restart faults recover from it)."""
     from repro.chain.workloads import default_suite
     return Node(node_id=i, classic_arg_bits=classic_arg_bits,
                 workloads=default_suite(seed=suite_seed, **_SUITE_DIMS),
-                keyring=keyring)
+                keyring=keyring, store=store)
 
 
 def loopback_scenario(n_peers: int = 4, seed: int = 0, *,
@@ -869,6 +1163,98 @@ def drive_discovery(hub: LoopbackHub, peers: List[PeerNode],
     return max_rounds
 
 
+# -- crash/restart/corrupt_store fault events (wire-level recovery) ---------
+#
+# A fault event is ``(block_idx, kind, peer_idx)`` — or
+# ``(block_idx, kind, peer_idx, mode)`` for ``corrupt_store`` — applied
+# *before* block ``block_idx`` is mined.  ``crash`` unregisters the
+# peer's hub port (frames in flight are lost, links drop, the journal
+# survives); ``corrupt_store`` damages the surviving journal's tail;
+# ``restart`` replays the journal through ``Node.recover``, registers a
+# fresh ``PeerNode`` under the same identity, and re-bootstraps from the
+# lowest-numbered live peer — headers-first resync recovers the tail the
+# journal lost.  This mirrors the in-process simulator's fault schedule
+# (``crash_fault_scenario``), one layer down: here the *wire* is part of
+# the recovery path.
+
+
+def _fault_map(faults: Sequence[Sequence[object]]
+               ) -> Dict[int, List[Tuple[object, ...]]]:
+    out: Dict[int, List[Tuple[object, ...]]] = {}
+    for ev in faults:
+        out.setdefault(int(ev[0]), []).append(tuple(ev))
+    return out
+
+
+def _apply_fault(ev: Tuple[object, ...], *, hub: LoopbackHub,
+                 peers: List[Optional[PeerNode]],
+                 identities: Dict[int, PeerIdentity], ring: KeyRing,
+                 stores: List[ChainStore], cap: int, compact: bool,
+                 suite_seed: int, liveness: Dict[str, object],
+                 recoveries: List[Dict[str, object]],
+                 frng: random.Random) -> str:
+    kind, idx = str(ev[1]), int(ev[2])
+    if kind == "crash":
+        if peers[idx] is None:
+            raise ValueError(f"fault crashes peer{idx} twice")
+        hub.unregister(f"peer{idx}")
+        peers[idx] = None
+        return f"crash peer{idx}"
+    if kind == "corrupt_store":
+        mode = str(ev[3]) if len(ev) > 3 else "bitflip"
+        what = stores[idx].corrupt_tail(frng, mode)
+        return f"corrupt_store peer{idx}: {what or 'nothing to damage'}"
+    if kind != "restart":
+        raise ValueError(f"unknown fault kind {kind!r}")
+    if peers[idx] is not None:
+        raise ValueError(f"fault restarts live peer{idx}")
+    shell = _suite_node(idx, suite_seed=suite_seed, keyring=ring)
+    node = Node.recover(stores[idx], node=shell)
+    rec = node.last_recovery
+    recoveries.append({"peer": idx, "replayed": rec.replayed,
+                       "adopted_height": rec.adopted_height,
+                       "truncated_records": rec.truncated_records})
+    pn = PeerNode(node, identities[idx], ring, compact=compact,
+                  addr=make_addr(identities[idx], "loopback", 9000 + idx),
+                  max_peers=cap, **liveness)
+    pn.attach(hub.register(f"peer{idx}"))
+    peers[idx] = pn
+    # re-bootstrap: dial the lowest-numbered live peer (a fresh anchor),
+    # then beacon heights both ways so headers-first resync starts now
+    reseed = next((j for j, p in enumerate(peers)
+                   if p is not None and j != idx), None)
+    if reseed is not None:
+        seed_addr = make_addr(identities[reseed], "loopback", 9000 + reseed)
+        pn.peerbook.add(seed_addr, verified=True)
+        if hub.connect(f"peer{idx}", f"peer{reseed}"):
+            pn.on_dialed(f"peer{reseed}", seed_addr)
+    hub.pump()
+    for other in peers:
+        if other is not None:
+            other.broadcast_hello()
+    hub.pump()
+    return (f"restart peer{idx}: replayed={rec.replayed} "
+            f"adopted={rec.adopted_height} resynced={rec.resynced_height}")
+
+
+def _settle(hub: LoopbackHub, peers: List[Optional[PeerNode]], *,
+            rounds: int, tick_dt: float) -> int:
+    """Height-beacon rounds (hello + pump + advance + tick) until every
+    live peer reports one height; returns the rounds it took."""
+    for r in range(rounds):
+        live = [pn for pn in peers if pn is not None]
+        if len({pn.node.ledger.height for pn in live}) <= 1:
+            return r
+        for pn in live:
+            pn.broadcast_hello()
+        hub.pump()
+        hub.advance(tick_dt)
+        for pn in live:
+            pn.tick()
+        hub.pump()
+    return rounds
+
+
 def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
                   compact: bool = True,
                   drop_prob: float = 0.0,
@@ -876,7 +1262,9 @@ def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
                   schedule: Sequence[str] = _SUITE_SCHEDULE,
                   oracle: bool = True,
                   max_peers: Optional[int] = None,
-                  max_rounds: int = 16) -> Dict[str, object]:
+                  max_rounds: int = 16,
+                  faults: Sequence[Sequence[object]] = (),
+                  tick_dt: float = 1.0) -> Dict[str, object]:
     """N peers bootstrapped from a **single seed address**: every peer
     starts linked only to ``peer0``, learns the rest of the mesh from
     HELLO addr payloads and ADDR gossip, dials it full, then mines the
@@ -884,14 +1272,26 @@ def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
     bit-identically with the in-process ``Network`` oracle (tips,
     ledgers, credit books).  The report adds discovery metrics (rounds
     and wall-clock to full mesh — the ``mesh_discovery`` bench row)
-    and per-peer score/book state."""
+    and per-peer score/book state.
+
+    ``faults`` injects crash/restart/corrupt_store events keyed by
+    block index (see ``_apply_fault``): every peer then journals to a
+    ``ChainStore`` and each mined block is followed by one simulated
+    second (``tick_dt``) plus a liveness sweep, so pulls targeted at a
+    crashed peer time out and fail over instead of stranding."""
     identities, ring = make_identities(n_peers)
     hub = LoopbackHub(seed=seed, drop_prob=drop_prob, full_mesh=False)
     cap = max_peers if max_peers is not None else n_peers + 2
-    peers: List[PeerNode] = []
+    fmap = _fault_map(faults)
+    frng = random.Random(seed ^ 0x5DEECE66)
+    stores = [ChainStore() for _ in range(n_peers)]
+    recoveries: List[Dict[str, object]] = []
+    fault_log: List[str] = []
+    peers: List[Optional[PeerNode]] = []
     t0 = time.perf_counter()
     for i in range(n_peers):
-        node = _suite_node(i, suite_seed=suite_seed, keyring=ring)
+        node = _suite_node(i, suite_seed=suite_seed, keyring=ring,
+                           store=stores[i] if faults else None)
         pn = PeerNode(node, identities[i], ring, compact=compact,
                       addr=make_addr(identities[i], "loopback", 9000 + i),
                       max_peers=cap)
@@ -908,20 +1308,33 @@ def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
     full_mesh = _mesh_complete(peers)
     # mine the suite round-robin over the discovered topology
     for b, family in enumerate(schedule):
-        peers[b % n_peers].mine_and_announce(family)
+        for ev in fmap.get(b, ()):
+            fault_log.append(_apply_fault(
+                ev, hub=hub, peers=peers, identities=identities,
+                ring=ring, stores=stores, cap=cap, compact=compact,
+                suite_seed=suite_seed, liveness={},
+                recoveries=recoveries, frng=frng))
+        miner = peers[b % n_peers]
+        if miner is None:
+            raise ValueError(
+                f"fault schedule leaves block-{b} miner peer{b % n_peers} "
+                "crashed — restart it before its round-robin turn")
+        miner.mine_and_announce(family)
         hub.pump()
-    for _ in range(8):
-        heights = {pn.node.ledger.height for pn in peers}
-        if len(heights) == 1:
-            break
-        for pn in peers:
-            pn.broadcast_hello()
-        hub.pump()
+        if faults:
+            hub.advance(tick_dt)
+            for pn in peers:
+                if pn is not None:
+                    pn.tick()
+            hub.pump()
+    _settle(hub, peers, rounds=8, tick_dt=tick_dt)
     elapsed = time.perf_counter() - t0
-    digests = [chain_digest(pn.node) for pn in peers]
-    books = [tuple(sorted(pn.node.book.balances.items())) for pn in peers]
-    converged = (len(set(digests)) == 1 and len(set(books)) == 1
-                 and all(pn.node.ledger.verify_chain() for pn in peers))
+    live = [pn for pn in peers if pn is not None]
+    digests = [chain_digest(pn.node) for pn in live]
+    books = [tuple(sorted(pn.node.book.balances.items())) for pn in live]
+    converged = (len(live) == n_peers
+                 and len(set(digests)) == 1 and len(set(books)) == 1
+                 and all(pn.node.ledger.verify_chain() for pn in live))
     report: Dict[str, object] = {
         "n_peers": n_peers,
         "n_blocks": len(schedule),
@@ -931,15 +1344,21 @@ def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
         "full_mesh": full_mesh,
         "discovery_rounds": rounds,
         "discovery_s": round(discovery_s, 4),
-        "links": {pn.port.name: pn.port.peer_names() for pn in peers},
-        "height": peers[0].node.ledger.height,
+        "links": {pn.port.name: pn.port.peer_names() for pn in live},
+        "height": live[0].node.ledger.height,
         "chain_digest": digests[0],
         "bytes_on_wire": hub.total_bytes(),
-        "addrs_added": sum(pn.stats.addrs_added for pn in peers),
+        "addrs_added": sum(pn.stats.addrs_added for pn in live),
         "elapsed_s": round(elapsed, 3),
-        "peer_stats": [pn.stats.to_dict() for pn in peers],
-        "peerbooks": [pn.peerbook.to_dict() for pn in peers],
+        "peer_stats": [pn.stats.to_dict() for pn in live],
+        "peerbooks": [pn.peerbook.to_dict() for pn in live],
     }
+    if faults:
+        report["faults"] = fault_log
+        report["recoveries"] = recoveries
+        report["n_alive"] = len(live)
+        report["timeouts"] = sum(pn.stats.timeouts for pn in live)
+        report["failovers"] = sum(pn.stats.failovers for pn in live)
     if oracle:
         from repro.chain.network import Network
         net = Network.create(
@@ -953,5 +1372,274 @@ def mesh_scenario(n_peers: int = 5, seed: int = 0, *,
         report["oracle_digest"] = oracle_digest
         report["oracle_match"] = bool(
             converged and digests[0] == oracle_digest
+            and books[0] == oracle_books)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# the eclipse adversary + the all-faults chaos scenario (DESIGN §15)
+# ---------------------------------------------------------------------------
+
+
+class EclipseAttacker:
+    """A sybil fleet trying to monopolize a victim's connections.
+
+    Each attacker identity registers a hub port under its canonical
+    loopback name (``peer{node_id}``), so victim dials of gossiped
+    attacker addrs land on the adversary.  The attack surface, in
+    rising order of subtlety:
+
+    * **addr flood** — every sybil connection pushes the whole fleet's
+      self-signed addrs (a 10:1 flood at the default ratio), trying to
+      fill the victim's ``PeerBook`` new bucket and win every future
+      dial.  Countered by the book's per-source quota.
+    * **bait-and-starve** — sybils HELLO with an enormous fake height
+      to capture the victim's headers-first pulls, then never answer a
+      GET: each pull burns a deadline.  Countered by the liveness
+      sweep (timeout -> score -> failover to the next-best peer).
+    * **keepalive mimicry** — sybils answer PING with a well-formed
+      PONG, so naive keepalive never drops them.  This is deliberate:
+      the defense the scenario pins is anchors + quotas + timeout
+      scoring, not "attackers forget to pong".
+
+    The one thing the adversary can never do is evict an **anchor**:
+    connection-cap eviction skips ``anchor_ids``, so a victim whose
+    first dial was honest keeps that link no matter the flood."""
+
+    def __init__(self, hub: LoopbackHub,
+                 identities: Sequence[PeerIdentity], *,
+                 host: str = "attacker", base_port: int = 19000,
+                 bait_height: int = 1_000_000) -> None:
+        self.hub = hub
+        self.identities = list(identities)
+        self.bait_height = bait_height
+        self.addrs = [make_addr(ident, host, base_port + k)
+                      for k, ident in enumerate(self.identities)]
+        self.ports: Dict[str, object] = {}
+        self._ident_of: Dict[str, Tuple[PeerIdentity, PeerAddr]] = {}
+        self._flooded: set = set()
+        self.stats = {"conns": 0, "hellos_recv": 0, "pings_answered": 0,
+                      "pulls_starved": 0, "addr_frames": 0}
+        for ident, addr in zip(self.identities, self.addrs):
+            name = f"peer{ident.node_id}"
+            port = hub.register(name)
+            port.on_message = self._handler(name)
+            self.ports[name] = port
+            self._ident_of[name] = (ident, addr)
+
+    def _handler(self, name: str):
+        return lambda src, msg: self.on_message(name, src, msg)
+
+    def _hello(self, name: str) -> Hello:
+        ident, addr = self._ident_of[name]
+        return Hello(version=PROTOCOL_VERSION, node_id=ident.node_id,
+                     pubkey=ident.pubkey, height=self.bait_height,
+                     addr=addr)
+
+    def engage(self, victim: str, n_conns: int = 2) -> int:
+        """Open ``n_conns`` direct links to the victim, introduce those
+        sybils, and flood the fleet's addrs; returns links opened."""
+        opened = 0
+        for name in list(self.ports)[:n_conns]:
+            if self.hub.connect(name, victim):
+                opened += 1
+                self.stats["conns"] += 1
+                self.ports[name].send(victim, self._hello(name))
+                self.flood(name, victim)
+        return opened
+
+    def flood(self, src_name: str, dst: str) -> None:
+        for i in range(0, len(self.addrs), MAX_ADDRS):
+            self.ports[src_name].send(
+                dst, Addr(addrs=tuple(self.addrs[i:i + MAX_ADDRS])))
+            self.stats["addr_frames"] += 1
+
+    def on_message(self, name: str, src: str, msg: Optional[Message]
+                   ) -> None:
+        if isinstance(msg, Hello):
+            self.stats["hellos_recv"] += 1
+            self.ports[name].send(src, self._hello(name))
+            if (name, src) not in self._flooded:
+                self._flooded.add((name, src))
+                self.flood(name, src)
+        elif isinstance(msg, Ping):
+            self.stats["pings_answered"] += 1
+            self.ports[name].send(src, Pong(nonce=msg.nonce))
+        elif isinstance(msg, (GetHeaders, GetBodies)):
+            # the starvation half of bait-and-starve: dead silence
+            self.stats["pulls_starved"] += 1
+
+
+_CHAOS_SCHEDULE = ("classic", "sat", "classic", "gan", "classic",
+                   "classic", "sat", "classic", "gan", "classic",
+                   "classic", "sat", "classic", "gan", "classic")
+
+_CHAOS_FAULTS = ((3, "crash", 2), (3, "corrupt_store", 2),
+                 (6, "restart", 2),
+                 (9, "crash", 3), (12, "restart", 3))
+
+
+def mesh_chaos_scenario(n_peers: int = 5, seed: int = 0, *,
+                        compact: bool = True,
+                        suite_seed: int = 7,
+                        schedule: Sequence[str] = _CHAOS_SCHEDULE,
+                        faults: Sequence[Sequence[object]] = _CHAOS_FAULTS,
+                        oracle: bool = True,
+                        max_peers: Optional[int] = None,
+                        attacker_ratio: int = 10,
+                        n_attacker_conns: int = 2,
+                        corrupt_frames_per_block: int = 1,
+                        victim: int = 1,
+                        max_rounds: int = 16,
+                        tick_dt: float = 1.0) -> Dict[str, object]:
+    """Everything at once, one seed: an N-peer single-seed mesh mines
+    the suite while peers **crash** (port unregistered, frames in
+    flight lost), their journals get **corrupted**, they **restart**
+    through ``Node.recover`` + headers-first wire resync, an
+    ``EclipseAttacker`` with ``attacker_ratio * n_peers`` sybil
+    identities floods addr gossip and bait-and-starves the victim, and
+    every block a **corrupted frame** is injected at an honest port —
+    and the honest mesh must still reconverge with a chain digest
+    byte-identical to the in-process ``Network`` oracle mining the
+    same schedule.
+
+    The acceptance surface (``test_net_chaos`` pins it): ``converged``
+    and ``oracle_match`` true, every crash recovered, the victim holds
+    at least one honest **anchor** connection at the end, and no
+    gossip source ever charged the victim's book past its per-source
+    quota (a dial-confirmed first-hand addr is uncharged by design —
+    admitting a peer who just proved its identity is not a flood)."""
+    n_att = attacker_ratio * n_peers
+    identities, ring = make_identities(n_peers + n_att)
+    hub = LoopbackHub(seed=seed, full_mesh=False)
+    frng = random.Random(seed ^ 0x0DDBA11)
+    cap = max_peers if max_peers is not None else n_peers + 2
+    # tight liveness windows on the simulated clock: one block == one
+    # second, so a starved pull fails over within a block or two
+    liveness: Dict[str, object] = dict(
+        request_timeout=1.0, max_retries=3, backoff=2.0,
+        ping_interval=2.0, keepalive_timeout=4.0, n_anchors=2)
+    stores = [ChainStore() for _ in range(n_peers)]
+    recoveries: List[Dict[str, object]] = []
+    fault_log: List[str] = []
+    fmap = _fault_map(faults)
+    peers: List[Optional[PeerNode]] = []
+    t0 = time.perf_counter()
+    for i in range(n_peers):
+        node = _suite_node(i, suite_seed=suite_seed, keyring=ring,
+                           store=stores[i])
+        pn = PeerNode(node, identities[i], ring, compact=compact,
+                      addr=make_addr(identities[i], "loopback", 9000 + i),
+                      max_peers=cap, **liveness)
+        pn.attach(hub.register(f"peer{i}"))
+        peers.append(pn)
+    # single-seed bootstrap through the *dial* path, so peer0 becomes
+    # every peer's first anchor — the honest link eviction cannot touch
+    seed_addr = make_addr(identities[0], "loopback", 9000)
+    for i in range(1, n_peers):
+        peers[i].peerbook.add(seed_addr, verified=True)
+        if hub.connect(f"peer{i}", "peer0"):
+            peers[i].on_dialed("peer0", seed_addr)
+    hub.pump()
+    # the adversary engages the victim *before* discovery fills the
+    # mesh — the flood is in the book when dial selection happens
+    attacker = EclipseAttacker(
+        hub, [identities[n_peers + k] for k in range(n_att)])
+    attacker.engage(f"peer{victim}", n_conns=n_attacker_conns)
+    hub.pump()
+    rounds = drive_discovery(hub, peers, max_rounds=max_rounds)
+    # chaos loop: faults before the block, one corrupted frame per
+    # block, one simulated second + liveness sweep after it
+    for b, family in enumerate(schedule):
+        for ev in fmap.get(b, ()):
+            fault_log.append(_apply_fault(
+                ev, hub=hub, peers=peers, identities=identities,
+                ring=ring, stores=stores, cap=cap, compact=compact,
+                suite_seed=suite_seed, liveness=liveness,
+                recoveries=recoveries, frng=frng))
+        miner = peers[b % n_peers]
+        if miner is None:
+            raise ValueError(
+                f"fault schedule leaves block-{b} miner peer{b % n_peers} "
+                "crashed — restart it before its round-robin turn")
+        for k in range(corrupt_frames_per_block):
+            tgt = f"peer{(b + k) % n_peers}"
+            if tgt in hub.ports:
+                raw = bytearray(encode_message(Ping(nonce=b * 997 + k)))
+                raw[frng.randrange(len(raw))] ^= 1 << frng.randrange(8)
+                hub.inject("chaos", tgt, bytes(raw))
+        miner.mine_and_announce(family)
+        hub.pump()
+        hub.advance(tick_dt)
+        for pn in peers:
+            if pn is not None:
+                pn.tick()
+        hub.pump()
+    settle_rounds = _settle(hub, peers, rounds=12, tick_dt=tick_dt)
+    elapsed = time.perf_counter() - t0
+    live = [pn for pn in peers if pn is not None]
+    digests = [chain_digest(pn.node) for pn in live]
+    books = [tuple(sorted(pn.node.book.balances.items())) for pn in live]
+    converged = (len(live) == n_peers
+                 and len(set(digests)) == 1 and len(set(books)) == 1
+                 and all(pn.node.ledger.verify_chain() for pn in live))
+    vic = peers[victim]
+    vic_conns = vic._peers() if vic is not None else []
+    honest_conns = [c for c in vic_conns
+                    if 0 <= vic.conn_ids.get(c, -1) < n_peers]
+    attacker_conns = [c for c in vic_conns
+                      if vic.conn_ids.get(c, -1) >= n_peers]
+    honest_anchors = ([nid for nid in vic.anchor_ids
+                       if nid < n_peers and f"peer{nid}" in vic_conns]
+                      if vic is not None else [])
+    report: Dict[str, object] = {
+        "n_peers": n_peers,
+        "n_attackers": n_att,
+        "n_blocks": len(schedule),
+        "converged": converged,
+        "n_alive": len(live),
+        "height": live[0].node.ledger.height if live else 0,
+        "chain_digest": digests[0] if digests else "",
+        "discovery_rounds": rounds,
+        "settle_rounds": settle_rounds,
+        "faults": fault_log,
+        "recoveries": recoveries,
+        "victim": {
+            "peer": victim,
+            "honest_conns": len(honest_conns),
+            "attacker_conns": len(attacker_conns),
+            "honest_anchors": len(honest_anchors),
+            "attacker_addrs_admitted": sum(
+                1 for a in vic.peerbook.known()
+                if a.node_id >= n_peers) if vic is not None else 0,
+            "per_source_quota": (vic.peerbook.max_new_per_source
+                                 if vic is not None else 0),
+            "max_source_charge": (max(collections.Counter(
+                vic.peerbook.sources.values()).values(), default=0)
+                                  if vic is not None else 0),
+        },
+        "attacker": dict(attacker.stats),
+        "timeouts": sum(pn.stats.timeouts for pn in live),
+        "failovers": sum(pn.stats.failovers for pn in live),
+        "keepalive_drops": sum(pn.stats.keepalive_drops for pn in live),
+        "bans": sum(pn.stats.bans for pn in live),
+        "quarantined": sum(p.stats.quarantined
+                           for p in hub.ports.values()),
+        "bytes_on_wire": hub.total_bytes(),
+        "elapsed_s": round(elapsed, 3),
+    }
+    if oracle:
+        from repro.chain.network import Network
+        net = Network.create(
+            n_peers,
+            node_factory=lambda i: _suite_node(
+                i, suite_seed=suite_seed, keyring=ring),
+            identities={i: identities[i] for i in range(n_peers)})
+        net.run(len(schedule), list(schedule))
+        oracle_digest = chain_digest(net.nodes[0])
+        oracle_books = tuple(sorted(net.nodes[0].book.balances.items()))
+        report["oracle_digest"] = oracle_digest
+        report["oracle_match"] = bool(
+            converged and digests and digests[0] == oracle_digest
             and books[0] == oracle_books)
     return report

@@ -105,6 +105,7 @@ class TokenBucket:
 W_INVALID = 20          # undecodable/forged frame content, bad signature
 W_RATE = 10             # serve-path rate-limit / request-cap violation
 W_STALE = 5             # advertised a height it could not deliver
+W_TIMEOUT = 4           # a request deadline it let expire (DESIGN §15)
 W_UNSOLICITED = 2       # bodies/addrs nobody asked for
 W_USEFUL = 5            # credit per block this peer genuinely delivered
 BAN_THRESHOLD = 100
@@ -115,17 +116,23 @@ class PeerScore:
     """Behavior ledger for one connection.  ``score`` ranks peers for
     eviction (higher = keep); ``misbehavior`` only ever grows, and
     ``banned`` is monotone in it — useful blocks buy eviction
-    priority, **not** forgiveness for protocol abuse."""
+    priority, **not** forgiveness for protocol abuse.  ``timeouts``
+    counts expired request deadlines: cheaper than an invalid frame (a
+    slow honest peer is not an attacker) but enough that a peer
+    *baiting* pulls it never answers — the eclipse starvation pattern
+    — bans itself within ``BAN_THRESHOLD / W_TIMEOUT`` expiries."""
     useful_blocks: int = 0
     invalid_frames: int = 0
     rate_violations: int = 0
     stale_tips: int = 0
+    timeouts: int = 0
     unsolicited: int = 0
 
     def misbehavior(self) -> int:
         return (W_INVALID * self.invalid_frames
                 + W_RATE * self.rate_violations
                 + W_STALE * self.stale_tips
+                + W_TIMEOUT * self.timeouts
                 + W_UNSOLICITED * self.unsolicited)
 
     def score(self) -> int:
@@ -167,12 +174,24 @@ class PeerBook:
     Both buckets are capped.  Eviction keeps the ``max_*`` entries
     with the smallest ``sha256(salt | node_id)`` keys: deterministic,
     insertion-order-free, and uniform over ids — an attacker cannot
-    choose arrival order to flush honest entries."""
+    choose arrival order to flush honest entries.
+
+    **Eclipse defense** (DESIGN §15): gossip-relayed addrs are charged
+    to the *relaying* connection's identity (``add(..., source=...)``)
+    and each source may hold at most ``max_new_per_source`` entries of
+    ``new`` — within a source's slice, eviction keeps the smallest
+    ``sha256(salt | source | node_id)`` keys, a per-source salt the
+    flooder cannot grind from another slice.  An attacker relaying
+    thousands of self-signed addrs through one connection therefore
+    caps out at one quota's worth of book space; first-hand records
+    (a HELLO's own addr, a completed dial) carry ``source=None`` and
+    are never charged to a relay."""
 
     def __init__(self, *, self_id: Optional[int] = None,
                  keyring: Optional[KeyRing] = None,
                  max_new: int = 64, max_tried: int = 32,
-                 max_failures: int = 3, salt: int = 0) -> None:
+                 max_failures: int = 3, salt: int = 0,
+                 max_new_per_source: Optional[int] = None) -> None:
         if max_new < 1 or max_tried < 1:
             raise ValueError("bucket caps must be >= 1")
         self.self_id = self_id
@@ -181,10 +200,18 @@ class PeerBook:
         self.max_tried = max_tried
         self.max_failures = max_failures
         self.salt = salt
+        if max_new_per_source is None:
+            max_new_per_source = max(max_new // 8, 4)
+        if max_new_per_source < 1:
+            raise ValueError("max_new_per_source must be >= 1")
+        self.max_new_per_source = max_new_per_source
         self.new: Dict[int, PeerAddr] = {}
         self.tried: Dict[int, PeerAddr] = {}
         self.banned: set = set()
         self.failures: Dict[int, int] = {}
+        # node id -> the relay (source id) its book space is charged to;
+        # absent = first-hand knowledge, charged to nobody
+        self.sources: Dict[int, int] = {}
         self.rejected = 0            # addrs refused admission
         self.evicted = 0
 
@@ -194,10 +221,39 @@ class PeerBook:
             b"pnp-peerbook|" + struct.pack("<q", self.salt)
             + struct.pack("<q", node_id)).digest()
 
+    def _skey(self, source: int, node_id: int) -> bytes:
+        """Per-source-salted eviction key: which of one relay's entries
+        survive its quota depends on (salt, source, id) only — not on
+        arrival order, and not on anything the relay can grind against
+        *other* sources' slices."""
+        return hashlib.sha256(
+            b"pnp-peerbook-src|" + struct.pack("<q", self.salt)
+            + struct.pack("<q", source)
+            + struct.pack("<q", node_id)).digest()
+
+    def _source_slice(self, source: int) -> List[int]:
+        return [nid for nid in self.new
+                if self.sources.get(nid) == source]
+
+    def _trim_source(self, source: int) -> None:
+        """Enforce one relay's quota: evict the largest per-source-
+        salted keys until its slice fits."""
+        slice_ = self._source_slice(source)
+        while len(slice_) > self.max_new_per_source:
+            worst = max(slice_, key=lambda nid: self._skey(source, nid))
+            slice_.remove(worst)
+            self._drop(worst)
+            self.evicted += 1
+
+    def _drop(self, node_id: int) -> None:
+        self.new.pop(node_id, None)
+        self.sources.pop(node_id, None)
+
     def _trim(self, bucket: Dict[int, PeerAddr], cap: int) -> None:
         while len(bucket) > cap:
             worst = max(bucket, key=self._key)
             del bucket[worst]
+            self.sources.pop(worst, None)
             self.evicted += 1
 
     # -- admission ----------------------------------------------------
@@ -208,13 +264,21 @@ class PeerBook:
         nid = addr.node_id
         return self.tried.get(nid) == addr or self.new.get(nid) == addr
 
-    def add(self, addr: PeerAddr, *, verified: bool = False) -> bool:
+    def add(self, addr: PeerAddr, *, verified: bool = False,
+            source: Optional[int] = None) -> bool:
         """Admit a gossiped addr into ``new`` (or refresh an existing
         entry).  Returns True iff the addr is *newly learned* — the
         caller's cue to relay it onward exactly once.  ``verified``
         skips the (slow) signature check when the caller already ran
         ``addr.verify`` against this book's ring; structural sanity is
-        never skipped — a malformed addr cannot enter."""
+        never skipped — a malformed addr cannot enter.
+
+        ``source`` is the relaying identity for third-party gossip:
+        the entry is charged against that relay's
+        ``max_new_per_source`` quota (eclipse defense).  ``None``
+        means first-hand knowledge — a peer's own HELLO addr or a
+        dialed endpoint — which is never charged, and *discharges* an
+        entry previously learned through a relay."""
         if not isinstance(addr, PeerAddr):
             self.rejected += 1
             return False
@@ -237,6 +301,17 @@ class PeerBook:
         known = self.new.get(nid)
         if known is None or known.endpoint != addr.endpoint:
             self.new[nid] = addr
+        if source is None:
+            # first-hand: uncharged (and discharges a relay claim —
+            # even when the endpoint is unchanged, hearing it from the
+            # peer itself upgrades the entry's provenance)
+            self.sources.pop(nid, None)
+        elif novel:
+            # charged to the first relay only — re-gossip through
+            # other connections cannot move an entry between slices
+            self.sources[nid] = source
+            self._trim_source(source)
+        if novel:
             self._trim(self.new, self.max_new)
         return novel and nid in self.new
 
@@ -249,6 +324,7 @@ class PeerBook:
         if addr is None:
             return
         self.failures.pop(node_id, None)
+        self.sources.pop(node_id, None)    # a live conn is first-hand
         self.tried[node_id] = addr
         self._trim(self.tried, self.max_tried)
 
@@ -262,13 +338,13 @@ class PeerBook:
             self.new[node_id] = addr
             self._trim(self.new, self.max_new)
         elif n >= self.max_failures:
-            self.new.pop(node_id, None)
+            self._drop(node_id)
             self.failures.pop(node_id, None)
 
     def ban(self, node_id: int) -> None:
         """Remove and permanently refuse this id (misbehavior ban)."""
         self.banned.add(node_id)
-        self.new.pop(node_id, None)
+        self._drop(node_id)
         self.tried.pop(node_id, None)
         self.failures.pop(node_id, None)
 
@@ -307,4 +383,6 @@ class PeerBook:
     def to_dict(self) -> Dict[str, object]:
         return {"new": sorted(self.new), "tried": sorted(self.tried),
                 "banned": sorted(self.banned),
-                "rejected": self.rejected, "evicted": self.evicted}
+                "rejected": self.rejected, "evicted": self.evicted,
+                "charged": {s: len(self._source_slice(s))
+                            for s in sorted(set(self.sources.values()))}}

@@ -86,8 +86,14 @@ class LoopbackPort:
 
     def now(self) -> float:
         """The hub's simulated clock (drives the peer's rate buckets
-        deterministically)."""
+        and request deadlines deterministically)."""
         return self.hub.now
+
+    def peer_endpoint(self, conn: str) -> Optional[Tuple[str, int]]:
+        """The (host, port) this connection appears to come from —
+        what HELLO's observed-address echo carries.  Loopback peers
+        have one only if the hub was told (``set_endpoint``)."""
+        return self.hub.endpoints.get(conn)
 
     def send(self, dst: str, msg: Message) -> None:
         frame = encode_message(msg)
@@ -136,6 +142,9 @@ class LoopbackHub:
         self._seq = 0
         self._queue: List[Tuple[float, int, str, str, bytes]] = []
         self._links: Dict[str, set] = {}
+        # port name -> the (host, port) other peers observe it at
+        # (observed-address feedback in loopback tests/scenarios)
+        self.endpoints: Dict[str, Tuple[str, int]] = {}
 
     def register(self, name: str) -> LoopbackPort:
         if name in self.ports:
@@ -150,6 +159,30 @@ class LoopbackHub:
                 self._links[other].add(name)
         self.ports[name] = port
         return port
+
+    def unregister(self, name: str) -> None:
+        """A process crash: the port vanishes, every link to it drops,
+        and frames already in flight toward it are lost at delivery.
+        The name becomes free — a restarted process ``register``s it
+        again and redials from scratch."""
+        self.ports.pop(name, None)
+        for other in self._links.pop(name, set()):
+            self._links.get(other, set()).discard(name)
+        self.endpoints.pop(name, None)
+
+    def set_endpoint(self, name: str, host: str, port: int) -> None:
+        """Declare where peers observe ``name`` connecting from (feeds
+        ``LoopbackPort.peer_endpoint`` / HELLO observed echoes)."""
+        self.endpoints[name] = (host, port)
+
+    def advance(self, dt: float) -> float:
+        """Move simulated time forward by ``dt`` (never backwards) —
+        how scenarios and tests expire request deadlines and keepalive
+        windows between pumps."""
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        self.now += dt
+        return self.now
 
     # -- explicit topology (mesh mode) --------------------------------
     def links_of(self, name: str) -> List[str]:
@@ -242,6 +275,7 @@ class TcpTransport:
         self.on_message: Optional[Callable[[str, Message], None]] = None
         self.on_quarantine: Optional[Callable[[str], None]] = None
         self._writers: Dict[str, asyncio.StreamWriter] = {}
+        self._endpoints: Dict[str, Tuple[str, int]] = {}
         self._server: Optional[asyncio.AbstractServer] = None
         self._tasks: List[asyncio.Task] = []
         self._n_in = 0
@@ -252,8 +286,14 @@ class TcpTransport:
         return list(self._writers)
 
     def now(self) -> float:
-        """Monotonic wall clock (drives the peer's rate buckets)."""
+        """Monotonic wall clock (drives the peer's rate buckets and
+        request deadlines)."""
         return time.monotonic()
+
+    def peer_endpoint(self, conn: str) -> Optional[Tuple[str, int]]:
+        """The TCP peername this connection arrived from — what
+        HELLO's observed-address echo carries back to a NATed peer."""
+        return self._endpoints.get(conn)
 
     def send(self, dst: str, msg: Message) -> None:
         writer = self._writers.get(dst)
@@ -318,6 +358,9 @@ class TcpTransport:
     async def _run_conn(self, name: str, reader: asyncio.StreamReader,
                         writer: asyncio.StreamWriter) -> None:
         self._writers[name] = writer
+        peername = writer.get_extra_info("peername")
+        if isinstance(peername, (tuple, list)) and len(peername) >= 2:
+            self._endpoints[name] = (str(peername[0]), int(peername[1]))
         fb = FrameBuffer()
         seen_quarantined = 0
         try:
@@ -343,6 +386,7 @@ class TcpTransport:
                     break                  # hostile/broken peer: drop
         finally:
             self._writers.pop(name, None)
+            self._endpoints.pop(name, None)
             try:
                 writer.close()
             except Exception:

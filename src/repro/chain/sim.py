@@ -1069,7 +1069,8 @@ def _main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario",
                     choices=("partition", "adversarial", "throughput",
-                             "heterogeneous", "chaos", "wire", "mesh"),
+                             "heterogeneous", "chaos", "wire", "mesh",
+                             "mesh_chaos"),
                     default="partition")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--nodes", type=int, default=4,
@@ -1101,6 +1102,22 @@ def _main() -> int:
         assert report["converged"], "mesh peers failed to converge"
         assert report["oracle_match"], \
             "mesh-relayed chain diverged from the in-process oracle"
+        return 0
+    if args.scenario == "mesh_chaos":
+        # everything at once over the wire: crashes + journal
+        # corruption + restarts through Node.recover + an eclipse
+        # attacker + corrupted frames — and still byte-identical to
+        # the in-process oracle (DESIGN.md §15)
+        from repro.chain.net import mesh_chaos_scenario
+        report = mesh_chaos_scenario(n_peers=max(args.nodes, 5),
+                                     seed=args.seed)
+        print(json.dumps(report, indent=2, sort_keys=True))
+        assert report["converged"], "chaos mesh failed to reconverge"
+        assert report["oracle_match"], \
+            "chaos mesh diverged from the in-process oracle"
+        assert report["recoveries"], "no crash was recovered"
+        assert report["victim"]["honest_anchors"] >= 1, \
+            "eclipse attacker evicted every honest anchor"
         return 0
     if args.scenario == "partition":
         sim = partitioned_scenario(n_nodes=args.nodes, seed=args.seed)

@@ -28,7 +28,7 @@ import pytest
 
 # modules that get a hard deadline even without an explicit marker
 _NET_MODULES = ("test_net_peers", "test_wire_protocol", "test_peerbook",
-                "test_net_mesh")
+                "test_net_mesh", "test_net_liveness", "test_net_chaos")
 _DEFAULT_NET_TIMEOUT_S = 300
 
 

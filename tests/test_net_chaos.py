@@ -1,0 +1,96 @@
+"""Tier-1 tests for mesh chaos tolerance (DESIGN.md §15): fault events
+on the mesh scenario (crash / journal corruption / restart through
+``Node.recover`` + wire resync) and the everything-at-once
+``mesh_chaos_scenario`` — crashes, corrupted frames, and the eclipse
+adversary simultaneously, still byte-identical with the in-process
+oracle.  Schedules here are classic-only to keep tier-1 fast; the
+full heterogeneous suite runs in the sim CLI and the bench."""
+import pytest
+
+from repro.chain.net import mesh_chaos_scenario, mesh_scenario
+
+_CLASSIC8 = ("classic",) * 8
+_CLASSIC10 = ("classic",) * 10
+
+
+def test_mesh_scenario_crash_restart_reconverges_with_oracle():
+    """Crash peer2 mid-run, corrupt its journal tail, restart it: the
+    recovered node replays its journal, truncates the torn record, and
+    resyncs over the wire — everyone reconverges with the oracle."""
+    r = mesh_scenario(n_peers=4, seed=3, schedule=_CLASSIC8,
+                      faults=((3, "crash", 2), (3, "corrupt_store", 2),
+                              (5, "restart", 2)))
+    assert r["converged"], r
+    assert r["oracle_match"], (r["chain_digest"], r.get("oracle_digest"))
+    assert r["n_alive"] == 4
+    assert len(r["recoveries"]) == 1
+    rec = r["recoveries"][0]
+    assert rec["peer"] == 2
+    assert rec["truncated_records"] >= 1       # the corrupted tail
+    assert len(r["faults"]) == 3
+
+
+def test_mesh_scenario_without_faults_reports_no_fault_keys():
+    """The plain mesh path is untouched: no faults — no fault keys."""
+    r = mesh_scenario(n_peers=3, seed=1, schedule=("classic",) * 4,
+                      oracle=False)
+    assert r["converged"], r
+    assert "faults" not in r and "recoveries" not in r
+
+
+def test_mesh_scenario_rejects_schedule_that_leaves_miner_dead():
+    """Crashing the very peer whose round-robin turn is next (and never
+    restarting it) is a broken schedule, not a tolerable fault."""
+    with pytest.raises(ValueError, match="miner"):
+        mesh_scenario(n_peers=3, seed=0, schedule=("classic",) * 4,
+                      faults=((1, "crash", 1),))
+
+
+def test_mesh_chaos_everything_at_once_acceptance():
+    """The PR's acceptance oracle: crashes + journal corruption +
+    restarts + an addr-flooding eclipse adversary + one corrupted frame
+    per block, and the honest mesh still reconverges byte-identically
+    with the in-process Network; the victim keeps an honest anchor and
+    no gossip source overflows its per-source book quota."""
+    r = mesh_chaos_scenario(
+        n_peers=5, seed=0, schedule=_CLASSIC10,
+        faults=((3, "crash", 2), (3, "corrupt_store", 2),
+                (5, "restart", 2), (7, "crash", 3), (8, "restart", 3)))
+    assert r["converged"], r
+    assert r["oracle_match"], (r["chain_digest"], r.get("oracle_digest"))
+    assert r["n_alive"] == 5
+    assert len(r["recoveries"]) == 2           # both crashes recovered
+    vic = r["victim"]
+    assert vic["honest_anchors"] >= 1          # eclipse defense held
+    assert vic["honest_conns"] >= 1
+    assert vic["max_source_charge"] <= vic["per_source_quota"]
+    assert r["attacker"]["addr_frames"] > 0    # the flood really ran
+    assert r["quarantined"] >= 1               # corrupted frames seen
+    assert r["bans"] == 0                      # no honest peer banned
+
+
+def test_mesh_chaos_scenario_is_deterministic():
+    """Same seed, same schedule, same faults — bit-identical chain and
+    identical fault log across runs (the seeded-clock contract)."""
+    kw = dict(n_peers=5, seed=4, schedule=_CLASSIC8, oracle=False,
+              faults=((2, "crash", 4), (4, "restart", 4)))
+    a = mesh_chaos_scenario(**kw)
+    b = mesh_chaos_scenario(**kw)
+    assert a["converged"] and b["converged"]
+    assert a["chain_digest"] == b["chain_digest"]
+    assert a["faults"] == b["faults"]
+    assert a["recoveries"] == b["recoveries"]
+
+
+def test_mesh_chaos_starved_victim_fails_over_past_attacker():
+    """The attacker answers PINGs (keepalive mimicry) but starves every
+    GET_* — liveness deadlines, not keepalive, must route the victim's
+    pulls back to honest peers."""
+    r = mesh_chaos_scenario(n_peers=5, seed=2, schedule=_CLASSIC8,
+                            faults=(), oracle=False)
+    assert r["converged"], r
+    if r["attacker"]["pulls_starved"] > 0:
+        # every starved pull was recovered elsewhere: chains converged,
+        # and the timeouts that rescued them are on the books
+        assert r["timeouts"] > 0
+        assert r["failovers"] > 0

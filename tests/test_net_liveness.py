@@ -1,0 +1,334 @@
+"""Tier-1 tests for the liveness layer (DESIGN.md §15): request
+deadlines with exponential-backoff failover, PING/PONG keepalive,
+observed-address adoption, anchor protection, and the stranded-checksum
+sweep — a silent or vanished peer must never stall sync."""
+import random
+
+import pytest
+
+from repro.chain.net import (Announce, Hello, LoopbackHub, PROTOCOL_VERSION,
+                             PeerNode, Ping, Pong, make_announce,
+                             make_identities)
+from repro.chain.node import Node
+
+
+def _peer(i, identities, ring, hub, *, name=None, **kw):
+    node = Node(node_id=i, classic_arg_bits=6, keyring=ring)
+    pn = PeerNode(node, identities[i], ring, **kw)
+    pn.attach(hub.register(name or f"peer{i}"))
+    return pn
+
+
+def _silent_port(hub, name):
+    """A registered port that never answers — the silent peer."""
+    port = hub.register(name)
+    port.on_message = lambda src, msg: None
+    return port
+
+
+def _compact_announce(identity, receipt):
+    sa = make_announce(identity, receipt.record.to_block(), receipt.payload)
+    return Announce(header=sa.header, checksum=sa.checksum,
+                    origin=sa.origin, pubkey=sa.pubkey,
+                    signature=sa.signature, body=None)
+
+
+def _hello_from(identity, *, height=0, observed=None):
+    return Hello(version=PROTOCOL_VERSION, node_id=identity.node_id,
+                 pubkey=identity.pubkey, height=height, addr=None,
+                 observed=observed)
+
+
+# -- deadlines + failover ---------------------------------------------------
+
+def test_body_pull_timeout_fails_over_to_honest_peer():
+    """A compact announce relayed by a peer that never serves the body:
+    the deadline expires, the silent peer is charged a timeout, and the
+    re-ask goes to the next-best connection — which serves it."""
+    ids, ring = make_identities(3)
+    hub = LoopbackHub(seed=0)
+    peers = [_peer(i, ids, ring, hub, request_timeout=1.0) for i in range(2)]
+    silent = _silent_port(hub, "silent")
+    receipt = peers[1].node.mine_block()
+    silent.send("peer0", _compact_announce(ids[1], receipt))
+    hub.pump()
+    assert peers[0].stats.body_requests == 1
+    assert len(peers[0]._pending) == 1
+    assert peers[0].node.ledger.height == 0    # body never arrives
+    hub.advance(1.5)                           # past request_timeout
+    peers[0].tick()
+    hub.pump()
+    assert peers[0].stats.timeouts == 1
+    assert peers[0].stats.failovers == 1
+    assert peers[0].scores["silent"].timeouts == 1
+    assert peers[0].node.ledger.height == 1    # peer1 served the body
+    assert not peers[0]._pending
+
+
+def test_sync_bait_times_out_and_fails_over():
+    """A HELLO claiming a tall chain from a peer that never answers
+    GET_HEADERS: the pull times out and fails over instead of hanging."""
+    ids, ring = make_identities(3)
+    hub = LoopbackHub(seed=1)
+    peers = [_peer(i, ids, ring, hub, request_timeout=1.0) for i in range(2)]
+    silent = _silent_port(hub, "silent")
+    silent.send("peer0", _hello_from(ids[2], height=50))   # the bait
+    hub.pump()
+    assert "silent" in peers[0]._sync_req
+    hub.advance(1.5)
+    peers[0].tick()
+    hub.pump()
+    assert "silent" not in peers[0]._sync_req
+    assert peers[0].stats.timeouts == 1
+    assert peers[0].stats.failovers == 1
+    assert peers[0].scores["silent"].timeouts == 1
+
+
+def test_backoff_grows_per_attempt_and_retry_cap_holds():
+    """Each failover waits request_timeout * backoff**attempt; past
+    max_retries the checksum is abandoned for a headers-first pull."""
+    ids, ring = make_identities(2)
+    hub = LoopbackHub(seed=2)
+    p0 = _peer(0, ids, ring, hub, request_timeout=1.0, backoff=2.0,
+               max_retries=2)
+    s1 = _silent_port(hub, "s1")
+    _silent_port(hub, "s2")
+    node1 = Node(node_id=1, classic_arg_bits=6, keyring=ring)
+    receipt = node1.mine_block()
+    s1.send("peer0", _compact_announce(ids[1], receipt))
+    hub.pump()
+    (ck, ent0), = p0._pending.items()
+    assert ent0.attempt == 0
+    start = hub.now
+    hub.advance(1.1)
+    p0.tick()                                  # attempt 0 expired
+    ent1 = p0._pending[ck]
+    assert ent1.attempt == 1
+    assert ent1.deadline == pytest.approx(hub.now + 2.0)   # 1.0 * 2**1
+    hub.advance(2.1)
+    p0.tick()                                  # attempt 1 expired
+    ent2 = p0._pending[ck]
+    assert ent2.attempt == 2
+    assert ent2.deadline == pytest.approx(hub.now + 4.0)   # 1.0 * 2**2
+    hub.advance(4.1)
+    p0.tick()                                  # retry cap reached
+    assert ck not in p0._pending               # abandoned...
+    assert p0._sync_req                        # ...for a headers pull
+    assert hub.now - start > 7.0               # backoff actually waited
+
+
+# -- keepalive --------------------------------------------------------------
+
+def test_keepalive_pings_then_drops_silent_peer():
+    ids, ring = make_identities(2)
+    hub = LoopbackHub(seed=0)
+    p0 = _peer(0, ids, ring, hub, ping_interval=5.0, keepalive_timeout=10.0)
+    _silent_port(hub, "silent")
+    p0.tick()                                  # seeds _last_recv
+    hub.advance(6.0)
+    p0.tick()
+    assert p0.stats.pings_sent == 1
+    assert "silent" in p0._ping_sent
+    hub.advance(11.0)                          # probe unanswered
+    p0.tick()
+    assert p0.stats.keepalive_drops == 1
+    assert "silent" not in p0._peers()         # link torn down
+
+
+def test_keepalive_pong_keeps_responsive_peer_alive():
+    ids, ring = make_identities(2)
+    hub = LoopbackHub(seed=0)
+    peers = [_peer(i, ids, ring, hub, ping_interval=5.0,
+                   keepalive_timeout=10.0) for i in range(2)]
+    peers[0].broadcast_hello()
+    hub.pump()
+    hub.advance(6.0)
+    peers[0].tick()
+    hub.pump()                                 # PING out, PONG back
+    assert peers[0].stats.pings_sent == 1
+    assert peers[0].stats.pongs_recv == 1
+    assert not peers[0]._ping_sent
+    hub.advance(11.0)
+    peers[0].tick()
+    assert peers[0].stats.keepalive_drops == 0
+    assert "peer1" in peers[0]._peers()
+
+
+def test_unsolicited_or_wrong_nonce_pong_is_punished():
+    ids, ring = make_identities(2)
+    hub = LoopbackHub(seed=0)
+    p0 = _peer(0, ids, ring, hub, ping_interval=5.0)
+    silent = _silent_port(hub, "silent")
+    silent.send("peer0", Pong(nonce=42))       # nobody asked
+    hub.pump()
+    assert p0.stats.unsolicited == 1
+    assert p0.scores["silent"].unsolicited == 1
+    hub.advance(6.0)
+    p0.tick()                                  # real probe goes out
+    nonce = p0._ping_sent["silent"][0]
+    silent.send("peer0", Pong(nonce=nonce + 7))    # forged echo
+    hub.pump()
+    assert p0.stats.unsolicited == 2
+    assert p0.scores["silent"].unsolicited == 2
+
+
+def test_ping_answered_with_matching_pong():
+    ids, ring = make_identities(2)
+    hub = LoopbackHub(seed=0)
+    p0 = _peer(0, ids, ring, hub)
+    got = []
+    port = hub.register("probe")
+    port.on_message = lambda src, msg: got.append(msg)
+    port.send("peer0", Ping(nonce=123456789))
+    hub.pump()
+    assert any(isinstance(m, Pong) and m.nonce == 123456789 for m in got)
+
+
+# -- the stranded-checksum sweep (satellite bugfix) -------------------------
+
+def test_dead_connection_pending_reenters_pull_queue_without_waiting():
+    """The bugfix: a body fetch whose connection vanished entirely is
+    re-targeted on the very next tick — no deadline wait, no timeout
+    charged to anyone, and the sweep clears the solicited table."""
+    ids, ring = make_identities(3)
+    hub = LoopbackHub(seed=0)
+    peers = [_peer(i, ids, ring, hub, request_timeout=30.0)
+             for i in range(2)]
+    silent = _silent_port(hub, "silent")
+    receipt = peers[1].node.mine_block()
+    silent.send("peer0", _compact_announce(ids[1], receipt))
+    hub.pump()
+    assert len(peers[0]._pending) == 1
+    assert "silent" in peers[0]._asked
+    hub.unregister("silent")                   # process crash
+    peers[0].tick()                            # no time has passed
+    hub.pump()
+    assert peers[0].stats.timeouts == 0        # nobody was slow
+    assert peers[0].stats.failovers == 1
+    assert "silent" not in peers[0]._asked     # table swept
+    assert peers[0].node.ledger.height == 1    # peer1 served it
+
+
+def test_dead_connection_sync_pull_fails_over_immediately():
+    ids, ring = make_identities(3)
+    hub = LoopbackHub(seed=0)
+    peers = [_peer(i, ids, ring, hub, request_timeout=30.0)
+             for i in range(2)]
+    silent = _silent_port(hub, "silent")
+    silent.send("peer0", _hello_from(ids[2], height=50))
+    hub.pump()
+    assert "silent" in peers[0]._sync_req
+    hub.unregister("silent")
+    peers[0].tick()
+    assert "silent" not in peers[0]._sync_req
+    assert peers[0].stats.timeouts == 0
+    assert peers[0].stats.failovers == 1
+
+
+# -- hostile clock property -------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_hostile_clock_sync_never_stalls(seed):
+    """Property: blocks announced only by a peer that never serves
+    bodies, while the clock advances by adversarially random steps
+    between ticks — the victim must still recover the full chain via
+    failover and headers-first pulls, and the pending table drains."""
+    rng = random.Random(seed)
+    ids, ring = make_identities(3)
+    hub = LoopbackHub(seed=seed)
+    peers = [_peer(i, ids, ring, hub, request_timeout=1.0, max_retries=2,
+                   ping_interval=50.0, keepalive_timeout=100.0)
+             for i in range(2)]
+    silent = _silent_port(hub, "silent")
+    k = 3
+    for _ in range(k):
+        receipt = peers[1].node.mine_block()
+        silent.send("peer0", _compact_announce(ids[1], receipt))
+    hub.pump()
+    for _ in range(60):
+        if peers[0].node.ledger.height == k:
+            break
+        hub.advance(rng.uniform(0.1, 6.0))
+        for p in peers:
+            p.broadcast_hello()            # the scenarios' beacon
+            p.tick()
+        hub.pump()
+    assert peers[0].node.ledger.height == k, \
+        (seed, peers[0].node.ledger.height, dict(peers[0]._pending))
+    assert not peers[0]._pending
+    # recovery came through a liveness path: deadline failover or a
+    # beacon-triggered headers pull — never a silent hang
+    assert peers[0].stats.failovers > 0 or peers[0].stats.sync_pulls > 0
+
+
+# -- observed-address adoption (NAT feedback) -------------------------------
+
+def test_observed_address_adopted_at_quorum_with_listen_port():
+    """Two distinct peers echoing the same observed host → the addr-less
+    peer signs it as its own, with listen_port replacing the (ephemeral)
+    observed source port.  One echo alone is not enough."""
+    ids, ring = make_identities(3)
+    hub = LoopbackHub(seed=0)
+    p0 = _peer(0, ids, ring, hub, listen_port=7777, min_observed=2)
+    others = [_peer(i, ids, ring, hub, min_observed=99) for i in (1, 2)]
+    hub.set_endpoint("peer0", "198.51.100.7", 40001)
+    p0.port.send("peer1", p0.hello())
+    hub.pump()
+    assert p0.stats.observed_echoes == 1
+    assert p0.addr is None                     # quorum not reached
+    p0.port.send("peer2", p0.hello())
+    hub.pump()
+    assert p0.stats.addrs_adopted == 1
+    assert p0.addr is not None
+    assert (p0.addr.host, p0.addr.port) == ("198.51.100.7", 7777)
+    assert p0.addr.verify(keyring=ring)        # self-signed and valid
+    assert others[0].addr is None              # they never hit quorum
+
+
+def test_one_lying_reporter_cannot_steer_adoption():
+    """A lone liar echoing a bogus endpoint splits the tally: neither
+    endpoint reaches min_observed, so nothing is adopted — until a
+    second honest peer confirms the real one."""
+    ids, ring = make_identities(4)
+    hub = LoopbackHub(seed=0)
+    p0 = _peer(0, ids, ring, hub, listen_port=7777, min_observed=2)
+    _peer(1, ids, ring, hub)
+    _peer(2, ids, ring, hub)
+    liar = _silent_port(hub, "liar")
+    hub.set_endpoint("peer0", "198.51.100.7", 40001)
+    liar.send("peer0", _hello_from(ids[3], observed=("203.0.113.66", 666)))
+    hub.pump()
+    assert p0.addr is None                     # 1 vote for the lie
+    p0.port.send("peer1", p0.hello())
+    hub.pump()
+    assert p0.addr is None                     # 1 honest vote: still split
+    p0.port.send("peer2", p0.hello())
+    hub.pump()
+    assert p0.addr is not None                 # honest quorum wins
+    assert p0.addr.host == "198.51.100.7"
+
+
+# -- anchors ----------------------------------------------------------------
+
+def test_anchor_connection_survives_cap_eviction():
+    """At the connection cap the eviction pool excludes anchors: gossip-
+    pushed connections are shed, the chosen anchor link stays."""
+    ids, ring = make_identities(4)
+    hub = LoopbackHub(seed=0, full_mesh=False)
+    p0 = _peer(0, ids, ring, hub, max_peers=2, anchors=(1,))
+    anchor = _silent_port(hub, "anchor")
+    evil1 = _silent_port(hub, "evil1")
+    evil2 = _silent_port(hub, "evil2")
+    hub.connect("peer0", "anchor")
+    anchor.send("peer0", _hello_from(ids[1]))
+    hub.pump()
+    hub.connect("peer0", "evil1")
+    evil1.send("peer0", _hello_from(ids[2]))
+    hub.pump()
+    assert sorted(p0._peers()) == ["anchor", "evil1"]    # at cap
+    hub.connect("peer0", "evil2")
+    evil2.send("peer0", _hello_from(ids[3]))
+    hub.pump()
+    assert p0.stats.evictions == 1
+    assert "anchor" in p0._peers()             # protected link held
+    assert len(p0._peers()) == 2

@@ -269,3 +269,85 @@ else:
                              "same properties")
     def test_hypothesis_properties():
         pass
+
+
+# ---------------------------------------------------------------------------
+# per-source quotas (eclipse defense, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def flood_ids():
+    return make_identities(40, seed=5)
+
+
+def test_per_source_quota_bounds_gossip_flood(flood_ids):
+    """One relay pushing 32 addrs may land at most its quota in the
+    new bucket; a second relay still gets its own full slice."""
+    identities, ring = flood_ids
+    book = PeerBook(self_id=0, keyring=ring, max_new_per_source=4)
+    for i in range(2, 34):
+        book.add(make_addr(identities[i], "attacker", 9000 + i), source=1)
+    charged = [nid for nid, s in book.sources.items() if s == 1]
+    assert len(charged) == 4
+    assert all(nid in book for nid in charged)
+    for i in range(34, 40):
+        book.add(make_addr(identities[i], "elsewhere", 9500 + i), source=2)
+    assert sum(1 for s in book.sources.values() if s == 2) == 4
+
+
+def test_per_source_quota_survivors_are_order_free(flood_ids):
+    """Which of a relay's addrs survive its quota depends on the salted
+    hash only — not on the order the flood arrived."""
+    identities, ring = flood_ids
+    addrs = [make_addr(identities[i], "attacker", 9000 + i)
+             for i in range(1, 33)]
+    survivors = []
+    for order_seed in range(5):
+        rng = random.Random(order_seed)
+        shuffled = list(addrs)
+        rng.shuffle(shuffled)
+        book = PeerBook(self_id=0, keyring=ring, salt=11,
+                        max_new_per_source=6)
+        for a in shuffled:
+            book.add(a, source=7)
+        survivors.append(frozenset(nid for nid in book.sources))
+    assert len(set(survivors)) == 1
+    assert len(survivors[0]) == 6
+
+
+def test_first_hand_discharges_relay_claim(flood_ids):
+    """An addr learned through a relay is charged to that relay's
+    quota — until the peer itself confirms it (its own HELLO addr, or
+    a live connection), which upgrades it to first-hand: uncharged,
+    and no longer evictable by the relay's flood."""
+    identities, ring = flood_ids
+    book = PeerBook(self_id=0, keyring=ring, max_new_per_source=2)
+    confirmed = make_addr(identities[3], "loopback", 9003)
+    assert book.add(confirmed, source=1)
+    assert book.sources.get(3) == 1
+    # the peer's own HELLO carries the same endpoint: discharge
+    book.add(confirmed, source=None)
+    assert 3 not in book.sources and 3 in book
+    # relay 1 now floods: the confirmed entry never leaves the book
+    for i in range(4, 20):
+        book.add(make_addr(identities[i], "attacker", 9100 + i), source=1)
+    assert 3 in book
+    assert sum(1 for s in book.sources.values() if s == 1) == 2
+
+
+def test_mark_connected_clears_source_charge(flood_ids):
+    identities, ring = flood_ids
+    book = PeerBook(self_id=0, keyring=ring)
+    book.add(make_addr(identities[5], "loopback", 9005), source=2)
+    assert book.sources.get(5) == 2
+    book.mark_connected(5)
+    assert 5 not in book.sources          # tried entries are first-hand
+    assert 5 in book
+
+
+def test_timeout_weight_reaches_ban_threshold():
+    from repro.chain.net.peerbook import W_TIMEOUT
+    s = PeerScore(timeouts=BAN_THRESHOLD // W_TIMEOUT)
+    assert s.misbehavior() == BAN_THRESHOLD and s.banned()
+    assert PeerScore(timeouts=1).misbehavior() == W_TIMEOUT

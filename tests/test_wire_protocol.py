@@ -16,8 +16,8 @@ from repro.chain.net.identity import (KeyRing, PeerIdentity, SignedAnnounce,
 from repro.chain.net.messages import (MAX_ADDRS, MAX_BODY, PROTOCOL_VERSION,
                                       WIRE_MAGIC, Addr, Announce, Bodies,
                                       FrameBuffer, GetBodies, GetHeaders,
-                                      Hello, Tip, decode_message,
-                                      encode_message)
+                                      Hello, Ping, Pong, Tip,
+                                      decode_message, encode_message)
 from repro.chain.net.peerbook import PeerBook
 from repro.chain.workload import ChainError
 
@@ -43,6 +43,11 @@ _SPECIMENS = [
     GetBodies(checksums=(b"a" * 16, b"b" * 16)),
     Bodies(bodies=(b"payload one", b"payload two" * 40)),
     Addr(addrs=(_ADDR1, _ADDR2)),
+    Hello(version=PROTOCOL_VERSION, node_id=2, pubkey=_ADDR_IDS[2].pubkey,
+          height=9, addr=_ADDR2, observed=("203.0.113.9", 4040)),
+    Ping(nonce=0),
+    Ping(nonce=2 ** 64 - 1),
+    Pong(nonce=0xDEADBEEF),
 ]
 
 
@@ -145,7 +150,30 @@ def test_hello_without_addr_still_decodes():
     """The addr payload is optional: a bare HELLO (the PR-7 shape plus
     version bump) round-trips with ``addr=None``."""
     m = decode_message(encode_message(_SPECIMENS[0]))
-    assert m is not None and m.addr is None
+    assert m is not None and m.addr is None and m.observed is None
+
+
+def test_hello_malformed_observed_endpoint_rejected():
+    """An observed endpoint must satisfy the same structural sanity as
+    a PeerAddr endpoint: port 0, empty/oversized/non-ASCII hosts all
+    kill the whole frame in the decoder — a peer cannot be talked into
+    adopting garbage as its public address."""
+    for bad in (("h", 0), ("h", 65536), ("", 80),
+                ("x" * 256, 80), ("h\x00st", 80), ("h st", 80)):
+        m = Hello(version=PROTOCOL_VERSION, node_id=1,
+                  pubkey=b"\x11" * 32, height=2, observed=bad)
+        assert decode_message(encode_message(m)) is None, bad
+
+
+def test_ping_pong_nonce_range_round_trip():
+    """Keepalive nonces are unsigned 64-bit on the wire — the u64
+    boundary values survive, and a PING never equals the PONG echoing
+    the same nonce (distinct message types)."""
+    for nonce in (0, 1, 2 ** 32, 2 ** 64 - 1):
+        ping, pong = Ping(nonce=nonce), Pong(nonce=nonce)
+        assert decode_message(encode_message(ping)) == ping
+        assert decode_message(encode_message(pong)) == pong
+        assert encode_message(ping) != encode_message(pong)
 
 
 def test_framebuffer_survives_corruption_and_resyncs():
