@@ -711,6 +711,59 @@ def bench_chaos(n_nodes: int = 16, n_blocks: int = 24) -> dict:
             "finality_rejects": rep.finality_rejects}
 
 
+def bench_model_pouw(n_blocks: int = 4) -> dict:
+    """DESIGN §16: real-model PoUW on the CI micro transformer —
+    blocks/s mined (steady state, after the one shared XLA compile),
+    the verifier's replay cost vs the miner's mine cost (verify *is*
+    re-execution plus digest checks, so the ratio sits near 1 — the
+    price of verify-as-state-sync, unlike SAT's certificate asymmetry)
+    and the canonical gather-then-hash params digest overhead per
+    block."""
+    from repro.chain.workload import BlockContext
+    from repro.chain.workloads import ModelTrainingWorkload
+    from repro.chain.workloads.model_train import MICRO_KWARGS
+    from repro.train.steps import params_digest
+
+    miner = ModelTrainingWorkload(**MICRO_KWARGS)
+    verifier = ModelTrainingWorkload(**MICRO_KWARGS)
+
+    def ctx(h: int) -> BlockContext:
+        return BlockContext(height=h, prev_hash="")
+
+    # block 0 pays the (process-shared) step compile for both chairs
+    warm = miner.mine(miner.prepare(ctx(0)))
+    if not verifier.verify(warm):
+        raise RuntimeError("verifier rejected an honest warmup block")
+
+    t0 = time.perf_counter()
+    payloads = [miner.mine(miner.prepare(ctx(1 + i)))
+                for i in range(n_blocks)]
+    dt_mine = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for p in payloads:
+        if not verifier.verify(p):
+            raise RuntimeError("verifier rejected an honest block")
+    dt_verify = time.perf_counter() - t0
+    if verifier.state_digest() != miner.state_digest():
+        raise RuntimeError("miner/verifier params digests diverged")
+
+    us_mine = dt_mine / n_blocks * 1e6
+    us_verify = dt_verify / n_blocks * 1e6
+    us_digest = _timeit(lambda: params_digest(miner._state))
+    row("model_pouw.mine", us_mine,
+        f"blocks_per_s={n_blocks / dt_mine:.1f} "
+        f"microsteps={MICRO_KWARGS['block_microsteps']}")
+    row("model_pouw.verify", us_verify,
+        f"verify_vs_remine={us_verify / us_mine:.2f}x")
+    row("model_pouw.digest", us_digest,
+        f"pct_of_mine={us_digest / us_mine * 100:.1f}%")
+    return {"n_blocks": n_blocks,
+            "blocks_per_s": n_blocks / dt_mine,
+            "us_mine": us_mine, "us_verify": us_verify,
+            "verify_vs_remine": us_verify / us_mine,
+            "us_digest": us_digest}
+
+
 def bench_wire_relay(n_peers: int = 4, n_blocks: int = 6) -> dict:
     """DESIGN §13: compact vs full-body relay over the deterministic
     loopback wire.  Same peers, same seed, same chain — the only
@@ -909,7 +962,8 @@ def check_smoke_regression(measured: dict) -> int:
     failures = 0
     for key in ("merkle_commit_us_device", "verify_chain_batched_us",
                 "workload_suite_dock_verify_us", "wire_relay_us",
-                "mesh_discovery_us", "mesh_chaos_us"):
+                "mesh_discovery_us", "mesh_chaos_us",
+                "model_pouw_verify_us"):
         base, got = baseline.get(key), measured.get(key)
         if base is None or got is None:
             continue
@@ -939,6 +993,7 @@ def _smoke_scale_metrics(train_section: bool = True,
         wire = bench_wire_relay()
         mesh = bench_mesh_discovery()
         chaos = bench_mesh_chaos()
+        model = bench_model_pouw()
     finally:
         _QUIET = False
     return {
@@ -957,6 +1012,10 @@ def _smoke_scale_metrics(train_section: bool = True,
         "mesh_bytes_on_wire": mesh["mesh_bytes_on_wire"],
         "mesh_chaos_us": chaos["mesh_chaos_us"],
         "mesh_chaos_settle_rounds": chaos["mesh_chaos_settle_rounds"],
+        "model_pouw_verify_us": model["us_verify"],
+        "model_pouw_blocks_per_s": model["blocks_per_s"],
+        "model_pouw_verify_vs_remine": model["verify_vs_remine"],
+        "model_pouw_digest_us": model["us_digest"],
     }
 
 
@@ -993,6 +1052,7 @@ def main(smoke: bool = False) -> None:
     payload["wire_relay"] = bench_wire_relay()
     payload["mesh_discovery"] = bench_mesh_discovery()
     payload["mesh_chaos"] = bench_mesh_chaos()
+    payload["model_pouw"] = bench_model_pouw()
     payload["smoke_baseline"] = _smoke_scale_metrics(train_section=False,
                                                      quiet=True)
     bench_sim_gossip()

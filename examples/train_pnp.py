@@ -1,5 +1,5 @@
 """End-to-end PoUW training through the chain API (deliverable (b)):
-train the ~30M-param pnpcoin-demo LM for a few hundred blocks on CPU —
+train the ~2M-param pnpcoin-demo LM for a few hundred blocks on CPU —
 each block one training step mined by a ``Node`` carrying a
 ``TrainingWorkload``, state digests chained into the ledger, miners
 credited.

@@ -973,28 +973,31 @@ def heterogeneous_scenario(n_honest: int = 3, seed: int = 0, *,
                            classic_arg_bits: int = 6) -> Sim:
     """The workload-catalogue scenario: every node carries the full
     application suite (``repro.chain.workloads.default_suite`` — SAT,
-    GAN inversion, docking — fresh instances per node, same
-    ``suite_seed`` so all nodes agree on the formula family, inverse
-    problem, and data bundle), and the mining schedule interleaves all
-    families plus the classic fallback across nodes.  A
-    ``PayloadCorrupter`` node mines too — its blocks are rejected by
-    workload re-verification and orphaned, and its own chain falls
-    behind until fork choice reorgs it onto the honest one, rolling its
-    *stateful* GAN grid back through the same snapshot machinery
-    training blocks use.  Converges with ``credit_divergence == 0``."""
+    GAN inversion, docking, real-model training — fresh instances per
+    node, same ``suite_seed`` so all nodes agree on the formula family,
+    inverse problem, data bundle, and init weights), and the mining
+    schedule interleaves all families plus the classic fallback across
+    nodes.  A ``PayloadCorrupter`` node mines too — its blocks are
+    rejected by workload re-verification and orphaned, and its own
+    chain falls behind until fork choice reorgs it onto the honest one,
+    rolling its *stateful* GAN grid and model-train state back through
+    the same snapshot machinery training blocks use.  Converges with
+    ``credit_divergence == 0``."""
     from repro.chain.workloads import default_suite
+    from repro.chain.workloads.model_train import MICRO_KWARGS
 
     small = dict(sat={"n_vars": 10, "n_clauses": 40},
                  gan={"grid_bits": 8},
-                 docking={"n_r": 16, "n_p": 16})
+                 docking={"n_r": 16, "n_p": 16},
+                 model_train=dict(MICRO_KWARGS))
     cid = n_honest
     nodes = [Node(node_id=i, classic_arg_bits=classic_arg_bits,
                   workloads=default_suite(seed=suite_seed, **small))
              for i in range(n_honest + 1)]
     sim = Sim(nodes, SimConfig(seed=seed),
               adversaries={cid: PayloadCorrupter()})
-    schedule = ("sat", "gan", "docking", "classic", "sat", "gan",
-                "docking", "sat")
+    schedule = ("sat", "gan", "model_train", "docking", "classic", "sat",
+                "gan", "model_train", "docking", "sat")
     t = 0.5
     for b, family in enumerate(schedule):
         sim.mine_at(t, b % n_honest, family)

@@ -285,6 +285,7 @@ def _enc_payload(w: _W, p: BlockPayload) -> None:
     w.opt(p.train_height, w.i64)
     w.u64(p.n_miners)
     w.opt(p.certificate, w.bstr)
+    w.opt(p.micro_proof, w.arr)
 
 
 def _dec_payload(r: _R, jash_fns: Dict[str, Callable]) -> BlockPayload:
@@ -296,7 +297,7 @@ def _dec_payload(r: _R, jash_fns: Dict[str, Callable]) -> BlockPayload:
         full=r.opt(lambda: _dec_full(r)),
         best_arg=r.opt(r.i64), loss=r.opt(r.f64),
         train_height=r.opt(r.i64), n_miners=r.u64(),
-        certificate=r.opt(r.bstr))
+        certificate=r.opt(r.bstr), micro_proof=r.opt(r.arr))
 
 
 def encode_block(blk: Block) -> bytes:

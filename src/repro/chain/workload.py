@@ -99,7 +99,13 @@ class BlockPayload:
     is one or the other).  ``train_height`` doubles as the generic
     *stateful sequence index* — the position of this block in the
     workload's own state chain (train step for training, refinement
-    round for GAN inversion)."""
+    round for GAN inversion).  ``micro_proof`` is the model-training
+    evidence channel: a ``(block_microsteps, 64) uint8`` array of
+    per-microstep ``(batch_digest, metrics_digest)`` sha256 pairs whose
+    leaves re-derive ``merkle_root`` — a verifier checks the binding
+    cheaply, then replays the microsteps and must reproduce every row
+    bit-exactly (so a divergence is attributed to its exact
+    microstep)."""
     workload: str                      # "full"|"optimal"|"training"|...
     jash_id: str
     merkle_root: str
@@ -117,6 +123,7 @@ class BlockPayload:
     train_height: Optional[int] = None
     n_miners: int = 1
     certificate: Optional[bytes] = None
+    micro_proof: Optional[np.ndarray] = None
 
 
 def certificate_digest(cert: Optional[bytes]) -> str:

@@ -17,6 +17,12 @@ rollback, rewards):
 * ``DockingWorkload`` — the §4 walkthrough, with the data-bundle
   checksum bound into consensus: a peer holding tampered tables
   rejects honest blocks and vice versa.
+* ``ModelTrainingWorkload`` — §1 "Deep Net training" at real model
+  scale: each block runs sharded ``train/steps.py`` microsteps of a
+  ``repro.configs`` transformer on a deterministic
+  ``(seed, height, micro)``-keyed token stream, committing the
+  canonical params digest; verification replays the microbatches on
+  the verifier's own state/mesh (state sync, like training/GAN).
 
 ``default_suite`` builds one fresh instance of each family (every node
 needs its own objects — sharing an instance across nodes voids
@@ -30,6 +36,7 @@ from typing import Dict
 from repro.chain.workload import Workload
 from repro.chain.workloads.docking import DockingBundle, DockingWorkload
 from repro.chain.workloads.gan import GanInversionWorkload
+from repro.chain.workloads.model_train import ModelTrainingWorkload
 from repro.chain.workloads.sat import Cnf3, SatWorkload, random_cnf3
 
 __all__ = [
@@ -37,6 +44,7 @@ __all__ = [
     "DockingBundle",
     "DockingWorkload",
     "GanInversionWorkload",
+    "ModelTrainingWorkload",
     "SatWorkload",
     "WORKLOAD_FAMILIES",
     "default_suite",
@@ -50,6 +58,7 @@ WORKLOAD_FAMILIES = {
     SatWorkload.name: SatWorkload,
     GanInversionWorkload.name: GanInversionWorkload,
     DockingWorkload.name: DockingWorkload,
+    ModelTrainingWorkload.name: ModelTrainingWorkload,
 }
 
 

@@ -1,19 +1,25 @@
-"""pnpcoin-demo — the paper's own end-to-end payload: a ~100M dense LM
-trained for a few hundred steps as proof-of-useful-work (one block per
+"""pnpcoin-demo — the paper's own end-to-end payload: a ~2M-parameter
+dense LM trained as proof-of-useful-work (one block per ``train_height``
 step), per PNPCoin §1 ("finding the next optimum in hyperdimensional
-stochastic gradient descent").  Runs on CPU in the examples.
+stochastic gradient descent").  Deliberately CI-sized: a CPU runner
+mines, verifies, reorgs, and journal-recovers real
+``ModelTrainingWorkload`` blocks on it in seconds (the
+``examples/chain_train_model.py`` acceptance loop), while keeping every
+architectural feature of the bigger configs — GQA attention, qk-norm,
+tied embeddings — so the chain exercises the real model stack, not a
+stub.
 """
 from repro.configs.base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     name="pnpcoin-demo",
     family="dense",
-    n_layers=8,
-    d_model=512,
+    n_layers=2,
+    d_model=256,
     n_heads=8,
     n_kv_heads=4,
-    d_ff=1536,
-    vocab_size=8192,
+    d_ff=768,
+    vocab_size=2048,
     qk_norm=True,
     tie_embeddings=True,
     remat=False,

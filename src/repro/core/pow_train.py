@@ -34,7 +34,8 @@ from repro.core.ledger import Ledger, merkle_root
 from repro.core.rewards import CreditBook, reward_full, reward_optimal
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.train.steps import (TrainHparams, TrainState, make_eval_step,
-                               make_train_state, make_train_step)
+                               make_train_state, make_train_step,
+                               params_digest)
 
 
 @dataclasses.dataclass
@@ -56,16 +57,16 @@ def _metrics_digest(metrics: Dict[str, Any], step: int) -> str:
 
 
 def _light_state_digest(state: TrainState) -> str:
-    """Cheap per-block digest: hash of a deterministic projection of the
-    params (full checkpoint digests are chained at checkpoint blocks)."""
-    h = hashlib.sha256()
-    for leaf in jax.tree.leaves(state.params):
-        arr = np.asarray(leaf.astype(jnp.float32) if hasattr(leaf, "astype")
-                         else leaf)
-        h.update(np.ascontiguousarray(arr.reshape(-1)[:64]).tobytes())
-        h.update(np.float64(float(jnp.sum(leaf.astype(jnp.float32))))
-                 .tobytes())
-    return h.hexdigest()
+    """Per-block state digest: sha256 of the canonical params bytes
+    (``train.steps.params_digest`` — gathered, little-endian,
+    dtype+shape framed).  The old projection digest hashed the first 64
+    elements + a float sum per leaf straight out of device memory,
+    which tied the commitment to device layout and silently collided
+    for params differing outside the projection; the canonical digest
+    is sharding-invariant and collision-resistant over the full
+    weights, and is the same helper ``ModelTrainingWorkload`` commits
+    on-chain."""
+    return params_digest(state)
 
 
 class PoUWTrainer:

@@ -40,11 +40,27 @@ class SyntheticTokenPipeline:
 
     def batch(self, step: int) -> Dict[str, Any]:
         """Global batch for ``step`` (pure function of seed+step)."""
+        return self._batch_from_key(self._key(step))
+
+    def microbatch(self, height: int, micro: int) -> Dict[str, Any]:
+        """The chain-train stream: microbatch ``micro`` of block
+        ``height`` — a pure function of ``(seed, height, micro)``, so
+        any fresh pipeline instance constructed from the same meta
+        reproduces the exact bytes (the verification-soundness
+        precondition for ``ModelTrainingWorkload``: a verifier
+        re-derives the miner's batches from the chain position alone).
+        Keyed by a second ``fold_in`` so block ``h`` microstep ``m``
+        never aliases the plain ``batch(step)`` stream."""
+        if micro < 0:
+            raise ValueError(f"micro index must be >= 0, got {micro}")
+        return self._batch_from_key(
+            jax.random.fold_in(self._key(height), micro))
+
+    def _batch_from_key(self, key) -> Dict[str, Any]:
         cfg, shape = self.cfg, self.shape
         B = shape.global_batch
         S = shape.seq_len if shape.kind == "train" else (
             shape.seq_len if shape.kind == "prefill" else 1)
-        key = self._key(step)
         k1, k2, k3 = jax.random.split(key, 3)
         v = cfg.vocab_size
         # Markov-ish stream: next token = (a*tok + drift) % v with noise

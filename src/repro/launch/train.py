@@ -5,7 +5,7 @@ one (or ``--microsteps``) train step(s), the state digest is chained into
 the ledger, miners are credited, and periodic checkpoint blocks write a
 full ``.npz`` whose SHA-256 digest anchors the chain.
 
-CPU-sized by default (pnpcoin-demo, ~30M params); any assigned arch can
+CPU-sized by default (pnpcoin-demo, ~2M params); any assigned arch can
 be selected with ``--arch`` (use reduced=1 to smoke-test a family).
 
   PYTHONPATH=src python -m repro.launch.train --blocks 200 --mode full

@@ -103,6 +103,31 @@ def constrain(x: jax.Array, *names) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# gather-then-hash
+# ---------------------------------------------------------------------------
+
+
+def gather_tree(tree: Any) -> Any:
+    """Fetch every leaf to host memory as a plain ``np.ndarray``,
+    reassembling sharded ``jax.Array``s from their addressable shards.
+
+    This is the *gather* half of the gather-then-hash digest contract:
+    any digest over training state must hash the globally-assembled
+    values, never per-device buffers, so the result is invariant to the
+    mesh shape and device layout the producer happened to run on (a
+    1-device CPU node and an 8-way FSDP node must commit bit-identical
+    ``state_digest``s for the same params)."""
+    import numpy as _np
+
+    def gather(leaf):
+        if isinstance(leaf, jax.Array):
+            return _np.asarray(jax.device_get(leaf))
+        return _np.asarray(leaf)
+
+    return jax.tree.map(gather, tree)
+
+
+# ---------------------------------------------------------------------------
 # parameter partitioning
 # ---------------------------------------------------------------------------
 

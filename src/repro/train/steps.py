@@ -13,20 +13,78 @@ under pjit on the production mesh.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.models.model import adapt_for_shape, build_model, cache_len_for
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.schedule import cosine_schedule
+from repro.sharding.partition import gather_tree
 
 
 class TrainState(NamedTuple):
     params: Any
     opt: AdamWState
+
+
+# ---------------------------------------------------------------------------
+# digest-stable state canonicalization
+# ---------------------------------------------------------------------------
+
+
+def _canonical_leaf(arr: np.ndarray) -> np.ndarray:
+    """Little-endian, C-contiguous view of ``arr`` — the only byte order
+    a digest may ever see, regardless of host endianness or the device
+    layout the array came back from."""
+    if arr.dtype.str.startswith(">"):
+        arr = arr.astype(arr.dtype.newbyteorder("<"))
+    return np.ascontiguousarray(arr)
+
+
+def canonical_tree_bytes(tree: Any):
+    """Yield the canonical byte framing of a pytree, leaf by leaf:
+    ``path | dtype | ndim | shape | little-endian C-order data``.
+
+    The path prefix keeps structurally-different trees with identical
+    flattened values apart; the dtype+shape frame keeps reinterpreted
+    buffers apart (``float32[4]`` never collides with ``uint8[16]``).
+    Leaves are gathered to host first (``sharding.partition.gather_tree``),
+    so the stream is sharding- and layout-invariant."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(gather_tree(tree))
+    for path, leaf in flat:
+        arr = _canonical_leaf(np.asarray(leaf))
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        yield pstr.encode() + b"\x00" + arr.dtype.str.encode() + b"\x00"
+        yield np.int64(arr.ndim).tobytes()
+        yield np.asarray(arr.shape, np.int64).tobytes()
+        yield arr.tobytes(order="C")
+
+
+def tree_digest(tree: Any) -> str:
+    """sha256 hex digest of ``canonical_tree_bytes(tree)`` — the generic
+    bit-exact commitment for any value pytree (params, batches, metric
+    stacks).  Deterministic across processes, platforms, and shardings."""
+    h = hashlib.sha256()
+    for chunk in canonical_tree_bytes(tree):
+        h.update(chunk)
+    return h.hexdigest()
+
+
+def params_digest(state_or_params: Any) -> str:
+    """The chain's ``state_digest`` for model training: sha256 of the
+    canonical params bytes.  Accepts a ``TrainState`` (digests its
+    ``params``) or a bare params pytree.  Shared by ``PoUWTrainer`` and
+    ``ModelTrainingWorkload`` so both commit the same digest for the
+    same weights."""
+    params = (state_or_params.params
+              if isinstance(state_or_params, TrainState) else state_or_params)
+    return tree_digest(params)
 
 
 @dataclasses.dataclass(frozen=True)
